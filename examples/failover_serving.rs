@@ -1,0 +1,40 @@
+//! End-to-end serving driver (the mandated full-system validation): serve
+//! a poisson request stream through the distributed ResNet-32 pipeline,
+//! crash a node mid-run, and report throughput/latency before vs after
+//! CONTINUER's failover. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example failover_serving -- [--model m]
+//!       [--requests n] [--rate rps] [--fail-node k] [--fail-at ms]`
+
+use anyhow::Result;
+
+use continuer::config::Config;
+use continuer::exper::e2e::{print_report, run_e2e, E2eParams};
+use continuer::exper::{default_artifacts_dir, require_artifacts, ExpContext};
+use continuer::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect());
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = default_artifacts_dir();
+    require_artifacts(&cfg.artifacts_dir)?;
+    let ctx = ExpContext::open(cfg)?;
+
+    let model = args.get_or("model", "resnet32").to_string();
+    let meta = ctx.store.model(&model)?;
+    let default_fail = meta
+        .skippable_nodes
+        .get(meta.skippable_nodes.len() / 2)
+        .copied()
+        .unwrap_or(meta.num_nodes / 2);
+    let p = E2eParams {
+        model,
+        n_requests: args.get_usize("requests", 60)?,
+        rate_rps: args.get_f64("rate", 6.0)?,
+        fail_node: args.get_usize("fail-node", default_fail)?,
+        fail_at_ms: args.get_f64("fail-at", 4000.0)?,
+    };
+    let report = run_e2e(&ctx, &p)?;
+    print_report(&p, &report);
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Platform profiling walk-through: run the layer micro-benchmark sweep,
+//! fit the per-layer-type latency models for both platforms, and compare
+//! predicted vs measured end-to-end latency of the healthy pipeline — the
+//! profiler phase of the paper in one program.
+//!
+//! Run: `cargo run --release --example profile_platform -- [--model m]`
+
+use anyhow::Result;
+
+use continuer::cluster::sim::{healthy_path, EdgeCluster};
+use continuer::config::{Config, Platform};
+use continuer::coordinator::profiler::fit_platform;
+use continuer::dnn::variants::Technique;
+use continuer::exper::table2::layer_samples;
+use continuer::exper::{default_artifacts_dir, require_artifacts, ExpContext};
+use continuer::predict::GbdtParams;
+use continuer::util::bench::{f, Table};
+use continuer::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect());
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = default_artifacts_dir();
+    require_artifacts(&cfg.artifacts_dir)?;
+    let ctx = ExpContext::open(cfg)?;
+    let model = args.get_or("model", "resnet32").to_string();
+    let meta = ctx.store.model(&model)?;
+
+    // 1. micro sweep (cached in artifacts/results after the first run)
+    let samples = layer_samples(&ctx)?;
+    println!("profiled {} layer configurations", samples.len());
+
+    // 2. fit per-platform models
+    let params = GbdtParams::default();
+    let mut t = Table::new(
+        "latency predictor quality per platform",
+        &["platform", "layer kinds", "mean R2"],
+    );
+    let mut fitted = Vec::new();
+    for platform in [Platform::Host, Platform::platform2()] {
+        let fp = fit_platform(&samples, platform, &params, ctx.config.seed)?;
+        let mean_r2 =
+            fp.quality.iter().map(|q| q.r2).sum::<f64>() / fp.quality.len().max(1) as f64;
+        t.row(&[
+            fp.platform.name(),
+            fp.quality.len().to_string(),
+            f(mean_r2, 3),
+        ]);
+        fitted.push(fp);
+    }
+    t.print();
+
+    // 3. predicted vs measured end-to-end (healthy pipeline, platform 1)
+    let cluster = EdgeCluster::new(&ctx.engine, &ctx.store, meta, ctx.config.link.clone(), 0);
+    let (images, _) = ctx.store.test_set()?;
+    let sample = images.slice0(0, 1)?;
+    let (comp, net) = cluster.measure_latency_split(Technique::Repartition, None, &sample, 5)?;
+    let predicted: f64 = meta
+        .nodes
+        .iter()
+        .map(|n| fitted[0].model.predict_path(n.layers.iter()))
+        .sum::<f64>()
+        + cluster.expected_network_ms(&healthy_path(meta));
+    println!(
+        "\n{model} healthy pipeline: measured {:.2} ms ({comp:.2} compute + {net:.2} network), predicted {:.2} ms ({:+.1}% error)",
+        comp + net,
+        predicted,
+        100.0 * (predicted - comp - net) / (comp + net)
+    );
+    Ok(())
+}

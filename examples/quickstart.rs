@@ -1,0 +1,110 @@
+//! Quickstart: load the AOT artifacts, deploy ResNet-32 across the
+//! simulated edge cluster, run one inference through the distributed
+//! pipeline, then fail a node and watch CONTINUER pick a recovery
+//! technique.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts`)
+
+use anyhow::Result;
+
+use continuer::cluster::sim::EdgeCluster;
+use continuer::config::Config;
+use continuer::coordinator::estimator::Estimator;
+use continuer::coordinator::failover::Failover;
+use continuer::coordinator::profiler::DowntimeTable;
+use continuer::dnn::variants::Technique;
+use continuer::exper::{default_artifacts_dir, require_artifacts};
+use continuer::predict::{AccuracyModel, GbdtParams, LatencyModel, LayerSample};
+use continuer::runtime::{ArtifactStore, Engine};
+
+fn main() -> Result<()> {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = default_artifacts_dir();
+    require_artifacts(&cfg.artifacts_dir)?;
+
+    // --- load the runtime + artifacts (python is NOT involved) ----------
+    let engine = Engine::cpu()?;
+    let store = ArtifactStore::open(&cfg.artifacts_dir)?;
+    let meta = store.model("resnet32")?;
+    println!(
+        "loaded {}: {} nodes, {} exits, full accuracy {:.1}%",
+        meta.name,
+        meta.num_nodes,
+        meta.exits.len(),
+        meta.final_accuracy.repartition * 100.0
+    );
+
+    // --- deploy on the simulated edge cluster ---------------------------
+    let mut cluster = EdgeCluster::new(&engine, &store, meta, cfg.link.clone(), cfg.seed);
+    let (images, labels) = store.test_set()?;
+    let x = images.slice0(0, 1)?;
+
+    let (logits, timing) = cluster.execute_technique(Technique::Repartition, None, &x)?;
+    println!(
+        "healthy inference: predicted class {} (label {}), {:.2} ms compute + {:.2} ms network",
+        logits.argmax_rows()[0],
+        labels[0],
+        timing.total_compute_ms(),
+        timing.network_ms
+    );
+
+    // --- fail a node and let CONTINUER decide ---------------------------
+    let failed = 7usize;
+    cluster.fail(failed);
+    println!("\n*** node {failed} failed ***");
+
+    // Fit the two prediction models (normally done once, offline). A tiny
+    // analytic latency sample set keeps the quickstart fast; see
+    // `continuer exp table2` for the real profiling sweep.
+    let params = GbdtParams::default();
+    let samples: Vec<LayerSample> = meta
+        .all_layers()
+        .iter()
+        .map(|l| LayerSample {
+            spec: (*l).clone(),
+            latency_ms: 1e-6 * l.flops() as f64 + 0.02,
+        })
+        .collect();
+    let (lat_model, _) = LatencyModel::fit(&samples, &params, 0)?;
+    let metas: Vec<_> = store.models.values().collect();
+    let (acc_model, _) = AccuracyModel::fit(&metas, &params, 0)?;
+    let link = continuer::cluster::link::LinkModel::new(cfg.link.clone());
+    let downtime = DowntimeTable::new();
+    let est = Estimator::new(
+        meta,
+        &lat_model,
+        &acc_model,
+        &link,
+        &downtime,
+        cfg.reinstate_ms,
+    );
+
+    let mut failover = Failover::new(cfg.objectives.clone());
+    let report = failover.on_failure(&est, failed)?;
+    for c in &report.candidates {
+        println!(
+            "  candidate {:20} acc {:6.2}%  latency {:7.2} ms  downtime {:.2} ms",
+            c.technique.label(),
+            c.accuracy,
+            c.latency_ms,
+            c.downtime_ms
+        );
+    }
+    println!(
+        "CONTINUER chose {} in {:.2} ms",
+        report.decision.chosen.label(),
+        report.downtime_ms()
+    );
+
+    // --- keep serving with the chosen technique -------------------------
+    let (logits, timing) =
+        cluster.execute_technique(report.decision.chosen, Some(failed), &x)?;
+    println!(
+        "degraded inference: predicted class {} (label {}), {:.2} ms total",
+        logits.argmax_rows()[0],
+        labels[0],
+        timing.total_ms()
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Scheduler sweep: shows how the user-defined objective weights change
+//! CONTINUER's choice for the same failure — the paper's central trade-off
+//! (accuracy vs latency vs downtime) made visible.
+//!
+//! Run: `cargo run --release --example scheduler_sweep -- [--model m] [--fail-node k]`
+
+use anyhow::Result;
+
+use continuer::baselines::all_policies;
+use continuer::config::{Config, Objectives};
+use continuer::coordinator::estimator::Estimator;
+use continuer::coordinator::profiler::DowntimeTable;
+use continuer::coordinator::scheduler::select;
+use continuer::exper::table2::layer_samples;
+use continuer::exper::{default_artifacts_dir, require_artifacts, ExpContext};
+use continuer::predict::{AccuracyModel, GbdtParams, LatencyModel};
+use continuer::util::bench::Table;
+use continuer::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1).collect());
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = default_artifacts_dir();
+    require_artifacts(&cfg.artifacts_dir)?;
+    let ctx = ExpContext::open(cfg)?;
+
+    let model = args.get_or("model", "resnet32").to_string();
+    let meta = ctx.store.model(&model)?;
+    let failed = args.get_usize("fail-node", meta.skippable_nodes[meta.skippable_nodes.len() / 2])?;
+
+    let params = GbdtParams::default();
+    let samples = layer_samples(&ctx)?;
+    let (lat_model, _) = LatencyModel::fit(&samples, &params, 0)?;
+    let metas: Vec<_> = ctx.store.models.values().collect();
+    let (acc_model, _) = AccuracyModel::fit(&metas, &params, 0)?;
+    let link = continuer::cluster::link::LinkModel::new(ctx.config.link.clone());
+    let downtime = DowntimeTable::new();
+    let est = Estimator::new(
+        meta,
+        &lat_model,
+        &acc_model,
+        &link,
+        &downtime,
+        ctx.config.reinstate_ms,
+    );
+    let candidates = est.candidate_metrics(failed)?;
+
+    println!("failure of node {failed} on {model}; candidates:");
+    for c in &candidates {
+        println!(
+            "  {:20} acc {:6.2}%  latency {:7.2} ms  downtime {:.2} ms",
+            c.technique.label(),
+            c.accuracy,
+            c.latency_ms,
+            c.downtime_ms
+        );
+    }
+
+    // Sweep characteristic weightings.
+    let mut t = Table::new(
+        "choice vs objective weights (w_acc, w_lat, w_down)",
+        &["weights", "chosen technique"],
+    );
+    for (wa, wl, wd) in [
+        (0.9, 0.05, 0.05),
+        (0.05, 0.9, 0.05),
+        (0.05, 0.05, 0.9),
+        (0.5, 0.3, 0.2),
+        (0.33, 0.33, 0.33),
+        (0.2, 0.6, 0.2),
+        (0.6, 0.2, 0.2),
+    ] {
+        let w = Objectives::new(wa, wl, wd);
+        let d = select(&candidates, &w)?;
+        t.row(&[format!("({wa:.2}, {wl:.2}, {wd:.2})"), d.chosen.label()]);
+    }
+    t.print();
+
+    // Baseline policies for comparison.
+    let mut t = Table::new("baseline policies", &["policy", "chosen technique"]);
+    for p in all_policies(Objectives::default()) {
+        t.row(&[p.name().to_string(), p.decide(&candidates)?.label()]);
+    }
+    t.print();
+    Ok(())
+}

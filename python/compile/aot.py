@@ -1,0 +1,405 @@
+"""AOT compilation: lower every serving artifact to HLO *text* + manifest.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged). Python
+never runs again after this: the rust coordinator loads the HLO text files
+through `HloModuleProto::from_text_file` (xla crate / PJRT CPU) and serves
+from them.
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts produced under artifacts/:
+  manifest.json                 everything rust needs (see schema below)
+  weights_<model>.bin           flat f32 LE weight/state leaves
+  blocks/<model>_n<i>_b<B>.hlo.txt     per-node block, batch B in {1, 32}
+  exits/<model>_e<i>_b<B>.hlo.txt      exit heads
+  micro/<kind>_<j>.hlo.txt             single-layer latency microbenches
+  data/test_x.bin, data/test_y.bin     eval set for rust-side accuracy
+
+Block/exit artifacts take (activation, *weight_leaves) as arguments so the
+HLO text stays small and weights are loaded once from weights_<model>.bin
+(deploy-time weight loading, like a real serving system). Micro artifacts
+bake their (synthetic) weights as constants.
+
+The pallas (interpret=True) kernels are the lowered implementation; before
+export, the pallas and pure-jnp paths are asserted numerically equal on a
+sample batch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dataset, model as model_lib, nn, train
+from .kernels import pallas_kernels, ref
+
+# ---------------------------------------------------------------------------
+# Configuration (env-overridable so CI / quick runs can shrink the budget)
+# ---------------------------------------------------------------------------
+
+EPOCHS = int(os.environ.get("CONTINUER_EPOCHS", "8"))
+TRAIN_N = int(os.environ.get("CONTINUER_TRAIN_N", "1024"))
+TEST_N = int(os.environ.get("CONTINUER_TEST_N", "512"))
+EVAL_N = int(os.environ.get("CONTINUER_EVAL_N", "128"))   # per-epoch evals
+RUST_EVAL_N = int(os.environ.get("CONTINUER_RUST_EVAL_N", "128"))
+BATCH_SIZES = (1, 32)
+SEED = int(os.environ.get("CONTINUER_SEED", "0"))
+MODELS = [m for m in os.environ.get(
+    "CONTINUER_MODELS", "resnet32,mobilenetv2").split(",") if m]
+LR = {"resnet32": 1e-3, "mobilenetv2": 1e-3}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, arg_specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+# ---------------------------------------------------------------------------
+# Block / exit artifact export
+# ---------------------------------------------------------------------------
+
+
+def _leaves(tree):
+    return nn.tree_flatten(tree)
+
+
+def export_unit(out_path: Path, unit, params, state, in_shape, batch):
+    """Lower one NodeBlock/ExitHead to HLO text; weights as arguments.
+
+    Returns the ordered arg manifest: [(name, shape)] excluding the
+    activation (arg 0).
+    """
+    p_leaves = _leaves(params)
+    s_leaves = _leaves(state)
+
+    def fn(act, *args):
+        np_ = len(p_leaves)
+        p = nn.tree_unflatten_like(params, iter(args[:np_]))
+        s = nn.tree_unflatten_like(state, iter(args[np_:]))
+        y, _ = unit.apply(pallas_kernels, p, s, act, train=False)
+        return (y,)
+
+    act_spec = jax.ShapeDtypeStruct((batch,) + tuple(in_shape), jnp.float32)
+    arg_specs = [act_spec] + [
+        jax.ShapeDtypeStruct(np.asarray(v).shape, jnp.float32)
+        for _, v in p_leaves + s_leaves
+    ]
+    text = lower_fn(fn, arg_specs)
+    out_path.write_text(text)
+    return [(f"p:{k}", list(np.asarray(v).shape)) for k, v in p_leaves] + \
+        [(f"s:{k}", list(np.asarray(v).shape)) for k, v in s_leaves]
+
+
+def pack_weights(units_params_state) -> tuple[np.ndarray, dict]:
+    """Flatten all (params, state) leaf arrays of all units into one f32
+    buffer; return (buffer, {unit_key: [(name, shape, offset_floats)]})."""
+    chunks, index = [], {}
+    off = 0
+    for key, (params, state) in units_params_state.items():
+        entries = []
+        for prefix, tree in (("p", params), ("s", state)):
+            for name, v in _leaves(tree):
+                arr = np.asarray(v, dtype=np.float32).ravel()
+                entries.append({"name": f"{prefix}:{name}",
+                                "shape": list(np.asarray(v).shape),
+                                "offset": off})
+                chunks.append(arr)
+                off += arr.size
+        index[key] = entries
+    buf = np.concatenate(chunks) if chunks else np.zeros(0, np.float32)
+    return buf, index
+
+
+# ---------------------------------------------------------------------------
+# Layer microbenches (latency-predictor training data, paper Table I)
+# ---------------------------------------------------------------------------
+
+
+def micro_configs():
+    """Deterministic hyperparameter grids per layer type.
+
+    Ranges cover everything that appears in the two DNNs (32x32 inputs,
+    8..320 channels) so the latency model interpolates rather than
+    extrapolates.
+    """
+    cfgs = []
+    hws = [2, 4, 8, 16, 32]
+    chans = [8, 16, 32, 64, 96, 128, 192]
+
+    def add(kind, **kw):
+        cfgs.append({"kind": kind, **kw})
+
+    # conv: subsample the full grid deterministically
+    i = 0
+    for h in [4, 8, 16, 32]:
+        for cin in [8, 16, 32, 64]:
+            for cout in [16, 32, 64, 128]:
+                for k in [1, 3]:
+                    for s in [1, 2]:
+                        if (i := i + 1) % 3 != 0:
+                            add("conv", input_h=h, input_w=h, input_c=cin,
+                                kernel=k, stride=s, filters=cout)
+    for h in [4, 8, 16, 32]:
+        for c in [8, 16, 48, 96, 192]:
+            for s in [1, 2]:
+                add("depthwise_conv", input_h=h, input_w=h, input_c=c,
+                    kernel=3, stride=s, filters=c)
+    for kind in ["batchnorm", "relu", "add", "dropout"]:
+        for h in hws:
+            for c in chans:
+                add(kind, input_h=h, input_w=h, input_c=c)
+    for din in [16, 32, 64, 128, 256, 512, 1024, 2048]:
+        for dout in [10, 32, 64, 128]:
+            add("dense", input_h=1, input_w=1, input_c=din, filters=dout)
+    for kind in ["global_avg_pool", "global_max_pool"]:
+        for h in hws:
+            for c in [8, 16, 32, 64, 96, 192]:
+                add(kind, input_h=h, input_w=h, input_c=c)
+    for h in [4, 8, 16, 32]:
+        for c in [8, 16, 32, 64, 96, 192]:
+            add("max_pool", input_h=h, input_w=h, input_c=c, kernel=2,
+                stride=2)
+    return cfgs
+
+
+def micro_fn(cfg, rng):
+    """Build (fn, arg_specs) for one micro config (weights baked)."""
+    kind = cfg["kind"]
+    h, w, c = cfg["input_h"], cfg["input_w"], cfg["input_c"]
+    B = 1
+    if kind == "dense":
+        x_spec = jax.ShapeDtypeStruct((B, c), jnp.float32)
+    else:
+        x_spec = jax.ShapeDtypeStruct((B, h, w, c), jnp.float32)
+    pk = pallas_kernels
+    if kind == "conv":
+        wgt = jnp.asarray(rng.standard_normal(
+            (cfg["kernel"], cfg["kernel"], c, cfg["filters"])) .astype(np.float32))
+        return (lambda x: (pk.conv2d(x, wgt, stride=cfg["stride"]),), [x_spec])
+    if kind == "depthwise_conv":
+        wgt = jnp.asarray(rng.standard_normal(
+            (cfg["kernel"], cfg["kernel"], c)).astype(np.float32))
+        return (lambda x: (pk.depthwise_conv2d(x, wgt, stride=cfg["stride"]),),
+                [x_spec])
+    if kind == "dense":
+        wgt = jnp.asarray(rng.standard_normal(
+            (c, cfg["filters"])).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((cfg["filters"],)).astype(np.float32))
+        return (lambda x: (pk.dense(x, wgt, b),), [x_spec])
+    if kind == "batchnorm":
+        g, be, m, v = [jnp.asarray(rng.standard_normal((c,)).astype(np.float32))
+                       for _ in range(4)]
+        v = jnp.abs(v) + 0.5
+        return (lambda x: (pk.batchnorm(x, g, be, m, v),), [x_spec])
+    if kind == "relu":
+        return (lambda x: (pk.relu(x),), [x_spec])
+    if kind == "dropout":
+        # inference-mode dropout == identity copy; profile it as such
+        return (lambda x: (pk.add(x, jnp.zeros((), jnp.float32) * x),), [x_spec])
+    if kind == "add":
+        return (lambda x, y: (pk.add(x, y),), [x_spec, x_spec])
+    if kind == "global_avg_pool":
+        return (lambda x: (pk.global_avg_pool(x),), [x_spec])
+    if kind == "global_max_pool":
+        return (lambda x: (pk.global_max_pool(x),), [x_spec])
+    if kind == "max_pool":
+        return (lambda x: (pk.max_pool(x, cfg["kernel"], cfg["stride"]),),
+                [x_spec])
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Verification: pallas path == ref path on real weights
+# ---------------------------------------------------------------------------
+
+
+def verify_model(m, params, state, x, tol=5e-4):
+    """Compose per-node pallas forwards; must match the ref full forward."""
+    act = x
+    for node in m.nodes:
+        key = str(node.index)
+        act, _ = node.apply(pallas_kernels, params["nodes"][key],
+                            state["nodes"][key], act, train=False)
+    y_ref, _ = m.forward_full(ref, params, state, x)
+    err = float(jnp.max(jnp.abs(act - y_ref)))
+    assert err < tol, f"{m.name}: pallas/ref mismatch {err}"
+    return err
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--skip-micro", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out).resolve()
+    for sub in ["blocks", "exits", "micro", "data", "weights"]:
+        (out / sub).mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(out / ".jax_cache"))
+
+    t_start = time.time()
+    (x_tr, y_tr), (x_te, y_te) = dataset.splits(TRAIN_N, TEST_N, seed=SEED)
+    x_ev, y_ev = x_te[:EVAL_N], y_te[:EVAL_N]
+
+    # Merge into an existing manifest so partial rebuilds (e.g.
+    # CONTINUER_MODELS=mobilenetv2 or --skip-micro) keep earlier entries.
+    manifest_path = out / "manifest.json"
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+    else:
+        manifest = {"models": {}, "micro": []}
+    manifest.update({
+        "seed": SEED,
+        "epochs": EPOCHS,
+        "train_n": TRAIN_N,
+        "test_n": TEST_N,
+        "eval_n": EVAL_N,
+        "rust_eval_n": RUST_EVAL_N,
+        "batch_sizes": list(BATCH_SIZES),
+        "num_classes": dataset.NUM_CLASSES,
+    })
+    manifest.setdefault("models", {})
+    manifest.setdefault("micro", [])
+
+    # ---- eval data for rust ------------------------------------------------
+    x_rust = np.ascontiguousarray(x_te[:RUST_EVAL_N], dtype=np.float32)
+    y_rust = np.ascontiguousarray(y_te[:RUST_EVAL_N], dtype=np.int32)
+    (out / "data" / "test_x.bin").write_bytes(x_rust.tobytes())
+    (out / "data" / "test_y.bin").write_bytes(y_rust.tobytes())
+
+    for name in MODELS:
+        print(f"=== {name} ===", flush=True)
+        m = model_lib.build(name)
+        wpath = out / "weights" / f"{name}.npz"
+        hpath = out / "weights" / f"{name}_history.json"
+        if wpath.exists() and hpath.exists():
+            print(f"loading cached weights {wpath}", flush=True)
+            params, state = train.load_weights(wpath, m, seed=SEED)
+            history = json.loads(hpath.read_text())
+        else:
+            params, state, history = train.train_model(
+                m, (x_tr, y_tr), (x_ev, y_ev), epochs=EPOCHS, lr=LR[name],
+                seed=SEED)
+            train.save_weights(wpath, params, state)
+            hpath.write_text(json.dumps(history))
+
+        # final full-test variant accuracies
+        eval_exits, skip_fns = train.make_eval_fns(m)
+        final_acc = train.variant_accuracies(
+            m, nn.tree_map(jnp.asarray, params), nn.tree_map(jnp.asarray, state),
+            jnp.asarray(x_te), jnp.asarray(y_te), eval_exits, skip_fns)
+        print(f"{name} final acc: full={final_acc['repartition']:.4f}",
+              flush=True)
+
+        # verify pallas == ref before export
+        err = verify_model(m, params, state, jnp.asarray(x_te[:8]))
+        print(f"{name} pallas-vs-ref maxerr={err:.2e}", flush=True)
+
+        # pack weights
+        units = {}
+        for node in m.nodes:
+            key = str(node.index)
+            units[f"n{node.index}"] = (params["nodes"][key],
+                                       state["nodes"][key])
+        for e in m.exits:
+            key = str(e.after_node)
+            units[f"e{e.after_node}"] = (params["exits"][key],
+                                         state["exits"][key])
+        buf, windex = pack_weights(units)
+        (out / f"weights_{name}.bin").write_bytes(buf.tobytes())
+
+        # export node/exit HLO artifacts
+        shapes = m.boundary_shapes()
+        blocks_info = {}
+        for node in m.nodes:
+            key = str(node.index)
+            in_shape = shapes[node.index]
+            arts = {}
+            for B in BATCH_SIZES:
+                p = out / "blocks" / f"{name}_n{node.index}_b{B}.hlo.txt"
+                export_unit(p, node, params["nodes"][key],
+                            state["nodes"][key], in_shape, B)
+                arts[str(B)] = str(p.relative_to(out))
+            _, out_shape = node.specs(in_shape)
+            blocks_info[str(node.index)] = {
+                "in_shape": list(in_shape),
+                "out_shape": list(out_shape),
+                "skippable": node.skippable,
+                "artifacts": arts,
+                "weights": windex[f"n{node.index}"],
+            }
+            print(f"  exported node {node.index}", flush=True)
+        exits_info = {}
+        for e in m.exits:
+            key = str(e.after_node)
+            in_shape = shapes[e.after_node + 1]
+            arts = {}
+            for B in BATCH_SIZES:
+                p = out / "exits" / f"{name}_e{e.after_node}_b{B}.hlo.txt"
+                export_unit(p, e, params["exits"][key], state["exits"][key],
+                            in_shape, B)
+                arts[str(B)] = str(p.relative_to(out))
+            exits_info[str(e.after_node)] = {
+                "in_shape": list(in_shape),
+                "artifacts": arts,
+                "weights": windex[f"e{e.after_node}"],
+            }
+            print(f"  exported exit {e.after_node}", flush=True)
+
+        manifest["models"][name] = {
+            "nodes": blocks_info,
+            "exits": exits_info,
+            "num_nodes": len(m.nodes),
+            "skippable_nodes": m.skippable_nodes(),
+            "exit_nodes": m.exit_nodes(),
+            "node_layers": {str(k): v for k, v in m.node_specs().items()},
+            "exit_layers": {str(k): v for k, v in m.exit_specs().items()},
+            "weights_file": f"weights_{name}.bin",
+            "final_accuracy": final_acc,
+            "history": history,
+            "pallas_ref_maxerr": err,
+        }
+
+    # ---- layer microbenches ------------------------------------------------
+    if not args.skip_micro:
+        rng = np.random.Generator(np.random.PCG64(SEED + 77))
+        cfgs = micro_configs()
+        print(f"exporting {len(cfgs)} micro artifacts", flush=True)
+        manifest["micro"] = []
+        for j, cfg in enumerate(cfgs):
+            fn, specs = micro_fn(cfg, rng)
+            p = out / "micro" / f"{cfg['kind']}_{j}.hlo.txt"
+            p.write_text(lower_fn(fn, specs))
+            manifest["micro"].append({**cfg, "artifact": str(p.relative_to(out))})
+            if (j + 1) % 50 == 0:
+                print(f"  micro {j + 1}/{len(cfgs)}", flush=True)
+
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    # content hash over inputs for make-level no-op detection
+    print(f"AOT done in {time.time() - t_start:.0f}s -> {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""SynthCIFAR: deterministic procedurally-generated CIFAR-10 substitute.
+
+The paper trains ResNet-32 / MobileNetV2 on CIFAR-10. Downloading CIFAR-10
+is not possible in this environment, so we generate a 10-class 32x32x3
+dataset whose classes are separable by *learned convolutional features* but
+not by trivial statistics:
+
+  class k = oriented grating (angle k*18 deg, class-specific frequency)
+          + class-colored Gaussian blob at a random position
+          + per-image random phase/position/contrast + Gaussian noise.
+
+A small CNN reaches high accuracy; shallow exits see only coarse features
+and lose accuracy, which preserves the early-exit accuracy-vs-depth
+trade-off the CONTINUER scheduler relies on (DESIGN.md §1.1).
+
+Everything is a pure function of (seed, n) via numpy's PCG64 so the python
+and rust sides can agree on the exact bytes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMAGE_SHAPE = (32, 32, 3)
+
+# Class palettes for the blob (RGB in [0,1]) - spread over the color cube.
+_PALETTE = np.array(
+    [
+        [0.9, 0.1, 0.1],
+        [0.1, 0.9, 0.1],
+        [0.1, 0.1, 0.9],
+        [0.9, 0.9, 0.1],
+        [0.9, 0.1, 0.9],
+        [0.1, 0.9, 0.9],
+        [0.8, 0.5, 0.2],
+        [0.2, 0.5, 0.8],
+        [0.6, 0.6, 0.6],
+        [0.3, 0.8, 0.5],
+    ],
+    dtype=np.float32,
+)
+
+
+def synth_cifar(n: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` images. Returns (images f32 [n,32,32,3], labels i32 [n])."""
+    rng = np.random.Generator(np.random.PCG64(seed))
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    h, w, _ = IMAGE_SHAPE
+    yy, xx = np.meshgrid(np.arange(h, dtype=np.float32),
+                         np.arange(w, dtype=np.float32), indexing="ij")
+    images = np.empty((n,) + IMAGE_SHAPE, dtype=np.float32)
+    for i in range(n):
+        k = int(labels[i])
+        angle = k * np.pi / NUM_CLASSES + rng.normal(0, 0.06)
+        freq = 0.28 + 0.05 * (k % 5) + rng.normal(0, 0.01)
+        phase = rng.uniform(0, 2 * np.pi)
+        contrast = rng.uniform(0.6, 1.0)
+        grating = 0.5 + 0.5 * contrast * np.sin(
+            freq * (np.cos(angle) * xx + np.sin(angle) * yy) * 2 * np.pi / 8.0
+            + phase
+        )
+        cx, cy = rng.uniform(8, 24, size=2)
+        sigma = rng.uniform(3.0, 5.0)
+        blob = np.exp(-(((xx - cx) ** 2 + (yy - cy) ** 2) / (2 * sigma**2)))
+        color = _PALETTE[k]
+        img = (
+            0.55 * grating[..., None]
+            + 0.45 * blob[..., None] * color[None, None, :]
+            + rng.normal(0, 0.08, size=IMAGE_SHAPE)
+        )
+        images[i] = np.clip(img, 0.0, 1.0)
+    # Normalize like CIFAR pipelines do (mean/std per channel, fixed consts
+    # so train/test and the rust loader agree).
+    mean = np.array([0.5, 0.5, 0.5], dtype=np.float32)
+    std = np.array([0.25, 0.25, 0.25], dtype=np.float32)
+    images = (images - mean) / std
+    return images, labels
+
+
+def splits(n_train: int, n_test: int, seed: int = 0):
+    """Disjoint train/test sets (different PCG streams)."""
+    x_tr, y_tr = synth_cifar(n_train, seed=seed * 2 + 1)
+    x_te, y_te = synth_cifar(n_test, seed=seed * 2 + 2)
+    return (x_tr, y_tr), (x_te, y_te)

@@ -1,0 +1,15 @@
+"""L1 kernel package.
+
+`pallas_kernels` holds the Pallas implementations (interpret=True); `ref`
+holds the pure-jnp oracle. Both expose the same API so L2 model code can be
+built against either via `get_backend(use_pallas)`.
+"""
+
+from . import pallas_kernels, ref
+
+__all__ = ["pallas_kernels", "ref", "get_backend"]
+
+
+def get_backend(use_pallas: bool):
+    """Return the kernel namespace for model construction."""
+    return pallas_kernels if use_pallas else ref

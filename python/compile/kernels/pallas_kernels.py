@@ -1,0 +1,418 @@
+"""L1: Pallas kernels for the DNN compute hot-spots.
+
+These kernels implement every layer type the CONTINUER DNNs need (paper
+Table I): convolution, depthwise convolution, dense, batch normalisation,
+ReLU / ReLU6, residual add, global average / max pooling and spatial max
+pooling.
+
+Design notes (TPU-shaped, interpret-run):
+  - All kernels are written for the TPU memory model: BlockSpecs express the
+    HBM->VMEM schedule, matmul-bearing kernels (dense, conv-as-matmul) use
+    the canonical MXU tiling (grid over (M, N, K) tiles with the K axis
+    innermost and an accumulator block revisited across the K loop), and
+    elementwise kernels are flat VPU maps.
+  - They are *lowered with interpret=True*: the CPU PJRT plugin cannot run
+    Mosaic custom-calls, so interpret mode is the correctness (and AOT)
+    path. Real-TPU performance is estimated from VMEM footprint + MXU
+    utilisation in EXPERIMENTS.md §Perf.
+  - Convolution is expressed as kh*kw shifted matmuls over the channel
+    dimension (an implicit im2col): for each kernel tap (dh, dw) the
+    spatially-shifted input plane (H_out*W_out, C_in) is multiplied with
+    the tap's weight matrix (C_in, C_out) and accumulated. Each tap is an
+    MXU-friendly matmul; padding is applied by the wrapper so the kernel
+    body only handles VALID convolutions.
+
+Numerical contract: identical (up to float summation order) to the pure-jnp
+oracle in ref.py; pytest sweeps shapes/strides/dtypes and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret mode is mandatory on CPU (see module docstring).
+INTERPRET = True
+
+# MXU-shaped tile defaults. On a real TPU these would stay (128, 128); the
+# wrappers clamp them to the problem size so tiny CIFAR shapes do not pad
+# excessively under interpret mode.
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_axis(x, axis: int, multiple: int):
+    """Zero-pad `axis` of x up to a multiple of `multiple`."""
+    size = x.shape[axis]
+    target = _ceil_div(size, multiple) * multiple
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul — the MXU workhorse shared by dense and convolution.
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid = (M/bm, N/bn, K/bk); K is innermost and sequential.
+
+    The output block index map is constant in K, so o_ref is revisited
+    across the K loop and acts as the VMEM accumulator (standard Pallas
+    matmul idiom).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matmul(x, w, *, tile_m: int = TILE_M, tile_n: int = TILE_N,
+           tile_k: int = TILE_K):
+    """(M, K) @ (K, N) -> (M, N) via the tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = min(tile_m, m), min(tile_n, n), min(tile_k, k)
+    xp = _pad_axis(_pad_axis(x, 0, bm), 1, bk)
+    wp = _pad_axis(_pad_axis(w, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=INTERPRET,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def dense(x, w, b=None):
+    """Fully connected layer: (n, d_in) @ (d_in, d_out) + b."""
+    out = matmul(x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Convolution — kh*kw shifted matmuls (implicit im2col), one image per grid
+# step along the batch axis so the working set fits VMEM.
+# ---------------------------------------------------------------------------
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int,
+                   h_out: int, w_out: int):
+    """x_ref: (1, Hp, Wp, Cin) padded input; w_ref: (kh, kw, Cin, Cout);
+    o_ref: (1, h_out, w_out, Cout). VALID convolution with stride."""
+    x = x_ref[0]
+    acc = jnp.zeros(o_ref.shape[1:], dtype=o_ref.dtype)
+    for dh in range(kh):
+        for dw in range(kw):
+            # Strided spatial window for this kernel tap:
+            # rows dh, dh+s, ..., dh+(h_out-1)*s  (static slice with step).
+            patch = jax.lax.slice(
+                x,
+                (dh, dw, 0),
+                (dh + (h_out - 1) * stride + 1,
+                 dw + (w_out - 1) * stride + 1,
+                 x.shape[2]),
+                (stride, stride, 1),
+            )  # (h_out, w_out, Cin)
+            tap = w_ref[dh, dw]  # (Cin, Cout)
+            acc += jnp.dot(
+                patch.reshape(h_out * w_out, -1),
+                tap,
+                preferred_element_type=o_ref.dtype,
+            ).reshape(h_out, w_out, -1)
+    o_ref[0] = acc
+
+
+def _same_pad(size: int, stride: int, k: int) -> tuple[int, int]:
+    """TF/XLA SAME padding amounts for one spatial dim."""
+    out = _ceil_div(size, stride)
+    pad = max((out - 1) * stride + k - size, 0)
+    return pad // 2, pad - pad // 2
+
+
+def conv2d(x, w, b=None, stride: int = 1, padding: str = "SAME"):
+    """2-D convolution, NHWC x HWIO -> NHWC (Pallas kernel)."""
+    n, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, f"conv2d channel mismatch: {cin} vs {cin2}"
+    if padding == "SAME":
+        (pt, pb), (plft, prgt) = _same_pad(h, stride, kh), _same_pad(wd, stride, kw)
+        xp = jnp.pad(x, ((0, 0), (pt, pb), (plft, prgt), (0, 0)))
+    elif padding == "VALID":
+        xp = x
+    else:  # explicit ((top, bottom), (left, right))
+        (pt, pb), (plft, prgt) = padding
+        xp = jnp.pad(x, ((0, 0), (pt, pb), (plft, prgt), (0, 0)))
+    hp, wp_ = xp.shape[1], xp.shape[2]
+    h_out = (hp - kh) // stride + 1
+    w_out = (wp_ - kw) // stride + 1
+    out = pl.pallas_call(
+        functools.partial(
+            _conv2d_kernel, kh=kh, kw=kw, stride=stride,
+            h_out=h_out, w_out=w_out,
+        ),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp_, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, cout), x.dtype),
+        interpret=INTERPRET,
+    )(xp, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def _depthwise_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int,
+                      h_out: int, w_out: int):
+    """x_ref: (1, Hp, Wp, C); w_ref: (kh, kw, C); o_ref: (1, h_out, w_out, C).
+    Per-channel (VPU, elementwise-multiply) convolution."""
+    x = x_ref[0]
+    acc = jnp.zeros(o_ref.shape[1:], dtype=o_ref.dtype)
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (dh, dw, 0),
+                (dh + (h_out - 1) * stride + 1,
+                 dw + (w_out - 1) * stride + 1,
+                 x.shape[2]),
+                (stride, stride, 1),
+            )
+            acc += patch * w_ref[dh, dw]  # broadcast over (h_out, w_out, C)
+    o_ref[0] = acc
+
+
+def depthwise_conv2d(x, w, b=None, stride: int = 1, padding: str = "SAME"):
+    """Depthwise 2-D convolution, NHWC x (kh, kw, C) -> NHWC (Pallas)."""
+    n, h, wd, c = x.shape
+    kh, kw, c2 = w.shape
+    assert c == c2, f"depthwise channel mismatch: {c} vs {c2}"
+    if padding == "SAME":
+        (pt, pb), (plft, prgt) = _same_pad(h, stride, kh), _same_pad(wd, stride, kw)
+        xp = jnp.pad(x, ((0, 0), (pt, pb), (plft, prgt), (0, 0)))
+    else:
+        xp = x
+    hp, wp_ = xp.shape[1], xp.shape[2]
+    h_out = (hp - kh) // stride + 1
+    w_out = (wp_ - kw) // stride + 1
+    out = pl.pallas_call(
+        functools.partial(
+            _depthwise_kernel, kh=kh, kw=kw, stride=stride,
+            h_out=h_out, w_out=w_out,
+        ),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp_, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h_out, w_out, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x.dtype),
+        interpret=INTERPRET,
+    )(xp, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Elementwise kernels (VPU maps): batchnorm, relu, relu6, residual add.
+# All operate on a flattened (rows, C) view, one batch row-block per grid
+# step.
+# ---------------------------------------------------------------------------
+
+
+def _bn_kernel(x_ref, scale_ref, shift_ref, o_ref):
+    o_ref[...] = x_ref[...] * scale_ref[...] + shift_ref[...]
+
+
+def batchnorm(x, gamma, beta, mean, var, eps: float = 1e-3):
+    """Inference-mode batchnorm over the trailing channel axis (Pallas)."""
+    c = x.shape[-1]
+    inv = gamma * jax.lax.rsqrt(var + eps)
+    shift = beta - mean * inv
+    flat = x.reshape(-1, c)
+    rows = flat.shape[0]
+    br = min(rows, 1024)
+    flat = _pad_axis(flat, 0, br)
+    out = pl.pallas_call(
+        _bn_kernel,
+        grid=(flat.shape[0] // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=INTERPRET,
+    )(flat, inv, shift)
+    return out[:rows].reshape(x.shape)
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+def _relu6_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.clip(x_ref[...], 0.0, 6.0)
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _elementwise1(kernel, x):
+    flat = x.reshape(-1)
+    size = flat.shape[0]
+    bs = min(size, 64 * 1024)
+    flat = _pad_axis(flat, 0, bs)
+    out = pl.pallas_call(
+        kernel,
+        grid=(flat.shape[0] // bs,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=INTERPRET,
+    )(flat)
+    return out[:size].reshape(x.shape)
+
+
+def relu(x):
+    return _elementwise1(_relu_kernel, x)
+
+
+def relu6(x):
+    return _elementwise1(_relu6_kernel, x)
+
+
+def add(x, y):
+    """Residual element-wise addition (Pallas)."""
+    assert x.shape == y.shape, f"add shape mismatch: {x.shape} vs {y.shape}"
+    xf, yf = x.reshape(-1), y.reshape(-1)
+    size = xf.shape[0]
+    bs = min(size, 64 * 1024)
+    xf, yf = _pad_axis(xf, 0, bs), _pad_axis(yf, 0, bs)
+    out = pl.pallas_call(
+        _add_kernel,
+        grid=(xf.shape[0] // bs,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=INTERPRET,
+    )(xf, yf)
+    return out[:size].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Pooling kernels.
+# ---------------------------------------------------------------------------
+
+
+def _gap_kernel(x_ref, o_ref, *, hw: int):
+    # x_ref: (1, H*W, C) -> o_ref: (1, C). Mean over the spatial axis.
+    o_ref[0] = jnp.sum(x_ref[0], axis=0) / hw
+
+
+def global_avg_pool(x):
+    """NHWC -> (n, c): spatial mean (Pallas reduction)."""
+    n, h, w, c = x.shape
+    flat = x.reshape(n, h * w, c)
+    return pl.pallas_call(
+        functools.partial(_gap_kernel, hw=h * w),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h * w, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=INTERPRET,
+    )(flat)
+
+
+def _gmp_kernel(x_ref, o_ref):
+    o_ref[0] = jnp.max(x_ref[0], axis=0)
+
+
+def global_max_pool(x):
+    """NHWC -> (n, c): spatial max (Pallas reduction)."""
+    n, h, w, c = x.shape
+    flat = x.reshape(n, h * w, c)
+    return pl.pallas_call(
+        _gmp_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h * w, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), x.dtype),
+        interpret=INTERPRET,
+    )(flat)
+
+
+def _max_pool_kernel(x_ref, o_ref, *, window: int, stride: int,
+                     h_out: int, w_out: int):
+    x = x_ref[0]
+    acc = None
+    for dh in range(window):
+        for dw in range(window):
+            patch = jax.lax.slice(
+                x,
+                (dh, dw, 0),
+                (dh + (h_out - 1) * stride + 1,
+                 dw + (w_out - 1) * stride + 1,
+                 x.shape[2]),
+                (stride, stride, 1),
+            )
+            acc = patch if acc is None else jnp.maximum(acc, patch)
+    o_ref[0] = acc
+
+
+def max_pool(x, window: int = 2, stride: int = 2):
+    """Spatial max pooling (VALID), NHWC (Pallas)."""
+    n, h, w, c = x.shape
+    h_out = (h - window) // stride + 1
+    w_out = (w - window) // stride + 1
+    return pl.pallas_call(
+        functools.partial(
+            _max_pool_kernel, window=window, stride=stride,
+            h_out=h_out, w_out=w_out,
+        ),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, h_out, w_out, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out, c), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+def softmax(x, axis: int = -1):
+    """Softmax is left to XLA (a fused stable reduction already)."""
+    return jax.nn.softmax(x, axis=axis)

@@ -1,0 +1,126 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here written
+only with `jax.numpy` / `jax.lax` primitives. The pytest suite checks the
+Pallas kernels (interpret=True) against these references over swept shapes
+and dtypes; the JAX models (L2) can be built against either implementation
+(``use_pallas`` flag) and the two paths must agree numerically, which is
+also asserted at AOT time.
+
+Conventions (match the kernels):
+  - activations are NHWC: (batch, height, width, channels)
+  - conv weights are HWIO: (kh, kw, c_in, c_out)
+  - depthwise weights are (kh, kw, c)
+  - dense weights are (d_in, d_out)
+  - batchnorm is inference-mode: y = gamma * (x - mean) / sqrt(var + eps) + beta
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x, w, b=None, stride: int = 1, padding: str = "SAME"):
+    """2-D convolution, NHWC x HWIO -> NHWC."""
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if b is not None:
+        out = out + b
+    return out
+
+
+def depthwise_conv2d(x, w, b=None, stride: int = 1, padding: str = "SAME"):
+    """Depthwise 2-D convolution, NHWC x (kh,kw,c) -> NHWC.
+
+    Implemented as kh*kw shifted elementwise multiply-accumulates rather
+    than `lax.conv` with `feature_group_count`: XLA's CPU backward pass for
+    grouped convolutions is extremely slow single-core, while the backward
+    of shifted elementwise ops is cheap. Numerically identical (same
+    accumulation order as the Pallas kernel).
+    """
+    n, h, wd, c = x.shape
+    kh, kw, c2 = w.shape
+    assert c == c2
+    if padding == "SAME":
+        out_h, out_w = -(-h // stride), -(-wd // stride)
+        pad_h = max((out_h - 1) * stride + kh - h, 0)
+        pad_w = max((out_w - 1) * stride + kw - wd, 0)
+        x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    else:
+        out_h = (h - kh) // stride + 1
+        out_w = (wd - kw) // stride + 1
+    acc = None
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (0, dh, dw, 0),
+                (n, dh + (out_h - 1) * stride + 1,
+                 dw + (out_w - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            term = patch * w[dh, dw]
+            acc = term if acc is None else acc + term
+    if b is not None:
+        acc = acc + b
+    return acc
+
+
+def dense(x, w, b=None):
+    """Fully connected layer: (n, d_in) x (d_in, d_out) -> (n, d_out)."""
+    out = jnp.dot(x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def batchnorm(x, gamma, beta, mean, var, eps: float = 1e-3):
+    """Inference-mode batch normalisation over the channel axis."""
+    inv = gamma * jax.lax.rsqrt(var + eps)
+    return x * inv + (beta - mean * inv)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def add(x, y):
+    """Residual element-wise addition."""
+    return x + y
+
+
+def global_avg_pool(x):
+    """NHWC -> (n, c): mean over spatial dims."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def global_max_pool(x):
+    """NHWC -> (n, c): max over spatial dims."""
+    return jnp.max(x, axis=(1, 2))
+
+
+def max_pool(x, window: int = 2, stride: int = 2):
+    """Spatial max pooling (VALID), NHWC."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+def softmax(x, axis: int = -1):
+    return jax.nn.softmax(x, axis=axis)

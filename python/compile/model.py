@@ -1,0 +1,427 @@
+"""L2: the CONTINUER DNNs as distributable node-block pipelines.
+
+A `ModelDef` mirrors the paper's deployment model (§III-A): the DNN is a
+sequence of *blocks*, each placed on one edge node. The three recovery
+techniques are expressed as forward variants:
+
+  - repartition : full pipeline (base accuracy, full latency)
+  - early-exit e: nodes 1..e, then exit head e
+  - skip k      : all nodes except k (k must be identity-skippable)
+
+`NodeBlock.apply` runs one node's computation; `forward*` compose them, so
+the python training/eval path and the rust per-node artifacts compute the
+exact same functions.
+
+ResNet-32 (paper §II-C): stem conv(3x3,16)+BN+ReLU, 15 residual blocks
+(5 per stage, 16/32/64 channels, stride-2 projections at stages 2 and 3),
+GAP, dense(10). 14 nodes: n1 = stem+rb1, n2..n13 = rb2..rb13,
+n14 = rb14+rb15+head. Exits after nodes 1..13 (13 exit points, paper
+Fig. 3a); skippable nodes = those hosting only identity blocks =
+{2,3,4,5,7,8,9,10,12,13} — exactly the paper's 10 skip connections.
+
+MobileNetV2 (CIFAR-adapted, §II-C): stem conv(3x3,32s)+BN+ReLU6, 17
+inverted-residual blocks (t=6 except the first, width multiplier
+configurable; strides adapted for 32x32 input), 1x1 conv, GAP, dense(10).
+11 nodes with boundaries after blocks 2,4,5,7,8,9,11,12,14,15 so that the
+10 exit points land after nodes n1..n10 (paper Fig. 3b).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import nn
+from .kernels import get_backend
+
+NUM_CLASSES = 10
+INPUT_SHAPE = (32, 32, 3)
+
+
+@dataclass
+class NodeBlock:
+    """One edge node's share of the DNN: a Sequential of units."""
+
+    index: int  # 1-based node id, matching the paper's n_i
+    seq: nn.Sequential
+    skippable: bool  # every hosted residual unit has an identity shortcut
+
+    def init(self, rng):
+        return self.seq.init(rng)
+
+    def init_state(self):
+        return self.seq.init_state()
+
+    def apply(self, bk, params, state, x, train=False):
+        return self.seq.apply(bk, params, state, x, train)
+
+    def specs(self, in_shape):
+        return self.seq.specs(in_shape)
+
+
+@dataclass
+class ExitHead:
+    """Early-exit classifier attached after a node (paper §IV-A-2)."""
+
+    after_node: int  # exit i sits after node n_i
+    seq: nn.Sequential
+
+    def init(self, rng):
+        return self.seq.init(rng)
+
+    def init_state(self):
+        return self.seq.init_state()
+
+    def apply(self, bk, params, state, x, train=False):
+        return self.seq.apply(bk, params, state, x, train)
+
+    def specs(self, in_shape):
+        return self.seq.specs(in_shape)
+
+
+@dataclass
+class ModelDef:
+    name: str
+    nodes: list  # list[NodeBlock]
+    exits: list  # list[ExitHead]
+    input_shape: tuple = INPUT_SHAPE
+
+    # ----- parameter / state trees --------------------------------------
+    def init(self, seed: int = 0):
+        rng = np.random.RandomState(seed)
+        params = {
+            "nodes": {str(n.index): n.init(rng) for n in self.nodes},
+            "exits": {str(e.after_node): e.init(rng) for e in self.exits},
+        }
+        state = {
+            "nodes": {str(n.index): n.init_state() for n in self.nodes},
+            "exits": {str(e.after_node): e.init_state() for e in self.exits},
+        }
+        return params, state
+
+    # ----- forward variants (the three techniques) ----------------------
+    def forward(self, bk, params, state, x, train=False, upto=None,
+                skip=None):
+        """Run nodes 1..upto (default all), optionally skipping node `skip`.
+
+        Returns (activation, new_state). `activation` is logits if the head
+        node ran, else the boundary activation.
+        """
+        new_nodes_state = {}
+        for n in self.nodes:
+            key = str(n.index)
+            if skip is not None and n.index == skip:
+                assert n.skippable, f"node {n.index} is not skippable"
+                new_nodes_state[key] = state["nodes"][key]
+                continue
+            if upto is not None and n.index > upto:
+                new_nodes_state[key] = state["nodes"][key]
+                continue
+            x, s = n.apply(bk, params["nodes"][key], state["nodes"][key], x,
+                           train)
+            new_nodes_state[key] = s
+        return x, {"nodes": new_nodes_state, "exits": state["exits"]}
+
+    def forward_full(self, bk, params, state, x, train=False):
+        return self.forward(bk, params, state, x, train=train)
+
+    def forward_exit(self, bk, params, state, x, exit_at: int, train=False):
+        """Early-exit at exit head `exit_at` (after node n_{exit_at})."""
+        act, st = self.forward(bk, params, state, x, train=train,
+                               upto=exit_at)
+        head = self.exit_by_node(exit_at)
+        key = str(exit_at)
+        logits, es = head.apply(bk, params["exits"][key],
+                                state["exits"][key], act, train)
+        st["exits"] = dict(st["exits"])
+        st["exits"][key] = es
+        return logits, st
+
+    def forward_skip(self, bk, params, state, x, skip_node: int,
+                     train=False):
+        return self.forward(bk, params, state, x, train=train,
+                            skip=skip_node)
+
+    def forward_all_exits(self, bk, params, state, x, train=False):
+        """All exit logits + final logits (joint training, paper §IV-A-2)."""
+        outs = {}
+        new_nodes_state = {}
+        new_exits_state = dict(state["exits"])
+        act = x
+        exits_by_node = {e.after_node: e for e in self.exits}
+        for n in self.nodes:
+            key = str(n.index)
+            act, s = n.apply(bk, params["nodes"][key], state["nodes"][key],
+                             act, train)
+            new_nodes_state[key] = s
+            if n.index in exits_by_node:
+                e = exits_by_node[n.index]
+                ekey = str(n.index)
+                logits, es = e.apply(bk, params["exits"][ekey],
+                                     state["exits"][ekey], act, train)
+                outs[ekey] = logits
+                new_exits_state[ekey] = es
+        outs["final"] = act
+        return outs, {"nodes": new_nodes_state, "exits": new_exits_state}
+
+    # ----- introspection --------------------------------------------------
+    def exit_by_node(self, node_idx: int) -> ExitHead:
+        for e in self.exits:
+            if e.after_node == node_idx:
+                return e
+        raise KeyError(f"no exit after node {node_idx}")
+
+    def skippable_nodes(self) -> list:
+        """Interior nodes whose blocks are all identity-skippable."""
+        last = self.nodes[-1].index
+        return [n.index for n in self.nodes
+                if n.skippable and 1 < n.index < last]
+
+    def exit_nodes(self) -> list:
+        return [e.after_node for e in self.exits]
+
+    def boundary_shapes(self):
+        """Activation shape entering each node (node_idx -> shape)."""
+        shapes = {}
+        shape = self.input_shape
+        for n in self.nodes:
+            shapes[n.index] = shape
+            _, shape = n.specs(shape)
+        shapes["output"] = shape
+        return shapes
+
+    def node_specs(self):
+        """Per-node layer hyperparameter records (paper Table I)."""
+        out = {}
+        shape = self.input_shape
+        for n in self.nodes:
+            recs, shape = n.specs(shape)
+            out[n.index] = recs
+        return out
+
+    def exit_specs(self):
+        out = {}
+        shapes = self.boundary_shapes()
+        for e in self.exits:
+            # exit input = activation *after* node e.after_node = input of
+            # the next node.
+            nxt = e.after_node + 1
+            recs, _ = e.specs(shapes[nxt])
+            out[e.after_node] = recs
+        return out
+
+
+# ---------------------------------------------------------------------------
+# ResNet-32
+# ---------------------------------------------------------------------------
+
+
+def _resnet_block(cin, cout, stride):
+    main = nn.Sequential([
+        nn.Conv(cin, cout, kernel=3, stride=stride),
+        nn.BatchNorm(cout),
+        nn.ReLU(),
+        nn.Conv(cout, cout, kernel=3, stride=1),
+        nn.BatchNorm(cout),
+    ])
+    if stride != 1 or cin != cout:
+        shortcut = nn.Sequential([
+            nn.Conv(cin, cout, kernel=1, stride=stride),
+            nn.BatchNorm(cout),
+        ])
+    else:
+        shortcut = None
+    return nn.Residual(main, shortcut)
+
+
+def _resnet_exit_head(in_shape):
+    """Paper §IV-A-2: conv(32, k3, s2) + maxpool + BN + dense(64) + dense(10)."""
+    h, w, c = in_shape
+    conv = nn.Conv(c, 32, kernel=3, stride=2)
+    ho, wo = -(-h // 2), -(-w // 2)
+    pool_w = 2 if min(ho, wo) >= 2 else 1
+    layers = [conv, nn.BatchNorm(32), nn.ReLU()]
+    if pool_w == 2:
+        layers.append(nn.MaxPool(2, 2))
+        ho, wo = (ho - 2) // 2 + 1, (wo - 2) // 2 + 1
+    layers += [
+        nn.Flatten(),
+        nn.Dense(ho * wo * 32, 64),
+        nn.ReLU(),
+        nn.Dropout(0.2),
+        nn.Dense(64, NUM_CLASSES),
+    ]
+    return nn.Sequential(layers)
+
+
+def resnet32() -> ModelDef:
+    """ResNet-32 for 32x32 inputs, distributed over 14 nodes."""
+    # 15 residual blocks: stage channel/stride plan.
+    plan = []  # (cin, cout, stride)
+    cin = 16
+    for stage, cout in enumerate([16, 32, 64]):
+        for i in range(5):
+            stride = 2 if (stage > 0 and i == 0) else 1
+            plan.append((cin, cout, stride))
+            cin = cout
+    stem = [nn.Conv(3, 16, kernel=3, stride=1), nn.BatchNorm(16), nn.ReLU()]
+    rbs = [_resnet_block(*p) for p in plan]
+    head = [nn.GlobalAvgPool(), nn.Dense(64, NUM_CLASSES)]
+
+    nodes = []
+    # n1 = stem + rb1
+    nodes.append(NodeBlock(1, nn.Sequential(stem + [rbs[0]]),
+                           skippable=False))
+    # n2..n13 = rb2..rb13
+    for i in range(2, 14):
+        rb = rbs[i - 1]
+        nodes.append(NodeBlock(i, nn.Sequential([rb]),
+                               skippable=rb.is_identity))
+    # n14 = rb14 + rb15 + head
+    nodes.append(NodeBlock(14, nn.Sequential([rbs[13], rbs[14]] + head),
+                           skippable=False))
+
+    model = ModelDef("resnet32", nodes, exits=[])
+    shapes = model.boundary_shapes()
+    exits = [ExitHead(i, _resnet_exit_head(shapes[i + 1]))
+             for i in range(1, 14)]
+    model.exits = exits
+    return model
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (CIFAR-adapted)
+# ---------------------------------------------------------------------------
+
+
+def _mbv2_block(cin, cout, stride, expand):
+    """Inverted residual: 1x1 expand -> 3x3 depthwise -> 1x1 project."""
+    mid = cin * expand
+    layers = []
+    if expand != 1:
+        layers += [nn.Conv(cin, mid, kernel=1, stride=1),
+                   nn.BatchNorm(mid), nn.ReLU(six=True)]
+    layers += [
+        nn.DepthwiseConv(mid, kernel=3, stride=stride),
+        nn.BatchNorm(mid), nn.ReLU(six=True),
+        nn.Conv(mid, cout, kernel=1, stride=1),
+        nn.BatchNorm(cout),
+    ]
+    main = nn.Sequential(layers)
+    if stride == 1 and cin == cout:
+        return nn.Residual(main, None, final_relu=False)
+    # Non-identity inverted residuals have *no* shortcut in MobileNetV2;
+    # model that as a plain Sequential (not skippable).
+    return main
+
+
+def _mbv2_exit_head(in_shape, conv_filters):
+    """Paper §IV-A-2 MobileNetV2 exits: BN + conv(s) + global max pool +
+    dense(64) + dense(10). `conv_filters` is a list of conv filter counts
+    (the paper uses [96], [160, 80] or [320] depending on the block)."""
+    h, w, c = in_shape
+    layers = [nn.BatchNorm(c)]
+    cin = c
+    for f in conv_filters:
+        layers += [nn.Conv(cin, f, kernel=3, stride=1), nn.ReLU()]
+        cin = f
+    layers += [
+        nn.GlobalMaxPool(),
+        nn.Dense(cin, 64),
+        nn.ReLU(),
+        nn.Dropout(0.2),
+        nn.Dense(64, NUM_CLASSES),
+    ]
+    return nn.Sequential(layers)
+
+
+def _round_ch(c: float) -> int:
+    return max(8, int(round(c / 8.0)) * 8)
+
+
+def mobilenetv2(width: float = 1.0) -> ModelDef:
+    """MobileNetV2 for 32x32 inputs, 17 blocks over 11 nodes.
+
+    `width` scales channel counts (default 0.5 to fit the single-core CPU
+    training budget; DESIGN.md §1.1). Node boundaries sit after blocks
+    2,4,5,7,8,9,11,12,14,15 so the 10 exits match the paper's Fig. 3b.
+    """
+    cfg = [  # (expand, c, n, s) CIFAR-adapted; downsampling schedule tuned
+        # to fit the single-core CPU training budget while keeping 8x8
+        # spatial resolution through the middle of the network
+        # (DESIGN.md §1.1)
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 1),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ]
+    stem_c = _round_ch(32 * width)
+    blocks = []  # list[(layer, skippable)]
+    cin = stem_c
+    for expand, c, n, s in cfg:
+        cout = _round_ch(c * width)
+        for i in range(n):
+            stride = s if i == 0 else 1
+            blk = _mbv2_block(cin, cout, stride, expand)
+            blocks.append((blk, isinstance(blk, nn.Residual)
+                           and blk.is_identity))
+            cin = cout
+    assert len(blocks) == 17
+    last_c = _round_ch(1280 * width / 4)  # reduced final conv for CIFAR
+    stem = [nn.Conv(3, stem_c, kernel=3, stride=1), nn.BatchNorm(stem_c),
+            nn.ReLU(six=True)]
+    tail = [nn.Conv(cin, last_c, kernel=1, stride=1), nn.BatchNorm(last_c),
+            nn.ReLU(six=True), nn.GlobalAvgPool(),
+            nn.Dense(last_c, NUM_CLASSES)]
+
+    # Node boundaries after these (1-based) block indices:
+    bounds = [2, 4, 5, 7, 8, 9, 11, 12, 14, 15]
+    nodes = []
+    start = 1
+    for ni, end in enumerate(bounds, start=1):
+        units = [blocks[b - 1][0] for b in range(start, end + 1)]
+        skippable = all(blocks[b - 1][1] for b in range(start, end + 1))
+        if ni == 1:
+            units = stem + units
+            skippable = False
+        nodes.append(NodeBlock(ni, nn.Sequential(units), skippable))
+        start = end + 1
+    # n11 = blocks 16,17 + tail
+    units = [blocks[15][0], blocks[16][0]] + tail
+    nodes.append(NodeBlock(11, nn.Sequential(units), skippable=False))
+
+    model = ModelDef("mobilenetv2", nodes, exits=[])
+    shapes = model.boundary_shapes()
+
+    def filters_for(after_node: int) -> list:
+        # Paper's per-block exit conv filters, scaled by width.
+        blk = bounds[after_node - 1]
+        if blk == 2:
+            fs = [96]
+        elif blk in (4, 5):
+            fs = [160, 80]
+        elif blk in (7, 8, 9, 11, 12):
+            fs = [320]
+        else:  # 14, 15
+            fs = [160]
+        return [_round_ch(f * width) for f in fs]
+
+    model.exits = [ExitHead(i, _mbv2_exit_head(shapes[i + 1], filters_for(i)))
+                   for i in range(1, 11)]
+    return model
+
+
+def build(name: str, **kw) -> ModelDef:
+    if name == "resnet32":
+        return resnet32(**kw)
+    if name == "mobilenetv2":
+        return mobilenetv2(**kw)
+    raise ValueError(f"unknown model {name}")
+
+
+__all__ = ["ModelDef", "NodeBlock", "ExitHead", "resnet32", "mobilenetv2",
+           "build", "get_backend", "NUM_CLASSES", "INPUT_SHAPE"]

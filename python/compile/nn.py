@@ -1,0 +1,390 @@
+"""Minimal functional NN module system for the L2 models.
+
+Each layer object provides:
+  - ``init(rng) -> params``             (dict of arrays; may be empty)
+  - ``apply(bk, params, state, x, train) -> (y, new_state)``
+      `bk` is the kernel backend (pallas_kernels or ref — same API),
+      `state` holds batchnorm moving statistics.
+  - ``init_state() -> state``
+  - ``specs(in_shape) -> (list[dict], out_shape)``
+      layer hyperparameter records matching paper Table I, consumed by the
+      rust latency predictor (kind, input shape/channels, kernel, stride,
+      filters).
+
+Shapes are NHWC without the batch dim (e.g. (32, 32, 3)).
+
+BatchNorm is the only stateful layer: in training it normalises with batch
+statistics and updates moving averages; at inference (and in every AOT
+artifact) it uses the moving averages through the backend's fused
+inference-mode kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _he_init(rng, shape, fan_in):
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+class Layer:
+    """Base layer: stateless, paramless, identity."""
+
+    name = "layer"
+
+    def init(self, rng):
+        return {}
+
+    def init_state(self):
+        return {}
+
+    def apply(self, bk, params, state, x, train):
+        raise NotImplementedError
+
+    def specs(self, in_shape):
+        raise NotImplementedError
+
+
+class Conv(Layer):
+    name = "conv"
+
+    def __init__(self, cin, cout, kernel=3, stride=1, use_bias=False,
+                 padding="SAME"):
+        self.cin, self.cout, self.kernel = cin, cout, kernel
+        self.stride, self.use_bias, self.padding = stride, use_bias, padding
+
+    def init(self, rng):
+        k = self.kernel
+        p = {"w": _he_init(rng, (k, k, self.cin, self.cout), k * k * self.cin)}
+        if self.use_bias:
+            p["b"] = np.zeros((self.cout,), dtype=np.float32)
+        return p
+
+    def apply(self, bk, params, state, x, train):
+        return (
+            bk.conv2d(x, params["w"], params.get("b"), stride=self.stride,
+                      padding=self.padding),
+            state,
+        )
+
+    def specs(self, in_shape):
+        h, w, _ = in_shape
+        ho = -(-h // self.stride) if self.padding == "SAME" else (h - self.kernel) // self.stride + 1
+        wo = -(-w // self.stride) if self.padding == "SAME" else (w - self.kernel) // self.stride + 1
+        rec = {
+            "kind": "conv",
+            "input_h": h, "input_w": w, "input_c": self.cin,
+            "kernel": self.kernel, "stride": self.stride,
+            "filters": self.cout,
+        }
+        return [rec], (ho, wo, self.cout)
+
+
+class DepthwiseConv(Layer):
+    name = "depthwise_conv"
+
+    def __init__(self, c, kernel=3, stride=1, padding="SAME"):
+        self.c, self.kernel, self.stride, self.padding = c, kernel, stride, padding
+
+    def init(self, rng):
+        k = self.kernel
+        return {"w": _he_init(rng, (k, k, self.c), k * k)}
+
+    def apply(self, bk, params, state, x, train):
+        return (
+            bk.depthwise_conv2d(x, params["w"], stride=self.stride,
+                                padding=self.padding),
+            state,
+        )
+
+    def specs(self, in_shape):
+        h, w, _ = in_shape
+        ho = -(-h // self.stride)
+        wo = -(-w // self.stride)
+        rec = {
+            "kind": "depthwise_conv",
+            "input_h": h, "input_w": w, "input_c": self.c,
+            "kernel": self.kernel, "stride": self.stride,
+            "filters": self.c,
+        }
+        return [rec], (ho, wo, self.c)
+
+
+class BatchNorm(Layer):
+    name = "batchnorm"
+    MOMENTUM = 0.9
+    EPS = 1e-3
+
+    def __init__(self, c):
+        self.c = c
+
+    def init(self, rng):
+        return {
+            "gamma": np.ones((self.c,), dtype=np.float32),
+            "beta": np.zeros((self.c,), dtype=np.float32),
+        }
+
+    def init_state(self):
+        return {
+            "mean": np.zeros((self.c,), dtype=np.float32),
+            "var": np.ones((self.c,), dtype=np.float32),
+        }
+
+    def apply(self, bk, params, state, x, train):
+        if train:
+            axes = tuple(range(x.ndim - 1))
+            mean = jnp.mean(x, axis=axes)
+            var = jnp.var(x, axis=axes)
+            y = (x - mean) * jax.lax.rsqrt(var + self.EPS)
+            y = y * params["gamma"] + params["beta"]
+            new_state = {
+                "mean": self.MOMENTUM * state["mean"] + (1 - self.MOMENTUM) * mean,
+                "var": self.MOMENTUM * state["var"] + (1 - self.MOMENTUM) * var,
+            }
+            return y, new_state
+        return (
+            bk.batchnorm(x, params["gamma"], params["beta"], state["mean"],
+                         state["var"], eps=self.EPS),
+            state,
+        )
+
+    def specs(self, in_shape):
+        rec = {"kind": "batchnorm", "input_h": in_shape[0],
+               "input_w": in_shape[1] if len(in_shape) > 1 else 1,
+               "input_c": in_shape[-1]}
+        return [rec], in_shape
+
+
+class ReLU(Layer):
+    name = "relu"
+
+    def __init__(self, six=False):
+        self.six = six
+
+    def apply(self, bk, params, state, x, train):
+        return (bk.relu6(x) if self.six else bk.relu(x)), state
+
+    def specs(self, in_shape):
+        rec = {"kind": "relu", "input_h": in_shape[0],
+               "input_w": in_shape[1] if len(in_shape) > 1 else 1,
+               "input_c": in_shape[-1]}
+        return [rec], in_shape
+
+
+class Dropout(Layer):
+    """Inference-time identity; kept so Table I/II cover the dropout type.
+
+    Training applies inverted dropout with a fold-in seed; AOT artifacts are
+    always inference mode.
+    """
+
+    name = "dropout"
+
+    def __init__(self, rate=0.2):
+        self.rate = rate
+        self._seed = 0  # set per-step by the trainer
+
+    def apply(self, bk, params, state, x, train):
+        if train and self.rate > 0.0:
+            key = jax.random.PRNGKey(self._seed)
+            keep = jax.random.bernoulli(key, 1.0 - self.rate, x.shape)
+            return jnp.where(keep, x / (1.0 - self.rate), 0.0), state
+        return x, state
+
+    def specs(self, in_shape):
+        rec = {"kind": "dropout", "input_h": in_shape[0],
+               "input_w": in_shape[1] if len(in_shape) > 1 else 1,
+               "input_c": in_shape[-1]}
+        return [rec], in_shape
+
+
+class Dense(Layer):
+    name = "dense"
+
+    def __init__(self, din, dout, use_bias=True):
+        self.din, self.dout, self.use_bias = din, dout, use_bias
+
+    def init(self, rng):
+        p = {"w": _he_init(rng, (self.din, self.dout), self.din)}
+        if self.use_bias:
+            p["b"] = np.zeros((self.dout,), dtype=np.float32)
+        return p
+
+    def apply(self, bk, params, state, x, train):
+        return bk.dense(x, params["w"], params.get("b")), state
+
+    def specs(self, in_shape):
+        rec = {"kind": "dense", "input_h": 1, "input_w": 1,
+               "input_c": self.din, "filters": self.dout}
+        return [rec], (self.dout,)
+
+
+class GlobalAvgPool(Layer):
+    name = "global_avg_pool"
+
+    def apply(self, bk, params, state, x, train):
+        return bk.global_avg_pool(x), state
+
+    def specs(self, in_shape):
+        rec = {"kind": "global_avg_pool", "input_h": in_shape[0],
+               "input_w": in_shape[1], "input_c": in_shape[2]}
+        return [rec], (in_shape[2],)
+
+
+class GlobalMaxPool(Layer):
+    name = "global_max_pool"
+
+    def apply(self, bk, params, state, x, train):
+        return bk.global_max_pool(x), state
+
+    def specs(self, in_shape):
+        rec = {"kind": "global_max_pool", "input_h": in_shape[0],
+               "input_w": in_shape[1], "input_c": in_shape[2]}
+        return [rec], (in_shape[2],)
+
+
+class MaxPool(Layer):
+    name = "max_pool"
+
+    def __init__(self, window=2, stride=2):
+        self.window, self.stride = window, stride
+
+    def apply(self, bk, params, state, x, train):
+        return bk.max_pool(x, self.window, self.stride), state
+
+    def specs(self, in_shape):
+        h, w, c = in_shape
+        ho = (h - self.window) // self.stride + 1
+        wo = (w - self.window) // self.stride + 1
+        rec = {"kind": "max_pool", "input_h": h, "input_w": w, "input_c": c,
+               "kernel": self.window, "stride": self.stride}
+        return [rec], (ho, wo, c)
+
+
+class Flatten(Layer):
+    name = "flatten"
+
+    def apply(self, bk, params, state, x, train):
+        return x.reshape(x.shape[0], -1), state
+
+    def specs(self, in_shape):
+        size = 1
+        for d in in_shape:
+            size *= d
+        return [], (size,)
+
+
+class Sequential(Layer):
+    """Composite of layers; params/state keyed by layer index."""
+
+    name = "sequential"
+
+    def __init__(self, layers):
+        self.layers = layers
+
+    def init(self, rng):
+        return {str(i): l.init(rng) for i, l in enumerate(self.layers)}
+
+    def init_state(self):
+        return {str(i): l.init_state() for i, l in enumerate(self.layers)}
+
+    def apply(self, bk, params, state, x, train):
+        new_state = {}
+        for i, l in enumerate(self.layers):
+            x, s = l.apply(bk, params[str(i)], state[str(i)], x, train)
+            new_state[str(i)] = s
+        return x, new_state
+
+    def specs(self, in_shape):
+        recs = []
+        for l in self.layers:
+            r, in_shape = l.specs(in_shape)
+            recs.extend(r)
+        return recs, in_shape
+
+
+class Residual(Layer):
+    """y = relu(main(x) + shortcut(x)); the Add goes through the backend."""
+
+    name = "residual"
+
+    def __init__(self, main, shortcut=None, final_relu=True, relu6=False):
+        self.main = main
+        self.shortcut = shortcut  # None => identity
+        self.final_relu = final_relu
+        self.relu6 = relu6
+
+    @property
+    def is_identity(self) -> bool:
+        """True when the shortcut is the identity (skippable at runtime)."""
+        return self.shortcut is None
+
+    def init(self, rng):
+        p = {"main": self.main.init(rng)}
+        if self.shortcut is not None:
+            p["shortcut"] = self.shortcut.init(rng)
+        return p
+
+    def init_state(self):
+        s = {"main": self.main.init_state()}
+        if self.shortcut is not None:
+            s["shortcut"] = self.shortcut.init_state()
+        return s
+
+    def apply(self, bk, params, state, x, train):
+        y, sm = self.main.apply(bk, params["main"], state["main"], x, train)
+        new_state = {"main": sm}
+        if self.shortcut is not None:
+            sc, ss = self.shortcut.apply(
+                bk, params["shortcut"], state["shortcut"], x, train)
+            new_state["shortcut"] = ss
+        else:
+            sc = x
+        out = bk.add(y, sc)
+        if self.final_relu:
+            out = bk.relu6(out) if self.relu6 else bk.relu(out)
+        return out, new_state
+
+    def specs(self, in_shape):
+        recs, out_shape = self.main.specs(in_shape)
+        if self.shortcut is not None:
+            sc_recs, _ = self.shortcut.specs(in_shape)
+            recs.extend(sc_recs)
+        recs.append({"kind": "add", "input_h": out_shape[0],
+                     "input_w": out_shape[1], "input_c": out_shape[2]})
+        if self.final_relu:
+            recs.append({"kind": "relu", "input_h": out_shape[0],
+                         "input_w": out_shape[1], "input_c": out_shape[2]})
+        return recs, out_shape
+
+
+# ---------------------------------------------------------------------------
+# Param tree helpers (no optax / flax available offline).
+# ---------------------------------------------------------------------------
+
+
+def tree_map(fn, *trees):
+    t0 = trees[0]
+    if isinstance(t0, dict):
+        return {k: tree_map(fn, *[t[k] for t in trees]) for k in t0}
+    return fn(*trees)
+
+
+def tree_flatten(tree, prefix=""):
+    """Deterministic (sorted-key) flatten -> list[(path, leaf)]."""
+    if isinstance(tree, dict):
+        out = []
+        for k in sorted(tree.keys()):
+            out.extend(tree_flatten(tree[k], f"{prefix}/{k}" if prefix else k))
+        return out
+    return [(prefix, tree)]
+
+
+def tree_unflatten_like(tree, leaves_iter):
+    if isinstance(tree, dict):
+        return {k: tree_unflatten_like(tree[k], leaves_iter)
+                for k in sorted(tree.keys())}
+    return next(leaves_iter)

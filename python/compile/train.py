@@ -1,0 +1,263 @@
+"""Build-time training for the CONTINUER DNNs (L2).
+
+Trains one joint model per DNN: the base network plus all early-exit heads
+with the weighted-sum loss of paper §IV-A-2 (L_T = sum_i w_i L_i + L_final).
+All three techniques are evaluated against this single set of weights so
+the deployed per-node artifacts form one consistent network (the paper
+trains separate models per technique; DESIGN.md §1 documents the
+substitution).
+
+Besides the weights, training records the raw material for the two
+prediction models:
+  - per-epoch, per-variant accuracies on an eval subset (accuracy labels),
+  - per-epoch, per-node weight statistics (mean/std/percentiles, following
+    Unterthiner et al. [23] as the paper does),
+  - per-epoch train accuracy / loss (paper Table III parameters).
+
+Pure-jnp kernels (ref backend) are used for the training path — the Pallas
+interpret-mode kernels compute the identical function (asserted in pytest
+and at AOT time) but are far too slow to train through on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import nn
+from .kernels import ref
+
+EXIT_LOSS_WEIGHT = 0.3
+
+
+# ---------------------------------------------------------------------------
+# Adam (no optax offline)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": nn.tree_map(zeros, params), "v": nn.tree_map(zeros, params),
+            "t": jnp.zeros((), dtype=jnp.int32)}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m = nn.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = nn.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2**t.astype(jnp.float32))
+    new_params = nn.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale)
+        / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model, lr):
+    def loss_fn(params, state, x, y):
+        outs, new_state = model.forward_all_exits(ref, params, state, x,
+                                                  train=True)
+        loss = cross_entropy(outs["final"], y)
+        for e in model.exit_nodes():
+            loss = loss + EXIT_LOSS_WEIGHT * cross_entropy(outs[str(e)], y)
+        acc = accuracy(outs["final"], y)
+        return loss, (new_state, acc)
+
+    @jax.jit
+    def step(params, state, opt, x, y):
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, state, x, y)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, new_state, opt, loss, acc
+
+    return step
+
+
+def calibrate_bn(model, params, state, x_tr, batch=64, passes=2):
+    """Refresh batchnorm moving statistics under the *final* weights.
+
+    During training the EMA lags the rapidly-moving weights; a few
+    forward-only passes (no gradient updates) re-centre the moving
+    mean/variance before the weights are frozen into artifacts.
+    """
+
+    @jax.jit
+    def refresh(params, state, xb):
+        _, new_state = model.forward_all_exits(ref, params, state, xb,
+                                               train=True)
+        return new_state
+
+    n = x_tr.shape[0]
+    for _ in range(passes):
+        for i in range(0, n - batch + 1, batch):
+            state = refresh(params, state, x_tr[i:i + batch])
+    return state
+
+
+def make_eval_fns(model):
+    """Jitted inference-mode forwards: all-exits-and-final, and per-skip."""
+
+    @jax.jit
+    def eval_exits(params, state, x):
+        outs, _ = model.forward_all_exits(ref, params, state, x, train=False)
+        return outs
+
+    skip_fns = {}
+    for k in model.skippable_nodes():
+        @functools.partial(jax.jit, static_argnames=())
+        def eval_skip(params, state, x, _k=k):
+            y, _ = model.forward_skip(ref, params, state, x, _k, train=False)
+            return y
+        skip_fns[k] = eval_skip
+    return eval_exits, skip_fns
+
+
+def variant_accuracies(model, params, state, x, y, eval_exits, skip_fns,
+                       batch=128):
+    """Accuracy of every technique variant on (x, y).
+
+    Returns dict: {"repartition": a, "exit": {node: a}, "skip": {node: a}}.
+    """
+    n = x.shape[0]
+    sums = {"final": 0.0}
+    sums.update({f"e{e}": 0.0 for e in model.exit_nodes()})
+    sums.update({f"s{k}": 0.0 for k in skip_fns})
+    for i in range(0, n, batch):
+        xb, yb = x[i:i + batch], y[i:i + batch]
+        outs = eval_exits(params, state, xb)
+        w = xb.shape[0]
+        sums["final"] += float(accuracy(outs["final"], yb)) * w
+        for e in model.exit_nodes():
+            sums[f"e{e}"] += float(accuracy(outs[str(e)], yb)) * w
+        for k, fn in skip_fns.items():
+            sums[f"s{k}"] += float(accuracy(fn(params, state, xb), yb)) * w
+    return {
+        "repartition": sums["final"] / n,
+        "exit": {e: sums[f"e{e}"] / n for e in model.exit_nodes()},
+        "skip": {k: sums[f"s{k}"] / n for k in skip_fns},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Weight statistics (accuracy-prediction features, paper §IV-B-ii / [23])
+# ---------------------------------------------------------------------------
+
+
+def node_weight_stats(model, params):
+    """Per-node (and per-exit) weight statistics.
+
+    Returns {"n<idx>": stats, "e<idx>": stats} where stats =
+    [count, mean, std, q0, q25, q50, q75, q100].
+    """
+    out = {}
+
+    def stats_of(tree):
+        leaves = [np.asarray(v).ravel() for _, v in nn.tree_flatten(tree)]
+        w = np.concatenate(leaves) if leaves else np.zeros(1, np.float32)
+        qs = np.percentile(w, [0, 25, 50, 75, 100])
+        return [float(w.size), float(w.mean()), float(w.std())] + \
+            [float(q) for q in qs]
+
+    for n in model.nodes:
+        out[f"n{n.index}"] = stats_of(params["nodes"][str(n.index)])
+    for e in model.exits:
+        out[f"e{e.after_node}"] = stats_of(params["exits"][str(e.after_node)])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def train_model(model, train_data, eval_data, *, epochs, lr, batch=64,
+                seed=0, log=print):
+    """Train; returns (params, state, history).
+
+    history: list of per-epoch dicts with train_loss, train_acc,
+    variant accuracies (eval subset) and per-node weight stats.
+    """
+    x_tr, y_tr = train_data
+    x_ev, y_ev = eval_data
+    params, state = model.init(seed)
+    params = nn.tree_map(jnp.asarray, params)
+    state = nn.tree_map(jnp.asarray, state)
+    opt = adam_init(params)
+    step = make_train_step(model, lr)
+    eval_exits, skip_fns = make_eval_fns(model)
+    rng = np.random.RandomState(seed)
+    n = x_tr.shape[0]
+    history = []
+    x_tr = jnp.asarray(x_tr)
+    y_tr = jnp.asarray(y_tr)
+    x_ev = jnp.asarray(x_ev)
+    y_ev = jnp.asarray(y_ev)
+    for epoch in range(epochs):
+        t0 = time.time()
+        perm = rng.permutation(n)
+        losses, accs = [], []
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i:i + batch]
+            params, state, opt, loss, acc = step(
+                params, state, opt, x_tr[idx], y_tr[idx])
+            losses.append(float(loss))
+            accs.append(float(acc))
+        var_acc = variant_accuracies(model, params, state, x_ev, y_ev,
+                                     eval_exits, skip_fns)
+        rec = {
+            "epoch": epoch,
+            "lr": lr,
+            "train_loss": float(np.mean(losses)),
+            "train_acc": float(np.mean(accs)),
+            "variant_acc": var_acc,
+            "weight_stats": node_weight_stats(model, params),
+        }
+        history.append(rec)
+        log(f"[{model.name}] epoch {epoch + 1}/{epochs} "
+            f"loss={rec['train_loss']:.3f} acc={rec['train_acc']:.3f} "
+            f"full={var_acc['repartition']:.3f} ({time.time() - t0:.1f}s)")
+    state = calibrate_bn(model, params, state, x_tr, batch=batch)
+    return params, state, history
+
+
+# ---------------------------------------------------------------------------
+# Weight (de)serialisation — flat .npz keyed by tree path.
+# ---------------------------------------------------------------------------
+
+
+def save_weights(path, params, state):
+    flat = {}
+    for k, v in nn.tree_flatten(params):
+        flat[f"p:{k}"] = np.asarray(v)
+    for k, v in nn.tree_flatten(state):
+        flat[f"s:{k}"] = np.asarray(v)
+    np.savez_compressed(path, **flat)
+
+
+def load_weights(path, model, seed=0):
+    params, state = model.init(seed)
+    data = np.load(path)
+    pleaves = iter([data[f"p:{k}"] for k, _ in nn.tree_flatten(params)])
+    sleaves = iter([data[f"s:{k}"] for k, _ in nn.tree_flatten(state)])
+    return (nn.tree_unflatten_like(params, pleaves),
+            nn.tree_unflatten_like(state, sleaves))

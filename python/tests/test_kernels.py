@@ -1,0 +1,211 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the build path: the AOT artifacts
+are lowered from the Pallas implementations, and the models were trained
+through the oracle — these tests prove both compute the same functions.
+
+`hypothesis` is unavailable offline, so shape/dtype sweeps are explicit
+parameterised grids plus seeded random shape draws (documented substitute).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile.kernels import pallas_kernels as pk, ref
+
+RNG = np.random.RandomState(1234)
+
+
+def rand(*shape, scale=1.0):
+    return jnp.asarray((RNG.randn(*shape) * scale).astype(np.float32))
+
+
+def assert_close(a, b, tol=3e-5):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.shape == b.shape, f"shape {a.shape} vs {b.shape}"
+    np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+CONV_CASES = [
+    # (n, h, w, cin, cout, k, stride, padding)
+    (1, 8, 8, 3, 8, 3, 1, "SAME"),
+    (2, 8, 8, 5, 7, 3, 2, "SAME"),
+    (1, 16, 16, 8, 16, 1, 1, "SAME"),
+    (2, 16, 16, 4, 4, 1, 2, "SAME"),
+    (1, 7, 7, 3, 5, 3, 1, "SAME"),   # odd spatial
+    (1, 9, 5, 2, 3, 3, 2, "SAME"),   # non-square, odd
+    (1, 8, 8, 3, 4, 3, 1, "VALID"),
+    (1, 32, 32, 3, 16, 3, 1, "SAME"),  # stem-shaped
+]
+
+
+@pytest.mark.parametrize("n,h,w,cin,cout,k,s,pad", CONV_CASES)
+def test_conv2d_matches_ref(n, h, w, cin, cout, k, s, pad):
+    x = rand(n, h, w, cin)
+    wgt = rand(k, k, cin, cout)
+    assert_close(pk.conv2d(x, wgt, stride=s, padding=pad),
+                 ref.conv2d(x, wgt, stride=s, padding=pad))
+
+
+def test_conv2d_with_bias():
+    x = rand(2, 8, 8, 4)
+    wgt = rand(3, 3, 4, 6)
+    b = rand(6)
+    assert_close(pk.conv2d(x, wgt, b), ref.conv2d(x, wgt, b))
+
+
+def test_conv2d_channel_mismatch_raises():
+    with pytest.raises(AssertionError):
+        pk.conv2d(rand(1, 8, 8, 4), rand(3, 3, 5, 6))
+
+
+def test_conv2d_random_shapes():
+    rng = np.random.RandomState(7)
+    for _ in range(6):
+        h = int(rng.randint(4, 20))
+        w = int(rng.randint(4, 20))
+        cin = int(rng.randint(1, 9))
+        cout = int(rng.randint(1, 17))
+        s = int(rng.choice([1, 2]))
+        x = rand(1, h, w, cin)
+        wgt = rand(3, 3, cin, cout)
+        assert_close(pk.conv2d(x, wgt, stride=s), ref.conv2d(x, wgt, stride=s))
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv
+# ---------------------------------------------------------------------------
+
+DW_CASES = [
+    (1, 8, 8, 4, 3, 1),
+    (2, 8, 8, 8, 3, 2),
+    (1, 16, 16, 16, 3, 1),
+    (1, 7, 9, 5, 3, 2),
+]
+
+
+@pytest.mark.parametrize("n,h,w,c,k,s", DW_CASES)
+def test_depthwise_matches_ref(n, h, w, c, k, s):
+    x = rand(n, h, w, c)
+    wgt = rand(k, k, c)
+    assert_close(pk.depthwise_conv2d(x, wgt, stride=s),
+                 ref.depthwise_conv2d(x, wgt, stride=s))
+
+
+def test_depthwise_matches_lax_grouped_conv():
+    """ref's shifted-MAC depthwise must equal lax grouped convolution."""
+    import jax
+    x = rand(2, 10, 10, 6)
+    wgt = rand(3, 3, 6)
+    lax_out = jax.lax.conv_general_dilated(
+        x, wgt.reshape(3, 3, 1, 6), (2, 2), "SAME",
+        feature_group_count=6, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert_close(ref.depthwise_conv2d(x, wgt, stride=2), lax_out)
+
+
+# ---------------------------------------------------------------------------
+# dense / matmul tiling
+# ---------------------------------------------------------------------------
+
+DENSE_CASES = [
+    (1, 16, 10),
+    (33, 150, 70),     # non-multiple of tiles
+    (128, 128, 128),   # exact tile
+    (130, 260, 5),     # ragged both dims
+    (2, 2048, 64),     # wide reduction (exit-head shaped)
+]
+
+
+@pytest.mark.parametrize("m,k,n", DENSE_CASES)
+def test_dense_matches_ref(m, k, n):
+    x = rand(m, k, scale=0.3)
+    wgt = rand(k, n, scale=0.3)
+    assert_close(pk.dense(x, wgt), ref.dense(x, wgt), tol=2e-4)
+
+
+def test_dense_bias():
+    x, w, b = rand(4, 32), rand(32, 10), rand(10)
+    assert_close(pk.dense(x, w, b), ref.dense(x, w, b), tol=1e-4)
+
+
+def test_matmul_tile_override():
+    x, w = rand(64, 64, scale=0.3), rand(64, 64, scale=0.3)
+    out = pk.matmul(x, w, tile_m=16, tile_n=16, tile_k=16)
+    assert_close(out, ref.dense(x, w), tol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# elementwise: batchnorm, relu, relu6, add
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(1, 4, 4, 2), (2, 8, 8, 16), (3, 1, 1, 64)])
+def test_batchnorm_matches_ref(shape):
+    c = shape[-1]
+    x = rand(*shape)
+    gamma, beta = rand(c), rand(c)
+    mean = rand(c, scale=0.2)
+    var = jnp.abs(rand(c)) + 0.3
+    assert_close(pk.batchnorm(x, gamma, beta, mean, var),
+                 ref.batchnorm(x, gamma, beta, mean, var))
+
+
+def test_batchnorm_eps_handling():
+    x = rand(1, 2, 2, 3)
+    g, b = jnp.ones(3), jnp.zeros(3)
+    m, v = jnp.zeros(3), jnp.zeros(3)  # zero variance: eps must protect
+    out = pk.batchnorm(x, g, b, m, v, eps=1e-3)
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert_close(out, ref.batchnorm(x, g, b, m, v, eps=1e-3))
+
+
+@pytest.mark.parametrize("shape", [(1, 5), (2, 8, 8, 3), (1, 100003)])
+def test_relu_relu6_add(shape):
+    x = rand(*shape, scale=4.0)
+    y = rand(*shape, scale=4.0)
+    assert_close(pk.relu(x), ref.relu(x))
+    assert_close(pk.relu6(x), ref.relu6(x))
+    assert_close(pk.add(x, y), ref.add(x, y))
+
+
+def test_add_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        pk.add(rand(2, 3), rand(3, 2))
+
+
+# ---------------------------------------------------------------------------
+# pooling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(1, 4, 4, 8), (2, 8, 8, 3), (1, 2, 2, 64)])
+def test_global_pools(shape):
+    x = rand(*shape)
+    assert_close(pk.global_avg_pool(x), ref.global_avg_pool(x))
+    assert_close(pk.global_max_pool(x), ref.global_max_pool(x))
+
+
+@pytest.mark.parametrize("h,w,window,stride", [(8, 8, 2, 2), (16, 16, 2, 2), (9, 9, 3, 3)])
+def test_max_pool(h, w, window, stride):
+    x = rand(2, h, w, 4)
+    assert_close(pk.max_pool(x, window, stride), ref.max_pool(x, window, stride))
+
+
+# ---------------------------------------------------------------------------
+# dtype coverage: bfloat16 path stays close to f32 oracle
+# ---------------------------------------------------------------------------
+
+
+def test_conv_bfloat16_close_to_f32():
+    x = rand(1, 8, 8, 4)
+    w = rand(3, 3, 4, 8)
+    out_bf = pk.conv2d(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16))
+    out_f32 = ref.conv2d(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out_bf, dtype=np.float32), np.asarray(out_f32),
+        rtol=5e-2, atol=5e-2)

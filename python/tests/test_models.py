@@ -1,0 +1,225 @@
+"""L2 model tests: architecture invariants, forward variants, training
+machinery and the dataset generator."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import dataset, model as M, nn, train
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def resnet():
+    m = M.resnet32()
+    params, state = m.init(0)
+    return m, params, state
+
+
+@pytest.fixture(scope="module")
+def mnv2():
+    m = M.mobilenetv2()
+    params, state = m.init(0)
+    return m, params, state
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.RandomState(0)
+    return jnp.asarray(rng.randn(2, 32, 32, 3).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Architecture invariants (paper §II-C / §IV-A)
+# ---------------------------------------------------------------------------
+
+
+def test_resnet32_structure(resnet):
+    m, _, _ = resnet
+    assert len(m.nodes) == 14, "paper: ResNet-32 over up to 14 nodes"
+    assert m.exit_nodes() == list(range(1, 14)), "13 exit points"
+    assert m.skippable_nodes() == [2, 3, 4, 5, 7, 8, 9, 10, 12, 13], \
+        "paper: 10 skip connections"
+
+
+def test_mnv2_structure(mnv2):
+    m, _, _ = mnv2
+    assert len(m.nodes) == 11, "paper: MobileNetV2 over up to 11 nodes"
+    assert m.exit_nodes() == list(range(1, 11)), "10 exit points"
+    assert all(2 <= k <= 10 for k in m.skippable_nodes())
+
+
+def test_boundary_shapes_chain(resnet):
+    m, _, _ = resnet
+    shapes = m.boundary_shapes()
+    # walking node specs must reproduce the boundary chain
+    shape = m.input_shape
+    for n in m.nodes:
+        assert shapes[n.index] == shape
+        _, shape = n.specs(shape)
+    assert shape == (10,)
+
+
+@pytest.mark.parametrize("name", ["resnet32", "mobilenetv2"])
+def test_node_specs_cover_table1_kinds(name):
+    m = M.build(name)
+    kinds = {rec["kind"] for recs in m.node_specs().values() for rec in recs}
+    assert "conv" in kinds
+    assert "batchnorm" in kinds
+    assert "add" in kinds
+    if name == "mobilenetv2":
+        assert "depthwise_conv" in kinds
+
+
+# ---------------------------------------------------------------------------
+# Forward variants
+# ---------------------------------------------------------------------------
+
+
+def test_forward_full_shape(resnet, batch):
+    m, params, state = resnet
+    y, _ = m.forward_full(ref, params, state, batch)
+    assert y.shape == (2, 10)
+
+
+def test_forward_exits_match_manual(resnet, batch):
+    """forward_all_exits must agree with running forward_exit per exit."""
+    m, params, state = resnet
+    outs, _ = m.forward_all_exits(ref, params, state, batch)
+    for e in [1, 7, 13]:
+        manual, _ = m.forward_exit(ref, params, state, batch, e)
+        np.testing.assert_allclose(np.asarray(outs[str(e)]), np.asarray(manual),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_forward_skip_changes_output(resnet, batch):
+    m, params, state = resnet
+    full, _ = m.forward_full(ref, params, state, batch)
+    skipped, _ = m.forward_skip(ref, params, state, batch, 3)
+    assert skipped.shape == full.shape
+    assert not np.allclose(np.asarray(full), np.asarray(skipped)), \
+        "skipping a block must change the logits"
+
+
+def test_forward_skip_non_skippable_raises(resnet, batch):
+    m, params, state = resnet
+    with pytest.raises(AssertionError):
+        m.forward_skip(ref, params, state, batch, 6)  # downsampling node
+
+
+def test_mnv2_forward_variants(mnv2, batch):
+    m, params, state = mnv2
+    y, _ = m.forward_full(ref, params, state, batch)
+    assert y.shape == (2, 10)
+    e, _ = m.forward_exit(ref, params, state, batch, m.exit_nodes()[0])
+    assert e.shape == (2, 10)
+    s, _ = m.forward_skip(ref, params, state, batch, m.skippable_nodes()[0])
+    assert s.shape == (2, 10)
+
+
+# ---------------------------------------------------------------------------
+# Training machinery
+# ---------------------------------------------------------------------------
+
+
+def test_adam_reduces_quadratic():
+    params = {"w": jnp.asarray([4.0, -3.0])}
+    opt = train.adam_init(params)
+    import jax
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, opt = train.adam_update(params, grads, opt, lr=0.1)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_cross_entropy_and_accuracy():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0]])
+    labels = jnp.asarray([0, 1])
+    assert float(train.cross_entropy(logits, labels)) < 0.01
+    assert float(train.accuracy(logits, labels)) == 1.0
+    assert float(train.accuracy(logits, jnp.asarray([1, 0]))) == 0.0
+
+
+def test_one_train_step_decreases_loss():
+    m = M.resnet32()
+    params, state = m.init(0)
+    params = nn.tree_map(jnp.asarray, params)
+    state = nn.tree_map(jnp.asarray, state)
+    opt = train.adam_init(params)
+    step = train.make_train_step(m, 1e-3)
+    (x, y), _ = dataset.splits(32, 8, seed=3)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    losses = []
+    for _ in range(3):
+        params, state, opt, loss, _ = step(params, state, opt, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+
+
+def test_weight_save_load_roundtrip(tmp_path):
+    m = M.resnet32()
+    params, state = m.init(0)
+    p = tmp_path / "w.npz"
+    train.save_weights(p, params, state)
+    params2, state2 = train.load_weights(p, m, seed=1)
+    flat1 = nn.tree_flatten(params)
+    flat2 = nn.tree_flatten(params2)
+    assert len(flat1) == len(flat2)
+    for (k1, v1), (k2, v2) in zip(flat1, flat2):
+        assert k1 == k2
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_node_weight_stats_shape(resnet):
+    m, params, _ = resnet
+    stats = train.node_weight_stats(m, params)
+    assert set(stats) == {f"n{i}" for i in range(1, 15)} | \
+        {f"e{i}" for i in range(1, 14)}
+    for v in stats.values():
+        assert len(v) == 8  # count, mean, std, q0..q100
+        assert v[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# Dataset
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_deterministic():
+    x1, y1 = dataset.synth_cifar(16, seed=5)
+    x2, y2 = dataset.synth_cifar(16, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_dataset_seeds_differ():
+    x1, _ = dataset.synth_cifar(8, seed=1)
+    x2, _ = dataset.synth_cifar(8, seed=2)
+    assert not np.allclose(x1, x2)
+
+
+def test_dataset_splits_disjoint_streams():
+    (x_tr, _), (x_te, _) = dataset.splits(16, 16, seed=0)
+    assert not np.allclose(x_tr, x_te)
+
+
+def test_dataset_shapes_and_classes():
+    x, y = dataset.synth_cifar(64, seed=0)
+    assert x.shape == (64, 32, 32, 3)
+    assert x.dtype == np.float32
+    assert y.min() >= 0 and y.max() < dataset.NUM_CLASSES
+    assert len(np.unique(y)) > 3, "labels should cover several classes"
+
+
+def test_dataset_is_learnable_by_linear_probe():
+    """Even a linear model should beat chance on the raw pixels — the
+    classes are separable (sanity that training can succeed)."""
+    (x, y), (xt, yt) = dataset.splits(512, 128, seed=0)
+    xf = x.reshape(len(x), -1)
+    xtf = xt.reshape(len(xt), -1)
+    # ridge-regression one-vs-all probe
+    onehot = np.eye(10, dtype=np.float32)[y]
+    w = np.linalg.solve(xf.T @ xf + 50.0 * np.eye(xf.shape[1], dtype=np.float32),
+                        xf.T @ onehot)
+    acc = (np.argmax(xtf @ w, axis=1) == yt).mean()
+    assert acc > 0.3, f"linear probe accuracy {acc}"

@@ -1,0 +1,67 @@
+//! Bench: the failover decision path end-to-end (predictor queries +
+//! scheduler selection) — the measured basis of Table VIII. Needs
+//! `make artifacts`.
+
+use continuer::cluster::link::LinkModel;
+use continuer::config::Config;
+use continuer::coordinator::estimator::Estimator;
+use continuer::coordinator::failover::Failover;
+use continuer::coordinator::profiler::DowntimeTable;
+use continuer::exper::{default_artifacts_dir, require_artifacts};
+use continuer::predict::{AccuracyModel, GbdtParams, LatencyModel, LayerSample};
+use continuer::runtime::ArtifactStore;
+use continuer::util::bench::{bench, f, Table};
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = default_artifacts_dir();
+    if require_artifacts(&cfg.artifacts_dir).is_err() {
+        eprintln!("skipping downtime bench: run `make artifacts` first");
+        return;
+    }
+    let store = ArtifactStore::open(&cfg.artifacts_dir).unwrap();
+    let params = GbdtParams::default();
+    // Analytic latency samples are fine here: we time the *query* path.
+    let metas: Vec<_> = store.models.values().collect();
+    let samples: Vec<LayerSample> = metas[0]
+        .all_layers()
+        .iter()
+        .map(|l| LayerSample {
+            spec: (*l).clone(),
+            latency_ms: 1e-6 * l.flops() as f64 + 0.02,
+        })
+        .collect();
+    let (lat_model, _) = LatencyModel::fit(&samples, &params, 0).unwrap();
+    let (acc_model, _) = AccuracyModel::fit(&metas, &params, 0).unwrap();
+    let link = LinkModel::new(cfg.link.clone());
+    let downtime = DowntimeTable::new();
+
+    for name in ["resnet32", "mobilenetv2"] {
+        let Ok(meta) = store.model(name) else { continue };
+        let est = Estimator::new(
+        meta,
+        &lat_model,
+        &acc_model,
+        &link,
+        &downtime,
+        cfg.reinstate_ms,
+    );
+        let mut t = Table::new(
+            &format!("bench: failover decision path — {name}"),
+            &["failed node", "mean ms", "p95 ms", "p99 ms"],
+        );
+        for failed in [2usize, meta.num_nodes / 2, meta.num_nodes] {
+            let s = bench(5, 100, || {
+                let mut fo = Failover::new(cfg.objectives.clone());
+                let _ = fo.on_failure(&est, failed).unwrap();
+            });
+            t.row(&[
+                format!("n{failed}"),
+                f(s.mean / 1000.0, 3),
+                f(s.p95 / 1000.0, 3),
+                f(s.p99 / 1000.0, 3),
+            ]);
+        }
+        t.print();
+    }
+}

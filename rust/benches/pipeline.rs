@@ -1,0 +1,70 @@
+//! Bench: the serving hot path — end-to-end pipeline execution per
+//! technique over the real PJRT block executables (regenerates the latency
+//! regime behind Fig 7 / Table V). Needs `make artifacts`; exits with a
+//! message otherwise.
+
+use continuer::cluster::sim::EdgeCluster;
+use continuer::config::Config;
+use continuer::dnn::variants::Technique;
+use continuer::exper::{default_artifacts_dir, require_artifacts};
+use continuer::runtime::{ArtifactStore, Engine};
+use continuer::util::bench::{f, Table};
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = default_artifacts_dir();
+    if require_artifacts(&cfg.artifacts_dir).is_err() {
+        eprintln!("skipping pipeline bench: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let store = ArtifactStore::open(&cfg.artifacts_dir).unwrap();
+
+    for name in ["resnet32", "mobilenetv2"] {
+        let Ok(meta) = store.model(name) else { continue };
+        let cluster = EdgeCluster::new(&engine, &store, meta, cfg.link.clone(), 0);
+        let (images, _) = store.test_set().unwrap();
+        let x1 = images.slice0(0, 1).unwrap();
+
+        let mid_exit = meta.exit_nodes[meta.exit_nodes.len() / 2];
+        let mid_skip = meta.skippable_nodes[meta.skippable_nodes.len() / 2];
+        let cases = [
+            ("full pipeline", Technique::Repartition, None),
+            ("repartition (n3 down)", Technique::Repartition, Some(3)),
+            ("early-exit (mid)", Technique::EarlyExit(mid_exit), Some(mid_exit + 1)),
+            ("skip (mid)", Technique::SkipConnection(mid_skip), Some(mid_skip)),
+        ];
+        let mut t = Table::new(
+            &format!("bench: pipeline latency, batch 1 — {name}"),
+            &["path", "compute ms", "network ms", "total ms"],
+        );
+        for (label, tech, failed) in cases {
+            let (c, n) = cluster
+                .measure_latency_split(tech, failed, &x1, 10)
+                .unwrap();
+            t.row(&[label.to_string(), f(c, 2), f(n, 2), f(c + n, 2)]);
+        }
+        t.print();
+
+        // Batched throughput (batch 32): requests/sec through the full
+        // pipeline — the dynamic batcher's payoff.
+        let x32 = images.slice0(0, 32).unwrap();
+        let steps =
+            continuer::cluster::sim::steps_for(meta, Technique::Repartition, None);
+        cluster.execute_steps(&steps, &x32).unwrap(); // warmup/compile
+        let t0 = std::time::Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            cluster.execute_steps(&steps, &x32).unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let (c1, n1) = cluster
+            .measure_latency_split(Technique::Repartition, None, &x1, 10)
+            .unwrap();
+        println!(
+            "{name}: batch-32 throughput {:.1} img/s vs batch-1 {:.1} img/s\n",
+            (reps * 32) as f64 / secs,
+            1e3 / (c1 + n1)
+        );
+    }
+}

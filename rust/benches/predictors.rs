@@ -1,0 +1,85 @@
+//! Bench: the two prediction models — fit cost (offline profiler phase)
+//! and query cost (on the failover path, so it bounds downtime /
+//! Table VIII).
+
+use continuer::dnn::layers::{LayerKind, LayerSpec};
+use continuer::predict::{Dataset, Gbdt, GbdtParams, LatencyModel, LayerSample};
+use continuer::util::bench::{bench, f, Table};
+use continuer::util::rng::Rng;
+
+fn synth_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut data = Dataset::new((0..d).map(|i| format!("x{i}")).collect());
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let y = x.iter().enumerate().map(|(i, v)| v * (i + 1) as f64).sum::<f64>()
+            + rng.normal() * 0.01;
+        data.push(x, y);
+    }
+    data
+}
+
+fn synth_samples(n: usize, seed: u64) -> Vec<LayerSample> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let h = [4usize, 8, 16, 32][rng.below(4)];
+            let c = [8usize, 16, 32, 64][rng.below(4)];
+            let spec = LayerSpec {
+                kind: LayerKind::Conv,
+                input_h: h,
+                input_w: h,
+                input_c: c,
+                kernel: 3,
+                stride: 1,
+                filters: c,
+            };
+            let l = 1e-6 * spec.flops() as f64 * (1.0 + 0.05 * rng.normal());
+            LayerSample {
+                spec,
+                latency_ms: l.max(1e-4),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut t = Table::new(
+        "bench: GBDT fit (offline)",
+        &["rows x feats x trees", "mean ms"],
+    );
+    for (n, d, trees) in [(200usize, 9usize, 50usize), (500, 9, 100), (500, 25, 200)] {
+        let data = synth_dataset(n, d, 1);
+        let params = GbdtParams {
+            n_estimators: trees,
+            early_stop: 0,
+            ..Default::default()
+        };
+        let s = bench(1, 5, || {
+            let _ = Gbdt::fit(&data, &params);
+        });
+        t.row(&[format!("{n} x {d} x {trees}"), f(s.mean / 1000.0, 1)]);
+    }
+    t.print();
+
+    // Query path (hot): single-row prediction.
+    let data = synth_dataset(500, 9, 2);
+    let model = Gbdt::fit(&data, &GbdtParams::default());
+    let row = vec![0.5; 9];
+    let s = bench(1000, 20000, || {
+        let _ = model.predict_one(&row);
+    });
+    println!("gbdt predict_one: mean {:.3} us p99 {:.3} us", s.mean, s.p99);
+
+    // Latency-model path prediction over a ResNet-block-like layer list.
+    let samples = synth_samples(300, 3);
+    let (lat, _) = LatencyModel::fit(&samples, &GbdtParams::default(), 0).unwrap();
+    let layers: Vec<LayerSpec> = samples.iter().take(40).map(|s| s.spec.clone()).collect();
+    let s = bench(100, 2000, || {
+        let _ = lat.predict_path(layers.iter());
+    });
+    println!(
+        "latency model: 40-layer path prediction mean {:.1} us p99 {:.1} us\n",
+        s.mean, s.p99
+    );
+}

@@ -1,0 +1,58 @@
+//! Bench: scheduler hot path — the additive-weighting selection that runs
+//! during a failover (L3 hot path; paper Table VIII regime). Criterion is
+//! unavailable offline; `continuer::util::bench` provides warmup + robust
+//! summaries.
+
+use continuer::config::Objectives;
+use continuer::coordinator::scheduler::{select, weight_sweep, CandidateMetrics};
+use continuer::dnn::variants::Technique;
+use continuer::util::bench::{bench, bench_throughput, f, Table};
+use continuer::util::rng::Rng;
+
+fn candidates(n: usize, rng: &mut Rng) -> Vec<CandidateMetrics> {
+    (0..n)
+        .map(|i| CandidateMetrics {
+            technique: match i % 3 {
+                0 => Technique::Repartition,
+                1 => Technique::EarlyExit(i + 1),
+                _ => Technique::SkipConnection(i + 1),
+            },
+            accuracy: rng.range(50.0, 100.0),
+            latency_ms: rng.range(1.0, 60.0),
+            downtime_ms: rng.range(0.5, 20.0),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+    let w = Objectives::default();
+    let mut t = Table::new(
+        "bench: scheduler selection",
+        &["candidates", "mean us", "p95 us", "p99 us"],
+    );
+    for n in [2usize, 3, 8, 32] {
+        let cands = candidates(n, &mut rng);
+        let s = bench(200, 2000, || {
+            let _ = select(&cands, &w).unwrap();
+        });
+        t.row(&[n.to_string(), f(s.mean, 3), f(s.p95, 3), f(s.p99, 3)]);
+    }
+    t.print();
+
+    // Table VII style sweep throughput: 729 weight combos x selection.
+    let cands = candidates(3, &mut rng);
+    let weights = weight_sweep(0.1, 0.9, 0.1);
+    let (per_item_us, per_sec) = bench_throughput(3, 50, || {
+        let mut n = 0;
+        for w in &weights {
+            let _ = select(&cands, w).unwrap();
+            n += 1;
+        }
+        n
+    });
+    println!(
+        "weight sweep: {:.3} us/selection, {:.0} selections/sec\n",
+        per_item_us, per_sec
+    );
+}

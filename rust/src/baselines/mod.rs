@@ -1,0 +1,158 @@
+//! Baseline recovery policies the evaluation compares CONTINUER against:
+//! fixed single-technique policies and a SEE-like early-exit-only policy
+//! (Wang et al. [30], which always exits during outages).
+
+use anyhow::Result;
+
+use crate::config::Objectives;
+use crate::coordinator::scheduler::{select, CandidateMetrics};
+use crate::dnn::variants::Technique;
+
+/// A recovery policy: picks a technique from the candidate metrics.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique>;
+}
+
+/// CONTINUER itself: additive-weighting scheduler under objectives.
+pub struct Continuer(pub Objectives);
+
+impl Policy for Continuer {
+    fn name(&self) -> &'static str {
+        "continuer"
+    }
+
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
+        Ok(select(candidates, &self.0)?.chosen)
+    }
+}
+
+fn find_kind(candidates: &[CandidateMetrics], kind: &str) -> Option<Technique> {
+    candidates
+        .iter()
+        .map(|c| c.technique)
+        .find(|t| t.kind_name() == kind)
+}
+
+/// Always repartition (the traditional recovery; always feasible).
+pub struct AlwaysRepartition;
+
+impl Policy for AlwaysRepartition {
+    fn name(&self) -> &'static str {
+        "always-repartition"
+    }
+
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
+        find_kind(candidates, "repartition")
+            .ok_or_else(|| anyhow::anyhow!("repartition missing from candidates"))
+    }
+}
+
+/// Always early-exit when possible, else repartition (SEE-like).
+pub struct AlwaysEarlyExit;
+
+impl Policy for AlwaysEarlyExit {
+    fn name(&self) -> &'static str {
+        "always-early-exit"
+    }
+
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
+        find_kind(candidates, "early-exit")
+            .or_else(|| find_kind(candidates, "repartition"))
+            .ok_or_else(|| anyhow::anyhow!("no feasible technique"))
+    }
+}
+
+/// Always skip when possible, else repartition (DeepFogGuard-like).
+pub struct AlwaysSkip;
+
+impl Policy for AlwaysSkip {
+    fn name(&self) -> &'static str {
+        "always-skip"
+    }
+
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
+        find_kind(candidates, "skip-connection")
+            .or_else(|| find_kind(candidates, "repartition"))
+            .ok_or_else(|| anyhow::anyhow!("no feasible technique"))
+    }
+}
+
+/// All baselines plus CONTINUER under the given objectives.
+pub fn all_policies(objectives: Objectives) -> Vec<Box<dyn Policy>> {
+    vec![
+        Box::new(Continuer(objectives)),
+        Box::new(AlwaysRepartition),
+        Box::new(AlwaysEarlyExit),
+        Box::new(AlwaysSkip),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cands() -> Vec<CandidateMetrics> {
+        vec![
+            CandidateMetrics {
+                technique: Technique::Repartition,
+                accuracy: 90.0,
+                latency_ms: 30.0,
+                downtime_ms: 4.0,
+            },
+            CandidateMetrics {
+                technique: Technique::EarlyExit(3),
+                accuracy: 70.0,
+                latency_ms: 8.0,
+                downtime_ms: 1.0,
+            },
+            CandidateMetrics {
+                technique: Technique::SkipConnection(4),
+                accuracy: 85.0,
+                latency_ms: 25.0,
+                downtime_ms: 3.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn fixed_policies_pick_their_kind() {
+        assert_eq!(
+            AlwaysRepartition.decide(&cands()).unwrap(),
+            Technique::Repartition
+        );
+        assert_eq!(
+            AlwaysEarlyExit.decide(&cands()).unwrap(),
+            Technique::EarlyExit(3)
+        );
+        assert_eq!(
+            AlwaysSkip.decide(&cands()).unwrap(),
+            Technique::SkipConnection(4)
+        );
+    }
+
+    #[test]
+    fn fallback_to_repartition() {
+        let only_rep = vec![cands()[0]];
+        assert_eq!(
+            AlwaysEarlyExit.decide(&only_rep).unwrap(),
+            Technique::Repartition
+        );
+        assert_eq!(AlwaysSkip.decide(&only_rep).unwrap(), Technique::Repartition);
+    }
+
+    #[test]
+    fn continuer_uses_weights() {
+        let p = Continuer(Objectives::new(0.05, 0.9, 0.05));
+        assert_eq!(p.decide(&cands()).unwrap(), Technique::EarlyExit(3));
+    }
+
+    #[test]
+    fn all_policies_have_unique_names() {
+        let ps = all_policies(Objectives::default());
+        let mut names: Vec<&str> = ps.iter().map(|p| p.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 4);
+    }
+}

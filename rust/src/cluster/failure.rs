@@ -1,0 +1,178 @@
+//! Failure injection and detection for the simulated edge cluster.
+//!
+//! The injector produces a schedule of crash / recovery events (one-shot
+//! crashes, intermittent flaps); the detector models heartbeat-based
+//! detection latency, which contributes to the measured downtime of a
+//! failover (the paper's downtime metric starts at detection).
+
+use crate::util::rng::Rng;
+
+/// Node liveness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    Up,
+    Down,
+}
+
+/// A scheduled failure event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    /// Simulation time, milliseconds.
+    pub at_ms: f64,
+    pub node: usize,
+    pub status: NodeStatus,
+}
+
+/// Failure schedule generator.
+#[derive(Debug, Clone)]
+pub struct FailurePlan {
+    pub events: Vec<FailureEvent>,
+}
+
+impl FailurePlan {
+    /// A single crash of `node` at `at_ms` (never recovers).
+    pub fn crash(node: usize, at_ms: f64) -> FailurePlan {
+        FailurePlan {
+            events: vec![FailureEvent {
+                at_ms,
+                node,
+                status: NodeStatus::Down,
+            }],
+        }
+    }
+
+    /// Intermittent connectivity: `node` flaps down/up `cycles` times.
+    pub fn intermittent(node: usize, start_ms: f64, down_ms: f64, up_ms: f64, cycles: usize) -> FailurePlan {
+        let mut events = Vec::new();
+        let mut t = start_ms;
+        for _ in 0..cycles {
+            events.push(FailureEvent {
+                at_ms: t,
+                node,
+                status: NodeStatus::Down,
+            });
+            t += down_ms;
+            events.push(FailureEvent {
+                at_ms: t,
+                node,
+                status: NodeStatus::Up,
+            });
+            t += up_ms;
+        }
+        FailurePlan { events }
+    }
+
+    /// Random crashes over a horizon: each eligible node crashes at most
+    /// once, with probability `p_crash`, at a uniform time.
+    pub fn random(
+        eligible: &[usize],
+        horizon_ms: f64,
+        p_crash: f64,
+        rng: &mut Rng,
+    ) -> FailurePlan {
+        let mut events = Vec::new();
+        for &node in eligible {
+            if rng.bool(p_crash) {
+                events.push(FailureEvent {
+                    at_ms: rng.range(0.0, horizon_ms),
+                    node,
+                    status: NodeStatus::Down,
+                });
+            }
+        }
+        events.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+        FailurePlan { events }
+    }
+
+    /// Events due at or before `now_ms` that haven't been applied yet
+    /// (callers track the cursor).
+    pub fn due(&self, cursor: usize, now_ms: f64) -> &[FailureEvent] {
+        let mut end = cursor;
+        while end < self.events.len() && self.events[end].at_ms <= now_ms {
+            end += 1;
+        }
+        &self.events[cursor..end]
+    }
+}
+
+/// Heartbeat-based failure detector model: a crash at time t is *detected*
+/// at the next heartbeat boundary plus a timeout.
+#[derive(Debug, Clone)]
+pub struct Detector {
+    pub heartbeat_ms: f64,
+    pub timeout_ms: f64,
+}
+
+impl Default for Detector {
+    fn default() -> Self {
+        Detector {
+            heartbeat_ms: 10.0,
+            timeout_ms: 5.0,
+        }
+    }
+}
+
+impl Detector {
+    /// Time at which a failure occurring at `t_ms` is detected.
+    pub fn detection_time(&self, t_ms: f64) -> f64 {
+        let next_beat = (t_ms / self.heartbeat_ms).ceil() * self.heartbeat_ms;
+        next_beat + self.timeout_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_plan() {
+        let p = FailurePlan::crash(3, 100.0);
+        assert_eq!(p.events.len(), 1);
+        assert_eq!(p.events[0].node, 3);
+        assert_eq!(p.events[0].status, NodeStatus::Down);
+    }
+
+    #[test]
+    fn intermittent_alternates() {
+        let p = FailurePlan::intermittent(2, 10.0, 5.0, 20.0, 3);
+        assert_eq!(p.events.len(), 6);
+        assert_eq!(p.events[0].status, NodeStatus::Down);
+        assert_eq!(p.events[1].status, NodeStatus::Up);
+        assert!((p.events[1].at_ms - 15.0).abs() < 1e-9);
+        // strictly increasing times
+        for w in p.events.windows(2) {
+            assert!(w[0].at_ms < w[1].at_ms);
+        }
+    }
+
+    #[test]
+    fn random_is_sorted_and_bounded() {
+        let mut rng = Rng::new(4);
+        let p = FailurePlan::random(&[2, 3, 4, 5, 6], 1000.0, 0.8, &mut rng);
+        for w in p.events.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms);
+        }
+        for e in &p.events {
+            assert!((0.0..=1000.0).contains(&e.at_ms));
+        }
+    }
+
+    #[test]
+    fn due_cursor() {
+        let p = FailurePlan::intermittent(1, 0.0, 10.0, 10.0, 2);
+        let due = p.due(0, 10.0);
+        assert_eq!(due.len(), 2);
+        let due2 = p.due(2, 25.0);
+        assert_eq!(due2.len(), 1);
+    }
+
+    #[test]
+    fn detector_quantises() {
+        let d = Detector {
+            heartbeat_ms: 10.0,
+            timeout_ms: 5.0,
+        };
+        assert!((d.detection_time(12.0) - 25.0).abs() < 1e-9);
+        assert!((d.detection_time(20.0) - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,86 @@
+//! Network link model between edge nodes (DESIGN.md §1.4): activations
+//! move between nodes over links with base latency, bandwidth and jitter.
+//! Compute is real (PJRT); only the network is modeled.
+
+use crate::config::LinkConfig;
+use crate::util::rng::Rng;
+
+/// A link cost model.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    cfg: LinkConfig,
+}
+
+impl LinkModel {
+    pub fn new(cfg: LinkConfig) -> LinkModel {
+        LinkModel { cfg }
+    }
+
+    /// Expected (deterministic) transfer time for `bytes`, milliseconds.
+    /// Used by the latency *predictor* so prediction error reflects only
+    /// the compute models, as in the paper's fixed testbed network.
+    pub fn expected_ms(&self, bytes: usize) -> f64 {
+        let bw_bytes_per_ms = self.cfg.bandwidth_mbps * 1e6 / 1e3;
+        self.cfg.latency_ms + bytes as f64 / bw_bytes_per_ms
+    }
+
+    /// Sampled transfer time with jitter (the *measured* path).
+    pub fn sample_ms(&self, bytes: usize, rng: &mut Rng) -> f64 {
+        let base = self.expected_ms(bytes);
+        let j = self.cfg.jitter;
+        if j <= 0.0 {
+            return base;
+        }
+        base * (1.0 + rng.range(-j, j))
+    }
+
+    /// Number of link hops a path with `n_segments` boundary crossings
+    /// pays when skipping `skipped` nodes: a skip reroutes over one longer
+    /// hop (modelled as a single extra base latency).
+    pub fn skip_extra_ms(&self) -> f64 {
+        self.cfg.latency_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> LinkModel {
+        LinkModel::new(LinkConfig {
+            latency_ms: 1.0,
+            bandwidth_mbps: 100.0,
+            jitter: 0.1,
+        })
+    }
+
+    #[test]
+    fn expected_scales_with_bytes() {
+        let m = model();
+        // 100 MB/s = 1e8 B/s = 1e5 B/ms; 1e5 bytes -> 1 ms + 1 ms
+        assert!((m.expected_ms(100_000) - 2.0).abs() < 1e-9);
+        assert!(m.expected_ms(200_000) > m.expected_ms(100_000));
+    }
+
+    #[test]
+    fn sample_within_jitter_bounds() {
+        let m = model();
+        let mut rng = Rng::new(1);
+        let base = m.expected_ms(50_000);
+        for _ in 0..200 {
+            let s = m.sample_ms(50_000, &mut rng);
+            assert!(s >= base * 0.9 - 1e-9 && s <= base * 1.1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_jitter_is_deterministic() {
+        let m = LinkModel::new(LinkConfig {
+            latency_ms: 0.5,
+            bandwidth_mbps: 10.0,
+            jitter: 0.0,
+        });
+        let mut rng = Rng::new(2);
+        assert_eq!(m.sample_ms(1000, &mut rng), m.expected_ms(1000));
+    }
+}

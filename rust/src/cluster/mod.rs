@@ -1,0 +1,10 @@
+//! Edge-cluster simulator: nodes hosting real PJRT block executables,
+//! modeled links, failure injection/detection (DESIGN.md §1.4).
+
+pub mod failure;
+pub mod link;
+pub mod sim;
+
+pub use failure::{Detector, FailureEvent, FailurePlan, NodeStatus};
+pub use link::LinkModel;
+pub use sim::{expected_network_ms, healthy_path, steps_for, EdgeCluster, PathTiming, Step};

@@ -1,0 +1,429 @@
+//! The simulated edge cluster: N nodes, each hosting its block of the
+//! distributed DNN as a compiled PJRT executable. Block compute is *real*
+//! (executed and wall-clock timed); inter-node links use the LinkModel;
+//! failures flip node status.
+//!
+//! A technique's execution is a sequence of [`Step`]s: which *unit* (block
+//! or exit head) runs and which physical *host* runs it. Repartitioning
+//! keeps every block but re-hosts the failed node's block on a surviving
+//! neighbour, so its link hop disappears — exactly the paper's "constant
+//! latency" repartition behaviour with one fewer boundary.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::LinkConfig;
+use crate::dnn::model::ModelMeta;
+use crate::dnn::variants::Technique;
+use crate::runtime::{ArtifactStore, Engine, HostTensor, UnitKind};
+use crate::util::rng::Rng;
+
+use super::failure::NodeStatus;
+use super::link::LinkModel;
+
+/// One pipeline step: a unit executed on a physical host node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Step {
+    pub unit: UnitKind,
+    pub host: usize,
+}
+
+/// Timing breakdown of one pipeline execution.
+#[derive(Debug, Clone, Default)]
+pub struct PathTiming {
+    /// Real compute wall-time per executed unit, ms.
+    pub compute_ms: Vec<(UnitKind, f64)>,
+    /// Modeled network time, ms.
+    pub network_ms: f64,
+}
+
+impl PathTiming {
+    pub fn total_compute_ms(&self) -> f64 {
+        self.compute_ms.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.total_compute_ms() + self.network_ms
+    }
+}
+
+/// Build the step sequence of a technique.
+///
+/// `failed`: the failed node (None = healthy pipeline). Units are hosted on
+/// their own node except under repartitioning, where the failed node's
+/// block is re-hosted on its predecessor (successor for node 1) — the
+/// deterministic merge plan of `coordinator::deployment`.
+pub fn steps_for(meta: &ModelMeta, tech: Technique, failed: Option<usize>) -> Vec<Step> {
+    match tech {
+        Technique::Repartition => meta
+            .nodes
+            .iter()
+            .map(|n| {
+                let host = match failed {
+                    Some(f) if n.index == f => {
+                        if f == 1 {
+                            2
+                        } else {
+                            f - 1
+                        }
+                    }
+                    _ => n.index,
+                };
+                Step {
+                    unit: UnitKind::Node(n.index),
+                    host,
+                }
+            })
+            .collect(),
+        Technique::EarlyExit(e) => meta
+            .nodes
+            .iter()
+            .filter(|n| n.index <= e)
+            .map(|n| Step {
+                unit: UnitKind::Node(n.index),
+                host: n.index,
+            })
+            .chain(std::iter::once(Step {
+                unit: UnitKind::Exit(e),
+                host: e,
+            }))
+            .collect(),
+        Technique::SkipConnection(k) => meta
+            .nodes
+            .iter()
+            .filter(|n| n.index != k)
+            .map(|n| Step {
+                unit: UnitKind::Node(n.index),
+                host: n.index,
+            })
+            .collect(),
+    }
+}
+
+/// Convenience: healthy full pipeline.
+pub fn healthy_path(meta: &ModelMeta) -> Vec<Step> {
+    steps_for(meta, Technique::Repartition, None)
+}
+
+/// The simulated cluster for one deployed model.
+pub struct EdgeCluster<'a> {
+    engine: &'a Engine,
+    store: &'a ArtifactStore,
+    pub meta: &'a ModelMeta,
+    link: LinkModel,
+    status: Vec<NodeStatus>, // index 0 unused; 1-based node ids
+    units: RefCell<HashMap<(UnitKind, usize), Rc<crate::runtime::UnitExecutable>>>,
+    rng: RefCell<Rng>,
+}
+
+impl<'a> EdgeCluster<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        store: &'a ArtifactStore,
+        meta: &'a ModelMeta,
+        link_cfg: LinkConfig,
+        seed: u64,
+    ) -> EdgeCluster<'a> {
+        EdgeCluster {
+            engine,
+            store,
+            meta,
+            link: LinkModel::new(link_cfg),
+            status: vec![NodeStatus::Up; meta.num_nodes + 1],
+            units: RefCell::new(HashMap::new()),
+            rng: RefCell::new(Rng::new(seed)),
+        }
+    }
+
+    pub fn link(&self) -> &LinkModel {
+        &self.link
+    }
+
+    // ----- liveness -------------------------------------------------------
+
+    pub fn fail(&mut self, node: usize) {
+        self.status[node] = NodeStatus::Down;
+    }
+
+    pub fn restore(&mut self, node: usize) {
+        self.status[node] = NodeStatus::Up;
+    }
+
+    pub fn is_up(&self, node: usize) -> bool {
+        self.status[node] == NodeStatus::Up
+    }
+
+    pub fn alive_nodes(&self) -> Vec<usize> {
+        (1..=self.meta.num_nodes).filter(|&n| self.is_up(n)).collect()
+    }
+
+    pub fn failed_nodes(&self) -> Vec<usize> {
+        (1..=self.meta.num_nodes).filter(|&n| !self.is_up(n)).collect()
+    }
+
+    // ----- unit loading (lazy, cached) -------------------------------------
+
+    pub fn unit(&self, kind: UnitKind, batch: usize) -> Result<Rc<crate::runtime::UnitExecutable>> {
+        if let Some(u) = self.units.borrow().get(&(kind, batch)) {
+            return Ok(u.clone());
+        }
+        let u = Rc::new(
+            self.store
+                .load_unit(self.engine, &self.meta.name, kind, batch)?,
+        );
+        self.units.borrow_mut().insert((kind, batch), u.clone());
+        Ok(u)
+    }
+
+    /// Pre-compile every node block (and exit heads) at a batch size.
+    pub fn preload(&self, batch: usize, with_exits: bool) -> Result<()> {
+        for n in &self.meta.nodes {
+            self.unit(UnitKind::Node(n.index), batch)?;
+        }
+        if with_exits {
+            for e in &self.meta.exits {
+                self.unit(UnitKind::Exit(e.after_node), batch)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn loaded_units(&self) -> usize {
+        self.units.borrow().len()
+    }
+
+    // ----- execution --------------------------------------------------------
+
+    /// Execute a step sequence on an input batch, checking host liveness.
+    pub fn execute_steps(
+        &self,
+        steps: &[Step],
+        x: &HostTensor,
+    ) -> Result<(HostTensor, PathTiming)> {
+        if steps.is_empty() {
+            bail!("empty path");
+        }
+        let batch = x.shape[0];
+        let mut timing = PathTiming::default();
+        let mut act = x.clone();
+        let mut prev_host: Option<usize> = None;
+        for (i, step) in steps.iter().enumerate() {
+            if !self.is_up(step.host) {
+                bail!("step {i} ({:?}) hosted on failed node {}", step.unit, step.host);
+            }
+            if let Some(p) = prev_host {
+                if step.host != p {
+                    let mut ms = self
+                        .link
+                        .sample_ms(act.bytes(), &mut self.rng.borrow_mut());
+                    // Non-adjacent forward hop (a skip reroute) pays one
+                    // extra base latency.
+                    if step.host > p + 1 {
+                        ms += self.link.skip_extra_ms();
+                    }
+                    timing.network_ms += ms;
+                }
+            }
+            let unit = self.unit(step.unit, batch)?;
+            let t0 = Instant::now();
+            act = unit.run(self.engine, &act)?;
+            timing
+                .compute_ms
+                .push((step.unit, t0.elapsed().as_secs_f64() * 1e3));
+            prev_host = Some(step.host);
+        }
+        Ok((act, timing))
+    }
+
+    /// Execute a technique's path under an optional failure.
+    pub fn execute_technique(
+        &self,
+        tech: Technique,
+        failed: Option<usize>,
+        x: &HostTensor,
+    ) -> Result<(HostTensor, PathTiming)> {
+        self.execute_steps(&steps_for(self.meta, tech, failed), x)
+    }
+
+    /// Measured accuracy of a technique over (images, labels), running the
+    /// real pipeline in batches.
+    pub fn measure_accuracy(
+        &self,
+        tech: Technique,
+        failed: Option<usize>,
+        images: &HostTensor,
+        labels: &[i32],
+        batch: usize,
+    ) -> Result<f64> {
+        let n = images.shape[0];
+        if n != labels.len() {
+            bail!("images/labels length mismatch");
+        }
+        let steps = steps_for(self.meta, tech, failed);
+        let mut correct = 0usize;
+        let mut done = 0usize;
+        while done + batch <= n {
+            let xb = images.slice0(done, done + batch)?;
+            let (logits, _) = self.execute_steps(&steps, &xb)?;
+            for (pred, &y) in logits
+                .argmax_rows()
+                .iter()
+                .zip(&labels[done..done + batch])
+            {
+                if *pred as i32 == y {
+                    correct += 1;
+                }
+            }
+            done += batch;
+        }
+        if done == 0 {
+            bail!("eval set smaller than batch size");
+        }
+        Ok(correct as f64 / done as f64)
+    }
+
+    /// Measured end-to-end latency (mean over `reps`) of a technique at
+    /// batch 1, ms (real compute + modeled network).
+    pub fn measure_latency(
+        &self,
+        tech: Technique,
+        failed: Option<usize>,
+        sample: &HostTensor,
+        reps: usize,
+    ) -> Result<f64> {
+        let steps = steps_for(self.meta, tech, failed);
+        self.execute_steps(&steps, sample)?; // warmup: compile + cache
+        let mut total = 0.0;
+        for _ in 0..reps {
+            let (_, timing) = self.execute_steps(&steps, sample)?;
+            total += timing.total_ms();
+        }
+        Ok(total / reps.max(1) as f64)
+    }
+
+    /// Like [`measure_latency`], but returns (compute_ms, network_ms)
+    /// separately — the platform-2 transform scales only compute.
+    pub fn measure_latency_split(
+        &self,
+        tech: Technique,
+        failed: Option<usize>,
+        sample: &HostTensor,
+        reps: usize,
+    ) -> Result<(f64, f64)> {
+        let steps = steps_for(self.meta, tech, failed);
+        self.execute_steps(&steps, sample)?; // warmup
+        let (mut comp, mut net) = (0.0, 0.0);
+        for _ in 0..reps {
+            let (_, timing) = self.execute_steps(&steps, sample)?;
+            comp += timing.total_compute_ms();
+            net += timing.network_ms;
+        }
+        let r = reps.max(1) as f64;
+        Ok((comp / r, net / r))
+    }
+
+    /// Analytic (jitter-free) network time of a step sequence — the value
+    /// the latency *predictor* adds for transfers.
+    pub fn expected_network_ms(&self, steps: &[Step]) -> f64 {
+        expected_network_ms(self.meta, &self.link, steps)
+    }
+}
+
+/// Analytic network time of a step sequence under a link model.
+pub fn expected_network_ms(meta: &ModelMeta, link: &LinkModel, steps: &[Step]) -> f64 {
+    let mut total = 0.0;
+    let mut prev: Option<(usize, usize)> = None; // (host, out_bytes of last node unit)
+    let mut last_bytes = 0usize;
+    for step in steps {
+        if let Some((p, _)) = prev {
+            if step.host != p {
+                total += link.expected_ms(last_bytes);
+                if step.host > p + 1 {
+                    total += link.skip_extra_ms();
+                }
+            }
+        }
+        if let UnitKind::Node(n) = step.unit {
+            last_bytes = meta.node(n).map(|m| m.out_bytes()).unwrap_or(0);
+        }
+        prev = Some((step.host, last_bytes));
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::model::test_fixtures::tiny_model;
+
+    #[test]
+    fn steps_healthy() {
+        let m = tiny_model();
+        let p = healthy_path(&m);
+        assert_eq!(p.len(), 5);
+        assert!(p.iter().enumerate().all(|(i, s)| s.host == i + 1));
+    }
+
+    #[test]
+    fn steps_repartition_rehosts_failed_block() {
+        let m = tiny_model();
+        let p = steps_for(&m, Technique::Repartition, Some(3));
+        assert_eq!(p.len(), 5, "all blocks still execute");
+        let s3 = p.iter().find(|s| s.unit == UnitKind::Node(3)).unwrap();
+        assert_eq!(s3.host, 2, "failed block re-hosted on predecessor");
+        // node-1 failure re-hosts forward
+        let p1 = steps_for(&m, Technique::Repartition, Some(1));
+        assert_eq!(
+            p1.iter().find(|s| s.unit == UnitKind::Node(1)).unwrap().host,
+            2
+        );
+    }
+
+    #[test]
+    fn steps_exit_and_skip() {
+        let m = tiny_model();
+        let p = steps_for(&m, Technique::EarlyExit(2), Some(3));
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.last().unwrap().unit, UnitKind::Exit(2));
+        assert_eq!(p.last().unwrap().host, 2);
+        let p = steps_for(&m, Technique::SkipConnection(3), Some(3));
+        assert_eq!(p.len(), 4);
+        assert!(!p.iter().any(|s| s.host == 3));
+    }
+
+    #[test]
+    fn prop_steps_never_touch_failed_host() {
+        use crate::util::proptest::{check, prop_assert};
+        let m = tiny_model();
+        check(100, 42, |g| {
+            let f = g.usize(2, 4);
+            let techniques = [
+                Technique::EarlyExit(f - 1),
+                Technique::SkipConnection(f),
+                Technique::Repartition,
+            ];
+            for t in techniques {
+                let steps = steps_for(&m, t, Some(f));
+                match t {
+                    Technique::Repartition => {}
+                    _ => prop_assert(
+                        steps.iter().all(|s| s.host != f),
+                        "exit/skip paths must avoid the failed node",
+                    )?,
+                }
+                // repartition never hosts anything on the failed node
+                if let Technique::Repartition = t {
+                    prop_assert(
+                        steps.iter().all(|s| s.host != f),
+                        "repartition must re-host off the failed node",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,401 @@
+//! Configuration system: a TOML-subset loader + typed config structs with
+//! validation and defaults.
+//!
+//! The parser supports the subset of TOML the configs use: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / float / int / bool
+//! / homogeneous-array values, and `#` comments. Unknown keys are rejected
+//! by `Config::from_kv` so typos fail loudly.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Flat key-value view of a TOML-subset document ("section.key" -> value).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section header", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, parse_value(v.trim(), lineno + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside of quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<TomlValue> {
+    if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+        return Ok(TomlValue::Str(v[1..v.len() - 1].to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if v.starts_with('[') && v.ends_with(']') {
+        let inner = &v[1..v.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("line {lineno}: cannot parse value '{v}'")
+}
+
+// ---------------------------------------------------------------------------
+// Typed configuration
+// ---------------------------------------------------------------------------
+
+/// User-defined objectives for the CONTINUER scheduler (paper Eq. 2): the
+/// weight of each objective; 0 means "no threshold specified".
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objectives {
+    pub w_accuracy: f64,
+    pub w_latency: f64,
+    pub w_downtime: f64,
+}
+
+impl Default for Objectives {
+    fn default() -> Self {
+        Objectives {
+            w_accuracy: 0.5,
+            w_latency: 0.3,
+            w_downtime: 0.2,
+        }
+    }
+}
+
+impl Objectives {
+    pub fn new(w_accuracy: f64, w_latency: f64, w_downtime: f64) -> Objectives {
+        Objectives {
+            w_accuracy,
+            w_latency,
+            w_downtime,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, w) in [
+            ("accuracy", self.w_accuracy),
+            ("latency", self.w_latency),
+            ("downtime", self.w_downtime),
+        ] {
+            if !(0.0..=1.0).contains(&w) {
+                bail!("objective weight {name} = {w} outside [0, 1]");
+            }
+        }
+        if self.w_accuracy + self.w_latency + self.w_downtime <= 0.0 {
+            bail!("at least one objective weight must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Simulated network link parameters (DESIGN.md §1.4).
+#[derive(Debug, Clone)]
+pub struct LinkConfig {
+    /// One-way base latency per hop, milliseconds.
+    pub latency_ms: f64,
+    /// Bandwidth, megabytes/second.
+    pub bandwidth_mbps: f64,
+    /// Jitter fraction (uniform +- on the base latency).
+    pub jitter: f64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig {
+            latency_ms: 0.2,
+            bandwidth_mbps: 800.0,
+            jitter: 0.05,
+        }
+    }
+}
+
+/// Platform latency model (DESIGN.md §1.2): Platform 1 is the measured
+/// host; Platform 2 scales measured latencies per layer kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Platform {
+    /// The host CPU, measured through PJRT.
+    Host,
+    /// Deterministic slow-platform transform of host measurements.
+    Scaled { factor: f64, noise: f64 },
+}
+
+impl Platform {
+    pub fn name(&self) -> String {
+        match self {
+            Platform::Host => "platform1".into(),
+            Platform::Scaled { .. } => "platform2".into(),
+        }
+    }
+
+    pub fn platform2() -> Platform {
+        // i7-8700 (3.2GHz) vs i5-8250U (1.6GHz): ~2x clock, plus modest
+        // per-measurement noise.
+        Platform::Scaled {
+            factor: 2.1,
+            noise: 0.04,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Directory holding manifest.json and the compiled artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Model to serve ("resnet32" | "mobilenetv2").
+    pub model: String,
+    /// Scheduler objectives.
+    pub objectives: Objectives,
+    /// Network link model.
+    pub link: LinkConfig,
+    /// Empirical "reinstate connections" downtime for repartition/skip
+    /// (paper §IV-B-iii, from NEUKONFIG), milliseconds.
+    pub reinstate_ms: f64,
+    /// Serving batcher: max batch size and max queue delay.
+    pub max_batch: usize,
+    pub batch_timeout_ms: f64,
+    /// Worker threads for parallel sections.
+    pub workers: usize,
+    /// Seed for all simulation randomness.
+    pub seed: u64,
+    /// Latency-profiler repetitions per micro artifact.
+    pub profile_reps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "resnet32".into(),
+            objectives: Objectives::default(),
+            link: LinkConfig::default(),
+            reinstate_ms: 0.99,
+            max_batch: 8,
+            batch_timeout_ms: 2.0,
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            seed: 0,
+            profile_reps: 30,
+        }
+    }
+}
+
+impl Config {
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let kv = parse_toml(&text)?;
+        Config::from_kv(&kv)
+    }
+
+    pub fn from_kv(kv: &BTreeMap<String, TomlValue>) -> Result<Config> {
+        let mut cfg = Config::default();
+        for (key, val) in kv {
+            let get_f64 =
+                || -> Result<f64> { val.as_f64().ok_or_else(|| anyhow!("{key}: expected number")) };
+            let get_usize = || -> Result<usize> {
+                val.as_usize()
+                    .ok_or_else(|| anyhow!("{key}: expected non-negative integer"))
+            };
+            match key.as_str() {
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = PathBuf::from(
+                        val.as_str().ok_or_else(|| anyhow!("{key}: expected string"))?,
+                    )
+                }
+                "model" => {
+                    cfg.model = val
+                        .as_str()
+                        .ok_or_else(|| anyhow!("{key}: expected string"))?
+                        .to_string()
+                }
+                "seed" => cfg.seed = get_usize()? as u64,
+                "workers" => cfg.workers = get_usize()?,
+                "profile_reps" => cfg.profile_reps = get_usize()?,
+                "reinstate_ms" => cfg.reinstate_ms = get_f64()?,
+                "objectives.accuracy" => cfg.objectives.w_accuracy = get_f64()?,
+                "objectives.latency" => cfg.objectives.w_latency = get_f64()?,
+                "objectives.downtime" => cfg.objectives.w_downtime = get_f64()?,
+                "link.latency_ms" => cfg.link.latency_ms = get_f64()?,
+                "link.bandwidth_mbps" => cfg.link.bandwidth_mbps = get_f64()?,
+                "link.jitter" => cfg.link.jitter = get_f64()?,
+                "batcher.max_batch" => cfg.max_batch = get_usize()?,
+                "batcher.timeout_ms" => cfg.batch_timeout_ms = get_f64()?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.objectives.validate()?;
+        if self.model != "resnet32" && self.model != "mobilenetv2" {
+            bail!("unknown model '{}'", self.model);
+        }
+        if self.link.bandwidth_mbps <= 0.0 {
+            bail!("link.bandwidth_mbps must be positive");
+        }
+        if self.max_batch == 0 {
+            bail!("batcher.max_batch must be >= 1");
+        }
+        if self.profile_reps == 0 {
+            bail!("profile_reps must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_toml() {
+        let kv = parse_toml(
+            "# comment\nmodel = \"resnet32\"\nseed = 42\n[link]\nlatency_ms = 1.5\n",
+        )
+        .unwrap();
+        assert_eq!(kv["model"], TomlValue::Str("resnet32".into()));
+        assert_eq!(kv["seed"], TomlValue::Int(42));
+        assert_eq!(kv["link.latency_ms"], TomlValue::Float(1.5));
+    }
+
+    #[test]
+    fn parse_arrays_and_bools() {
+        let kv = parse_toml("xs = [1, 2, 3]\nok = true\n").unwrap();
+        assert_eq!(
+            kv["xs"],
+            TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+        assert_eq!(kv["ok"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let kv = parse_toml("s = \"a#b\"\n").unwrap();
+        assert_eq!(kv["s"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn config_from_kv_roundtrip() {
+        let kv = parse_toml(
+            "model = \"mobilenetv2\"\n[objectives]\naccuracy = 0.7\nlatency = 0.2\ndowntime = 0.1\n[batcher]\nmax_batch = 4\ntimeout_ms = 1.0\n",
+        )
+        .unwrap();
+        let cfg = Config::from_kv(&kv).unwrap();
+        assert_eq!(cfg.model, "mobilenetv2");
+        assert_eq!(cfg.objectives.w_accuracy, 0.7);
+        assert_eq!(cfg.max_batch, 4);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let kv = parse_toml("nonsense = 1\n").unwrap();
+        assert!(Config::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn invalid_weights_rejected() {
+        let o = Objectives::new(2.0, 0.0, 0.0);
+        assert!(o.validate().is_err());
+        let o = Objectives::new(0.0, 0.0, 0.0);
+        assert!(o.validate().is_err());
+        assert!(Objectives::default().validate().is_ok());
+    }
+
+    #[test]
+    fn malformed_toml_errors() {
+        assert!(parse_toml("[unclosed\n").is_err());
+        assert!(parse_toml("novalue\n").is_err());
+        assert!(parse_toml("x = @@\n").is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Dynamic batcher for the serving pipeline.
+//!
+//! The AOT artifacts are compiled at fixed batch sizes (manifest
+//! `batch_sizes`, typically {1, 32}), so the batcher's job is to pick, for
+//! the current queue depth and age, which compiled batch size to dispatch
+//! — batch as aggressively as the queue allows without letting the head of
+//! the queue exceed its timeout.
+
+/// Batching policy configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Batch sizes with compiled artifacts, ascending (e.g. [1, 32]).
+    pub supported: Vec<usize>,
+    /// Max time the queue head may wait for a bigger batch, ms.
+    pub timeout_ms: f64,
+    /// Upper bound on dispatch size (<= max supported).
+    pub max_batch: usize,
+}
+
+impl BatcherConfig {
+    pub fn new(mut supported: Vec<usize>, timeout_ms: f64, max_batch: usize) -> BatcherConfig {
+        supported.sort_unstable();
+        supported.dedup();
+        assert!(!supported.is_empty(), "batcher needs >= 1 batch size");
+        BatcherConfig {
+            supported,
+            timeout_ms,
+            max_batch: max_batch.max(1),
+        }
+    }
+}
+
+/// A dispatch decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Run the first `n` queued requests as one batch of compiled size `n`.
+    Now(usize),
+    /// Keep waiting (queue too small and head not timed out).
+    Wait,
+}
+
+/// Decide what to dispatch given queue depth and the head's age.
+///
+/// Policy: take the largest supported size `<= min(queue_len, max_batch)`;
+/// if none fits (queue smaller than the smallest supported size), dispatch
+/// the smallest supported size anyway once the head is older than
+/// `timeout_ms` **and** the queue has at least one request; otherwise wait
+/// for more arrivals. Note the smallest supported size is typically 1, so
+/// a timed-out head always goes out alone rather than waiting for a batch.
+pub fn decide(cfg: &BatcherConfig, queue_len: usize, head_age_ms: f64) -> Dispatch {
+    if queue_len == 0 {
+        return Dispatch::Wait;
+    }
+    let cap = queue_len.min(cfg.max_batch);
+    let fit = cfg.supported.iter().rev().find(|&&s| s <= cap).copied();
+    match fit {
+        Some(s) => {
+            // A bigger batch exists and could still fill: wait unless the
+            // head is timing out or nothing bigger is possible.
+            let bigger_possible = cfg
+                .supported
+                .iter()
+                .any(|&b| b > s && b <= cfg.max_batch);
+            if bigger_possible && head_age_ms < cfg.timeout_ms {
+                Dispatch::Wait
+            } else {
+                Dispatch::Now(s)
+            }
+        }
+        None => {
+            // queue smaller than smallest compiled batch
+            if head_age_ms >= cfg.timeout_ms {
+                Dispatch::Now(*cfg.supported.first().unwrap())
+            } else {
+                Dispatch::Wait
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig::new(vec![1, 32], 2.0, 32)
+    }
+
+    #[test]
+    fn empty_queue_waits() {
+        assert_eq!(decide(&cfg(), 0, 100.0), Dispatch::Wait);
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        assert_eq!(decide(&cfg(), 32, 0.0), Dispatch::Now(32));
+        assert_eq!(decide(&cfg(), 50, 0.0), Dispatch::Now(32));
+    }
+
+    #[test]
+    fn small_queue_waits_until_timeout() {
+        assert_eq!(decide(&cfg(), 3, 0.5), Dispatch::Wait);
+        assert_eq!(decide(&cfg(), 3, 2.5), Dispatch::Now(1));
+    }
+
+    #[test]
+    fn max_batch_caps_dispatch() {
+        let c = BatcherConfig::new(vec![1, 32], 2.0, 8);
+        // 32 not allowed (max 8); largest supported <= 8 is 1
+        assert_eq!(decide(&c, 40, 0.0), Dispatch::Now(1));
+    }
+
+    #[test]
+    fn single_size_always_dispatches() {
+        let c = BatcherConfig::new(vec![1], 5.0, 4);
+        assert_eq!(decide(&c, 3, 0.0), Dispatch::Now(1));
+    }
+
+    #[test]
+    fn prop_dispatch_is_supported_and_fits() {
+        use crate::util::proptest::{check, prop_assert};
+        check(300, 77, |g| {
+            let mut sizes = vec![1usize];
+            if g.bool() {
+                sizes.push(g.usize(2, 64));
+            }
+            let c = BatcherConfig::new(sizes, g.f64(0.1, 10.0), g.usize(1, 64));
+            let qlen = g.usize(0, 100);
+            let age = g.f64(0.0, 20.0);
+            match decide(&c, qlen, age) {
+                Dispatch::Wait => Ok(()),
+                Dispatch::Now(n) => {
+                    prop_assert(c.supported.contains(&n), "dispatch size must be compiled")?;
+                    prop_assert(n <= qlen.max(1), "cannot dispatch more than queued")?;
+                    prop_assert(n <= c.max_batch.max(1), "must respect max_batch")
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,117 @@
+//! Runtime estimator: turns the fitted prediction models into the
+//! per-candidate metrics the Scheduler consumes (paper Fig. 1: the bridge
+//! between the profiler phase and the runtime phase).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::cluster::link::LinkModel;
+use crate::cluster::sim::{expected_network_ms, steps_for};
+use crate::dnn::model::ModelMeta;
+use crate::dnn::variants::{candidates, Technique};
+use crate::predict::{AccuracyModel, LatencyModel};
+use crate::runtime::UnitKind;
+
+use super::profiler::DowntimeTable;
+use super::scheduler::CandidateMetrics;
+
+/// Bundles the two prediction models + the link/downtime constants for one
+/// deployed model on one platform.
+pub struct Estimator<'a> {
+    pub meta: &'a ModelMeta,
+    pub latency: &'a LatencyModel,
+    pub accuracy: &'a AccuracyModel,
+    pub link: &'a LinkModel,
+    pub downtime: &'a DowntimeTable,
+    /// Connection-reinstate constant (paper §IV-B-iii), ms.
+    pub reinstate_ms: f64,
+    /// Memoised per-unit compute predictions (the layer hyperparameters of
+    /// a deployed unit never change, so its GBDT sum is a constant —
+    /// caching it removes per-layer tree walks from the failover path;
+    /// EXPERIMENTS.md §Perf).
+    unit_cache: RefCell<HashMap<UnitKind, f64>>,
+}
+
+impl<'a> Estimator<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        meta: &'a ModelMeta,
+        latency: &'a LatencyModel,
+        accuracy: &'a AccuracyModel,
+        link: &'a LinkModel,
+        downtime: &'a DowntimeTable,
+        reinstate_ms: f64,
+    ) -> Estimator<'a> {
+        Estimator {
+            meta,
+            latency,
+            accuracy,
+            link,
+            downtime,
+            reinstate_ms,
+            unit_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn unit_compute_ms(&self, unit: UnitKind) -> f64 {
+        if let Some(&v) = self.unit_cache.borrow().get(&unit) {
+            return v;
+        }
+        let layers = match unit {
+            UnitKind::Node(n) => self.meta.node(n).map(|m| &m.layers).ok(),
+            UnitKind::Exit(e) => self.meta.exit(e).map(|m| &m.layers).ok(),
+        };
+        let v = layers
+            .map(|ls| self.latency.predict_path(ls.iter()))
+            .unwrap_or(0.0);
+        self.unit_cache.borrow_mut().insert(unit, v);
+        v
+    }
+
+    /// Predicted end-to-end latency (ms) of a technique under a failure:
+    /// sum of per-layer latency predictions over every unit on the path,
+    /// plus the analytic link time of the step sequence.
+    pub fn predict_latency_ms(&self, tech: Technique, failed: Option<usize>) -> f64 {
+        let steps = steps_for(self.meta, tech, failed);
+        let compute: f64 = steps.iter().map(|s| self.unit_compute_ms(s.unit)).sum();
+        compute + expected_network_ms(self.meta, self.link, &steps)
+    }
+
+    /// Predicted accuracy (%) of a technique.
+    pub fn predict_accuracy(&self, tech: Technique) -> Result<f64> {
+        self.accuracy.predict(self.meta, tech)
+    }
+
+    /// Empirical downtime (ms) of a technique: the profiled
+    /// predict-and-select time plus the reinstate constant where the
+    /// paper applies it (repartition, skip).
+    pub fn downtime_ms(&self, tech: Technique) -> f64 {
+        let base = self
+            .downtime
+            .get(tech.kind_name())
+            .copied()
+            .unwrap_or(1.0);
+        match tech {
+            Technique::EarlyExit(_) => base,
+            _ => base + self.reinstate_ms,
+        }
+    }
+
+    /// Full candidate metrics for a failure, in the scheduler's canonical
+    /// order (repartition, early-exit, skip).
+    pub fn candidate_metrics(&self, failed: usize) -> Result<Vec<CandidateMetrics>> {
+        candidates(self.meta, failed)
+            .into_iter()
+            .map(|tech| {
+                Ok(CandidateMetrics {
+                    technique: tech,
+                    accuracy: self.predict_accuracy(tech)?,
+                    latency_ms: self.predict_latency_ms(tech, Some(failed)),
+                    downtime_ms: self.downtime_ms(tech),
+                })
+            })
+            .collect()
+    }
+}

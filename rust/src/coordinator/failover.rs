@@ -1,0 +1,128 @@
+//! Failover controller: the runtime-phase state machine that reacts to a
+//! node failure by querying the estimator, running the Scheduler and
+//! reconfiguring the serving path (paper Fig. 1, runtime phase).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::Objectives;
+use crate::dnn::variants::Technique;
+
+use super::estimator::Estimator;
+use super::scheduler::{select, CandidateMetrics, Decision};
+
+/// Current serving mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mode {
+    /// All nodes up; full pipeline.
+    Healthy,
+    /// Operating under a recovery technique after `failed` failed.
+    Degraded { failed: usize, technique: Technique },
+}
+
+/// Timing breakdown of one failover (the paper's downtime components).
+#[derive(Debug, Clone)]
+pub struct FailoverReport {
+    pub failed_node: usize,
+    pub decision: Decision,
+    /// Time to build candidate metrics (predictor queries), ms.
+    pub predict_ms: f64,
+    /// Time to run the scheduler selection, ms.
+    pub select_ms: f64,
+    /// Reinstate constant applied for the chosen technique, ms.
+    pub reinstate_ms: f64,
+    /// Full candidate metrics as seen by the scheduler.
+    pub candidates: Vec<CandidateMetrics>,
+}
+
+impl FailoverReport {
+    /// Total downtime attributed to selection (paper Table VIII):
+    /// prediction retrieval + selection + reinstate.
+    pub fn downtime_ms(&self) -> f64 {
+        self.predict_ms + self.select_ms + self.reinstate_ms
+    }
+}
+
+/// The failover controller.
+pub struct Failover {
+    pub objectives: Objectives,
+    pub mode: Mode,
+    pub history: Vec<FailoverReport>,
+}
+
+impl Failover {
+    pub fn new(objectives: Objectives) -> Failover {
+        Failover {
+            objectives,
+            mode: Mode::Healthy,
+            history: Vec::new(),
+        }
+    }
+
+    /// Handle the failure of `failed`: query predictions, select, switch
+    /// mode. Returns the report (also kept in history).
+    pub fn on_failure(&mut self, est: &Estimator, failed: usize) -> Result<FailoverReport> {
+        let t0 = Instant::now();
+        let candidates = est.candidate_metrics(failed)?;
+        let predict_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = Instant::now();
+        let decision = select(&candidates, &self.objectives)?;
+        let select_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+        let reinstate_ms = match decision.chosen {
+            Technique::EarlyExit(_) => 0.0,
+            _ => est.reinstate_ms,
+        };
+        self.mode = Mode::Degraded {
+            failed,
+            technique: decision.chosen,
+        };
+        let report = FailoverReport {
+            failed_node: failed,
+            decision,
+            predict_ms,
+            select_ms,
+            reinstate_ms,
+            candidates,
+        };
+        self.history.push(report.clone());
+        Ok(report)
+    }
+
+    /// Node recovered: back to the healthy pipeline.
+    pub fn on_recovery(&mut self, node: usize) {
+        if let Mode::Degraded { failed, .. } = self.mode {
+            if failed == node {
+                self.mode = Mode::Healthy;
+            }
+        }
+    }
+
+    pub fn technique(&self) -> Option<Technique> {
+        match self.mode {
+            Mode::Healthy => None,
+            Mode::Degraded { technique, .. } => Some(technique),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovery_only_clears_matching_failure() {
+        let mut f = Failover::new(Objectives::default());
+        f.mode = Mode::Degraded {
+            failed: 3,
+            technique: Technique::Repartition,
+        };
+        f.on_recovery(5);
+        assert!(matches!(f.mode, Mode::Degraded { failed: 3, .. }));
+        f.on_recovery(3);
+        assert_eq!(f.mode, Mode::Healthy);
+        assert_eq!(f.technique(), None);
+    }
+}

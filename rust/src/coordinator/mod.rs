@@ -1,0 +1,14 @@
+//! The CONTINUER framework (paper §III-IV): profiler phase (offline) and
+//! runtime phase (scheduler + failover + serving loop).
+
+pub mod batcher;
+pub mod estimator;
+pub mod failover;
+pub mod profiler;
+pub mod scheduler;
+pub mod service;
+
+pub use estimator::Estimator;
+pub use failover::{Failover, FailoverReport, Mode};
+pub use profiler::{fit_platform, platform_transform, DowntimeTable, LayerProfiler, PlatformLatencyModel};
+pub use scheduler::{select, weight_sweep, CandidateMetrics, Decision};

@@ -1,0 +1,206 @@
+//! Profiler phase (paper §IV-A): offline collection of everything the
+//! runtime scheduler needs.
+//!
+//! - Layer latency sweep: compiles and times each single-layer micro
+//!   artifact (Table I hyperparameter grid) on the real PJRT runtime —
+//!   Platform 1. Platform 2 applies the deterministic slow-platform
+//!   transform (DESIGN.md §1.2).
+//! - Fits the Latency Prediction Model per platform (Table II quality).
+//! - Fits the Accuracy Prediction Model from the training histories.
+//! - Measures the empirical downtime of each technique (Table VIII).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Platform;
+use crate::dnn::layers::LayerKind;
+use crate::predict::{GbdtParams, KindQuality, LatencyModel, LayerSample};
+use crate::runtime::{ArtifactStore, Engine, HostTensor, MicroEntry};
+use crate::util::rng::Rng;
+
+/// Profiles the layer micro-benchmarks through the PJRT runtime.
+pub struct LayerProfiler<'a> {
+    pub engine: &'a Engine,
+    pub store: &'a ArtifactStore,
+}
+
+impl<'a> LayerProfiler<'a> {
+    /// Measure every micro artifact: mean latency over `reps` runs after a
+    /// warmup run (which also covers compilation).
+    pub fn profile_micro(&self, reps: usize) -> Result<Vec<LayerSample>> {
+        let mut rng = Rng::new(0x11AE);
+        let mut out = Vec::with_capacity(self.store.micro.len());
+        for entry in &self.store.micro {
+            let ms = self.time_micro(entry, reps, &mut rng)?;
+            out.push(LayerSample {
+                spec: entry.spec.clone(),
+                latency_ms: ms,
+            });
+        }
+        Ok(out)
+    }
+
+    fn micro_inputs(&self, entry: &MicroEntry, rng: &mut Rng) -> Vec<HostTensor> {
+        let s = &entry.spec;
+        let shape = if s.kind == LayerKind::Dense {
+            vec![1, s.input_c]
+        } else {
+            vec![1, s.input_h, s.input_w, s.input_c]
+        };
+        let n_inputs = if s.kind == LayerKind::Add { 2 } else { 1 };
+        (0..n_inputs)
+            .map(|_| {
+                let n: usize = shape.iter().product();
+                HostTensor {
+                    shape: shape.clone(),
+                    data: (0..n).map(|_| rng.normal() as f32).collect(),
+                }
+            })
+            .collect()
+    }
+
+    fn time_micro(&self, entry: &MicroEntry, reps: usize, rng: &mut Rng) -> Result<f64> {
+        let exe = self.engine.compile_file(&self.store.micro_path(entry))?;
+        let inputs = self.micro_inputs(entry, rng);
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| self.engine.upload(t))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let run_once = || -> Result<f64> {
+            let t0 = Instant::now();
+            let r = exe
+                .execute_b(&refs)
+                .map_err(|e| anyhow!("micro run {}: {e}", entry.artifact))?;
+            // Synchronise: pull the result to host.
+            let _ = r[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("micro sync {}: {e}", entry.artifact))?;
+            Ok(t0.elapsed().as_secs_f64() * 1e3)
+        };
+        // warmup (also covers compilation effects)
+        let first = run_once()?;
+        // Adaptive repetition: tiny layers need many reps for a stable
+        // median on a busy single-core host; cap total time per artifact.
+        let target_total_ms = 25.0;
+        let reps = ((target_total_ms / first.max(1e-3)) as usize)
+            .clamp(reps.max(10), 400);
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            times.push(run_once()?);
+        }
+        // Median: robust against scheduler-interrupt outliers.
+        Ok(crate::util::stats::median(&times))
+    }
+}
+
+/// Apply a platform model to measured samples (Platform 2 of DESIGN.md
+/// §1.2): per-kind deterministic scale (slow cores hurt compute-dense
+/// layers slightly more) plus bounded pseudo-random measurement noise.
+pub fn platform_transform(
+    samples: &[LayerSample],
+    platform: &Platform,
+    seed: u64,
+) -> Vec<LayerSample> {
+    match platform {
+        Platform::Host => samples.to_vec(),
+        Platform::Scaled { factor, noise } => {
+            let mut rng = Rng::new(seed ^ 0x9F2C);
+            samples
+                .iter()
+                .map(|s| {
+                    // Deterministic per-kind modifier in [0.95, 1.10].
+                    let k = s.spec.kind as usize;
+                    let kind_mod = 0.95 + 0.015 * (k % 11) as f64;
+                    let jitter = 1.0 + noise * rng.normal();
+                    LayerSample {
+                        spec: s.spec.clone(),
+                        latency_ms: (s.latency_ms * factor * kind_mod * jitter).max(1e-6),
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// A fitted per-platform latency model with its Table-II quality rows.
+pub struct PlatformLatencyModel {
+    pub platform: Platform,
+    pub model: LatencyModel,
+    pub quality: Vec<KindQuality>,
+    pub samples: Vec<LayerSample>,
+}
+
+/// Fit the latency model for a platform from platform-1 measurements.
+pub fn fit_platform(
+    measured: &[LayerSample],
+    platform: Platform,
+    params: &GbdtParams,
+    seed: u64,
+) -> Result<PlatformLatencyModel> {
+    let samples = platform_transform(measured, &platform, seed);
+    let (model, quality) = LatencyModel::fit(&samples, params, seed)?;
+    Ok(PlatformLatencyModel {
+        platform,
+        model,
+        quality,
+        samples,
+    })
+}
+
+/// Empirical downtime per technique kind (paper Table VIII): measured as
+/// the time to query both prediction models for every candidate plus the
+/// scheduler selection, with the 0.99 ms connection-reinstate constant
+/// added for repartition / skip. Keys are `Technique::kind_name()`s.
+pub type DowntimeTable = BTreeMap<&'static str, f64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layers::LayerSpec;
+
+    fn sample(kind: LayerKind, h: usize, ms: f64) -> LayerSample {
+        LayerSample {
+            spec: LayerSpec {
+                kind,
+                input_h: h,
+                input_w: h,
+                input_c: 8,
+                kernel: 3,
+                stride: 1,
+                filters: 8,
+            },
+            latency_ms: ms,
+        }
+    }
+
+    #[test]
+    fn host_transform_is_identity() {
+        let s = vec![sample(LayerKind::Conv, 8, 1.0)];
+        let t = platform_transform(&s, &Platform::Host, 0);
+        assert_eq!(t[0].latency_ms, 1.0);
+    }
+
+    #[test]
+    fn scaled_transform_scales() {
+        let s: Vec<LayerSample> = (0..50).map(|i| sample(LayerKind::Conv, 8, 1.0 + i as f64)).collect();
+        let t = platform_transform(&s, &Platform::platform2(), 1);
+        let ratio: f64 = t
+            .iter()
+            .zip(&s)
+            .map(|(a, b)| a.latency_ms / b.latency_ms)
+            .sum::<f64>()
+            / s.len() as f64;
+        assert!((1.8..2.5).contains(&ratio), "mean ratio {ratio}");
+    }
+
+    #[test]
+    fn scaled_transform_deterministic() {
+        let s = vec![sample(LayerKind::Relu, 16, 0.5)];
+        let a = platform_transform(&s, &Platform::platform2(), 7);
+        let b = platform_transform(&s, &Platform::platform2(), 7);
+        assert_eq!(a[0].latency_ms, b[0].latency_ms);
+    }
+}

@@ -1,0 +1,197 @@
+//! The CONTINUER Scheduler (paper §IV-C): selects the recovery technique
+//! for a node failure from each candidate's estimated accuracy, estimated
+//! end-to-end latency and (empirical) downtime, combined by classic simple
+//! additive weighting over min-max-normalised objectives (paper Eq. 2):
+//!
+//!   select  argmax  w1·A' − w2·L' − w3·D'
+//!
+//! (accuracy is a benefit; latency and downtime are costs). Weights are
+//! the user-defined objectives; an unspecified objective gets weight 0.
+
+use anyhow::{bail, Result};
+
+use crate::config::Objectives;
+use crate::dnn::variants::Technique;
+use crate::util::stats::min_max_normalize;
+
+/// Metrics of one candidate technique, as fed to the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CandidateMetrics {
+    pub technique: Technique,
+    /// Accuracy, percent (estimated by the Accuracy Prediction Model).
+    pub accuracy: f64,
+    /// End-to-end latency, ms (estimated by the Latency Prediction Model).
+    pub latency_ms: f64,
+    /// Downtime, ms (empirical).
+    pub downtime_ms: f64,
+}
+
+/// A scoring decision with full transparency for logging/experiments.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub chosen: Technique,
+    /// (technique, score) for every candidate, in input order.
+    pub scores: Vec<(Technique, f64)>,
+}
+
+/// Score and select among candidates. Deterministic tie-break: the earlier
+/// candidate in input order wins (candidates are enumerated in the fixed
+/// order repartition, early-exit, skip).
+pub fn select(candidates: &[CandidateMetrics], weights: &Objectives) -> Result<Decision> {
+    if candidates.is_empty() {
+        bail!("scheduler: no candidate techniques");
+    }
+    weights.validate()?;
+    let acc: Vec<f64> = candidates.iter().map(|c| c.accuracy).collect();
+    let lat: Vec<f64> = candidates.iter().map(|c| c.latency_ms).collect();
+    let down: Vec<f64> = candidates.iter().map(|c| c.downtime_ms).collect();
+    let acc_n = min_max_normalize(&acc);
+    let lat_n = min_max_normalize(&lat);
+    let down_n = min_max_normalize(&down);
+    let mut scores = Vec::with_capacity(candidates.len());
+    let mut best: Option<(usize, f64)> = None;
+    for i in 0..candidates.len() {
+        let s = weights.w_accuracy * acc_n[i]
+            - weights.w_latency * lat_n[i]
+            - weights.w_downtime * down_n[i];
+        scores.push((candidates[i].technique, s));
+        if best.map(|(_, bs)| s > bs).unwrap_or(true) {
+            best = Some((i, s));
+        }
+    }
+    let (idx, _) = best.unwrap();
+    Ok(Decision {
+        chosen: candidates[idx].technique,
+        scores,
+    })
+}
+
+/// Sweep helper for Table VII: all weight combinations in {lo..hi} steps.
+pub fn weight_sweep(lo: f64, hi: f64, step: f64) -> Vec<Objectives> {
+    let mut out = Vec::new();
+    let n = ((hi - lo) / step).round() as usize;
+    for i in 0..=n {
+        for j in 0..=n {
+            for k in 0..=n {
+                out.push(Objectives::new(
+                    lo + i as f64 * step,
+                    lo + j as f64 * step,
+                    lo + k as f64 * step,
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(t: Technique, a: f64, l: f64, d: f64) -> CandidateMetrics {
+        CandidateMetrics {
+            technique: t,
+            accuracy: a,
+            latency_ms: l,
+            downtime_ms: d,
+        }
+    }
+
+    fn three() -> Vec<CandidateMetrics> {
+        vec![
+            cand(Technique::Repartition, 90.0, 30.0, 4.0), // accurate, slow
+            cand(Technique::EarlyExit(3), 70.0, 8.0, 1.0), // fast, inaccurate
+            cand(Technique::SkipConnection(4), 85.0, 25.0, 3.0),
+        ]
+    }
+
+    #[test]
+    fn accuracy_heavy_picks_repartition() {
+        let d = select(&three(), &Objectives::new(0.9, 0.05, 0.05)).unwrap();
+        assert_eq!(d.chosen, Technique::Repartition);
+    }
+
+    #[test]
+    fn latency_heavy_picks_early_exit() {
+        let d = select(&three(), &Objectives::new(0.05, 0.9, 0.05)).unwrap();
+        assert_eq!(d.chosen, Technique::EarlyExit(3));
+    }
+
+    #[test]
+    fn single_candidate_trivial() {
+        let only = vec![cand(Technique::Repartition, 90.0, 30.0, 4.0)];
+        let d = select(&only, &Objectives::default()).unwrap();
+        assert_eq!(d.chosen, Technique::Repartition);
+    }
+
+    #[test]
+    fn empty_candidates_error() {
+        assert!(select(&[], &Objectives::default()).is_err());
+    }
+
+    #[test]
+    fn invalid_weights_error() {
+        assert!(select(&three(), &Objectives::new(0.0, 0.0, 0.0)).is_err());
+    }
+
+    #[test]
+    fn sweep_count_matches_paper_grid() {
+        // 0.1..0.9 step 0.1 -> 9 values per weight -> 729 combos
+        let combos = weight_sweep(0.1, 0.9, 0.1);
+        assert_eq!(combos.len(), 729);
+        assert!(combos.iter().all(|o| o.validate().is_ok()));
+    }
+
+    #[test]
+    fn scores_reported_for_all() {
+        let d = select(&three(), &Objectives::default()).unwrap();
+        assert_eq!(d.scores.len(), 3);
+    }
+
+    #[test]
+    fn normalisation_makes_scale_irrelevant() {
+        // Scaling all latencies by 1000x must not change the decision.
+        let a = select(&three(), &Objectives::default()).unwrap();
+        let scaled: Vec<CandidateMetrics> = three()
+            .iter()
+            .map(|c| CandidateMetrics {
+                latency_ms: c.latency_ms * 1000.0,
+                ..*c
+            })
+            .collect();
+        let b = select(&scaled, &Objectives::default()).unwrap();
+        assert_eq!(a.chosen, b.chosen);
+    }
+
+    #[test]
+    fn prop_chosen_has_max_score() {
+        use crate::util::proptest::{check, prop_assert};
+        check(200, 0xABCD, |g| {
+            let n = g.usize(1, 6);
+            let cands: Vec<CandidateMetrics> = (0..n)
+                .map(|i| {
+                    cand(
+                        Technique::EarlyExit(i + 1),
+                        g.f64(10.0, 100.0),
+                        g.f64(1.0, 50.0),
+                        g.f64(0.1, 20.0),
+                    )
+                })
+                .collect();
+            let w = Objectives::new(g.f64(0.1, 0.9), g.f64(0.1, 0.9), g.f64(0.1, 0.9));
+            let d = select(&cands, &w).map_err(|e| e.to_string())?;
+            let max = d
+                .scores
+                .iter()
+                .map(|(_, s)| *s)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let chosen_score = d
+                .scores
+                .iter()
+                .find(|(t, _)| *t == d.chosen)
+                .map(|(_, s)| *s)
+                .unwrap();
+            prop_assert((chosen_score - max).abs() < 1e-12, "chosen must have max score")
+        });
+    }
+}

@@ -1,0 +1,276 @@
+//! Layer metadata: the hyperparameters of paper Table I, plus the feature
+//! extraction used by the Latency Prediction Model and analytic FLOPs /
+//! bytes estimates used by the partition planner and the perf analysis.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Layer types profiled by the paper (Table I) plus the two pooling types
+/// our exit heads add.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LayerKind {
+    BatchNorm,
+    Conv,
+    Relu,
+    Dense,
+    Add,
+    Dropout,
+    DepthwiseConv,
+    GlobalAvgPool,
+    GlobalMaxPool,
+    MaxPool,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "batchnorm" => LayerKind::BatchNorm,
+            "conv" => LayerKind::Conv,
+            "relu" => LayerKind::Relu,
+            "dense" => LayerKind::Dense,
+            "add" => LayerKind::Add,
+            "dropout" => LayerKind::Dropout,
+            "depthwise_conv" => LayerKind::DepthwiseConv,
+            "global_avg_pool" => LayerKind::GlobalAvgPool,
+            "global_max_pool" => LayerKind::GlobalMaxPool,
+            "max_pool" => LayerKind::MaxPool,
+            other => return Err(anyhow!("unknown layer kind '{other}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::BatchNorm => "batchnorm",
+            LayerKind::Conv => "conv",
+            LayerKind::Relu => "relu",
+            LayerKind::Dense => "dense",
+            LayerKind::Add => "add",
+            LayerKind::Dropout => "dropout",
+            LayerKind::DepthwiseConv => "depthwise_conv",
+            LayerKind::GlobalAvgPool => "global_avg_pool",
+            LayerKind::GlobalMaxPool => "global_max_pool",
+            LayerKind::MaxPool => "max_pool",
+        }
+    }
+
+    pub const ALL: [LayerKind; 10] = [
+        LayerKind::BatchNorm,
+        LayerKind::Conv,
+        LayerKind::Relu,
+        LayerKind::Dense,
+        LayerKind::Add,
+        LayerKind::Dropout,
+        LayerKind::DepthwiseConv,
+        LayerKind::GlobalAvgPool,
+        LayerKind::GlobalMaxPool,
+        LayerKind::MaxPool,
+    ];
+}
+
+/// One layer instance with its hyperparameters (paper Table I rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub input_h: usize,
+    pub input_w: usize,
+    pub input_c: usize,
+    /// kernel size (conv / depthwise / max_pool); 0 otherwise
+    pub kernel: usize,
+    /// stride; 0 for non-spatial layers
+    pub stride: usize,
+    /// output channels (conv), units (dense); 0 otherwise
+    pub filters: usize,
+}
+
+impl LayerSpec {
+    pub fn from_json(v: &Json) -> Result<LayerSpec> {
+        let kind = LayerKind::parse(
+            v.get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("layer record missing 'kind'"))?,
+        )?;
+        let g = |k: &str| v.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok(LayerSpec {
+            kind,
+            input_h: g("input_h"),
+            input_w: g("input_w"),
+            input_c: g("input_c"),
+            kernel: g("kernel"),
+            stride: g("stride"),
+            filters: g("filters"),
+        })
+    }
+
+    /// Feature vector for the per-kind latency model. The paper's features:
+    /// input shape, input channel (+ kernel, stride, filter where
+    /// applicable); we add derived FLOPs/bytes which greatly helps a small
+    /// tree ensemble generalise.
+    pub fn features(&self) -> Vec<f64> {
+        vec![
+            self.input_h as f64,
+            self.input_w as f64,
+            self.input_c as f64,
+            self.kernel as f64,
+            self.stride.max(1) as f64,
+            self.filters as f64,
+            (self.input_h * self.input_w * self.input_c) as f64, // input volume
+            self.flops() as f64,
+            self.output_elems() as f64,
+        ]
+    }
+
+    pub const FEATURE_NAMES: [&'static str; 9] = [
+        "input_h", "input_w", "input_c", "kernel", "stride", "filters",
+        "input_volume", "flops", "output_elems",
+    ];
+
+    /// Output spatial size for strided spatial ops (SAME padding).
+    fn out_hw(&self) -> (usize, usize) {
+        let s = self.stride.max(1);
+        match self.kind {
+            LayerKind::MaxPool => {
+                // VALID pooling
+                let k = self.kernel.max(1);
+                (
+                    (self.input_h.saturating_sub(k)) / s + 1,
+                    (self.input_w.saturating_sub(k)) / s + 1,
+                )
+            }
+            LayerKind::Conv | LayerKind::DepthwiseConv => (
+                (self.input_h + s - 1) / s,
+                (self.input_w + s - 1) / s,
+            ),
+            _ => (self.input_h, self.input_w),
+        }
+    }
+
+    pub fn output_elems(&self) -> usize {
+        let (ho, wo) = self.out_hw();
+        match self.kind {
+            LayerKind::Conv => ho * wo * self.filters,
+            LayerKind::DepthwiseConv => ho * wo * self.input_c,
+            LayerKind::Dense => self.filters,
+            LayerKind::GlobalAvgPool | LayerKind::GlobalMaxPool => self.input_c,
+            LayerKind::MaxPool => ho * wo * self.input_c,
+            _ => self.input_h * self.input_w * self.input_c,
+        }
+    }
+
+    /// Multiply-accumulate-based FLOPs estimate (2 flops per MAC).
+    pub fn flops(&self) -> usize {
+        let (ho, wo) = self.out_hw();
+        let vol_in = self.input_h * self.input_w * self.input_c;
+        match self.kind {
+            LayerKind::Conv => 2 * ho * wo * self.filters * self.kernel * self.kernel * self.input_c,
+            LayerKind::DepthwiseConv => 2 * ho * wo * self.input_c * self.kernel * self.kernel,
+            LayerKind::Dense => 2 * self.input_c * self.filters,
+            LayerKind::BatchNorm => 2 * vol_in,
+            LayerKind::Relu | LayerKind::Add | LayerKind::Dropout => vol_in,
+            LayerKind::GlobalAvgPool | LayerKind::GlobalMaxPool => vol_in,
+            LayerKind::MaxPool => ho * wo * self.input_c * self.kernel * self.kernel,
+        }
+    }
+
+    /// Parameter bytes (f32) moved for this layer.
+    pub fn param_bytes(&self) -> usize {
+        4 * match self.kind {
+            LayerKind::Conv => self.kernel * self.kernel * self.input_c * self.filters,
+            LayerKind::DepthwiseConv => self.kernel * self.kernel * self.input_c,
+            LayerKind::Dense => self.input_c * self.filters + self.filters,
+            LayerKind::BatchNorm => 4 * self.input_c,
+            _ => 0,
+        }
+    }
+}
+
+/// Parse a manifest layer-record array.
+pub fn parse_layers(v: &Json) -> Result<Vec<LayerSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected layer array"))?
+        .iter()
+        .map(LayerSpec::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_spec() -> LayerSpec {
+        LayerSpec {
+            kind: LayerKind::Conv,
+            input_h: 32,
+            input_w: 32,
+            input_c: 16,
+            kernel: 3,
+            stride: 1,
+            filters: 16,
+        }
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in LayerKind::ALL {
+            assert_eq!(LayerKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(LayerKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn conv_flops() {
+        let s = conv_spec();
+        // 2 * 32*32*16 * 3*3*16
+        assert_eq!(s.flops(), 2 * 32 * 32 * 16 * 9 * 16);
+        assert_eq!(s.output_elems(), 32 * 32 * 16);
+    }
+
+    #[test]
+    fn strided_conv_output() {
+        let mut s = conv_spec();
+        s.stride = 2;
+        s.filters = 32;
+        assert_eq!(s.output_elems(), 16 * 16 * 32);
+    }
+
+    #[test]
+    fn dense_flops() {
+        let s = LayerSpec {
+            kind: LayerKind::Dense,
+            input_h: 1,
+            input_w: 1,
+            input_c: 64,
+            kernel: 0,
+            stride: 0,
+            filters: 10,
+        };
+        assert_eq!(s.flops(), 2 * 64 * 10);
+        assert_eq!(s.output_elems(), 10);
+    }
+
+    #[test]
+    fn from_json() {
+        let v = Json::parse(
+            r#"{"kind": "conv", "input_h": 8, "input_w": 8, "input_c": 4, "kernel": 3, "stride": 2, "filters": 8}"#,
+        )
+        .unwrap();
+        let s = LayerSpec::from_json(&v).unwrap();
+        assert_eq!(s.kind, LayerKind::Conv);
+        assert_eq!(s.output_elems(), 4 * 4 * 8);
+        assert_eq!(s.features().len(), LayerSpec::FEATURE_NAMES.len());
+    }
+
+    #[test]
+    fn maxpool_valid_output() {
+        let s = LayerSpec {
+            kind: LayerKind::MaxPool,
+            input_h: 16,
+            input_w: 16,
+            input_c: 32,
+            kernel: 2,
+            stride: 2,
+            filters: 0,
+        };
+        assert_eq!(s.output_elems(), 8 * 8 * 32);
+    }
+}

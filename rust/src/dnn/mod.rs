@@ -1,0 +1,12 @@
+//! DNN metadata: layer hyperparameters (paper Table I), model/node/exit
+//! descriptions mirrored from the AOT manifest, the repartition planner and
+//! technique-variant enumeration.
+
+pub mod layers;
+pub mod model;
+pub mod partition;
+pub mod variants;
+
+pub use layers::{LayerKind, LayerSpec};
+pub use model::{EpochRecord, ExitMeta, ModelMeta, NodeMeta, VariantAccuracies, WeightEntry};
+pub use variants::Technique;

@@ -1,0 +1,419 @@
+//! Model metadata parsed from the AOT manifest: the rust-side mirror of
+//! the python `ModelDef` (nodes, exits, skippable set, boundary shapes,
+//! layer specs, training history, measured accuracies).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::layers::{parse_layers, LayerSpec};
+use crate::util::json::Json;
+
+/// A packed weight-leaf entry inside weights_<model>.bin.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements into the model's weight file.
+    pub offset: usize,
+}
+
+impl WeightEntry {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<WeightEntry> {
+        Ok(WeightEntry {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("weight entry missing name"))?
+                .to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("weight entry missing shape"))?,
+            offset: v
+                .get("offset")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("weight entry missing offset"))?,
+        })
+    }
+}
+
+/// One node's block of the distributed DNN.
+#[derive(Debug, Clone)]
+pub struct NodeMeta {
+    pub index: usize,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub skippable: bool,
+    /// batch size -> artifact path (relative to artifacts dir)
+    pub artifacts: BTreeMap<usize, String>,
+    pub weights: Vec<WeightEntry>,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NodeMeta {
+    /// Bytes of the activation leaving this node (batch 1, f32).
+    pub fn out_bytes(&self) -> usize {
+        4 * self.out_shape.iter().product::<usize>()
+    }
+
+    pub fn flops(&self) -> usize {
+        self.layers.iter().map(|l| l.flops()).sum()
+    }
+}
+
+/// One early-exit head.
+#[derive(Debug, Clone)]
+pub struct ExitMeta {
+    pub after_node: usize,
+    pub in_shape: Vec<usize>,
+    pub artifacts: BTreeMap<usize, String>,
+    pub weights: Vec<WeightEntry>,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Final (full-test-set) accuracies measured at build time.
+#[derive(Debug, Clone, Default)]
+pub struct VariantAccuracies {
+    pub repartition: f64,
+    pub exit: BTreeMap<usize, f64>,
+    pub skip: BTreeMap<usize, f64>,
+}
+
+impl VariantAccuracies {
+    fn from_json(v: &Json) -> Result<VariantAccuracies> {
+        let mut out = VariantAccuracies {
+            repartition: v
+                .get("repartition")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("missing repartition accuracy"))?,
+            ..Default::default()
+        };
+        for (field, map) in [("exit", &mut out.exit), ("skip", &mut out.skip)] {
+            if let Some(obj) = v.get(field).and_then(Json::as_obj) {
+                for (k, val) in obj {
+                    map.insert(
+                        k.parse()
+                            .map_err(|_| anyhow!("bad {field} key '{k}'"))?,
+                        val.as_f64().ok_or_else(|| anyhow!("bad {field} value"))?,
+                    );
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One epoch of the training history (accuracy-predictor raw material).
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub lr: f64,
+    pub train_loss: f64,
+    pub train_acc: f64,
+    pub variant_acc: VariantAccuracies,
+    /// "n<idx>" / "e<idx>" -> [count, mean, std, q0, q25, q50, q75, q100]
+    pub weight_stats: BTreeMap<String, Vec<f64>>,
+}
+
+/// Full metadata for one model from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub num_nodes: usize,
+    pub nodes: Vec<NodeMeta>,
+    pub exits: Vec<ExitMeta>,
+    pub skippable_nodes: Vec<usize>,
+    pub exit_nodes: Vec<usize>,
+    pub weights_file: String,
+    pub final_accuracy: VariantAccuracies,
+    pub history: Vec<EpochRecord>,
+}
+
+impl ModelMeta {
+    pub fn from_json(name: &str, v: &Json) -> Result<ModelMeta> {
+        let nodes_obj = v
+            .get("nodes")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest model missing nodes"))?;
+        let node_layers = v
+            .get("node_layers")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing node_layers"))?;
+        let mut nodes = Vec::new();
+        for (k, nv) in nodes_obj {
+            let index: usize = k.parse().map_err(|_| anyhow!("bad node key '{k}'"))?;
+            let layers = parse_layers(
+                node_layers
+                    .get(k)
+                    .ok_or_else(|| anyhow!("missing layers for node {k}"))?,
+            )?;
+            nodes.push(NodeMeta {
+                index,
+                in_shape: nv
+                    .get("in_shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow!("node {k}: missing in_shape"))?,
+                out_shape: nv
+                    .get("out_shape")
+                    .and_then(Json::as_usize_vec)
+                    .ok_or_else(|| anyhow!("node {k}: missing out_shape"))?,
+                skippable: nv
+                    .get("skippable")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+                artifacts: parse_artifacts(nv.get("artifacts"))?,
+                weights: parse_weights(nv.get("weights"))?,
+                layers,
+            });
+        }
+        nodes.sort_by_key(|n| n.index);
+
+        let exit_layers = v
+            .get("exit_layers")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing exit_layers"))?;
+        let mut exits = Vec::new();
+        if let Some(exits_obj) = v.get("exits").and_then(Json::as_obj) {
+            for (k, ev) in exits_obj {
+                let after_node: usize =
+                    k.parse().map_err(|_| anyhow!("bad exit key '{k}'"))?;
+                exits.push(ExitMeta {
+                    after_node,
+                    in_shape: ev
+                        .get("in_shape")
+                        .and_then(Json::as_usize_vec)
+                        .ok_or_else(|| anyhow!("exit {k}: missing in_shape"))?,
+                    artifacts: parse_artifacts(ev.get("artifacts"))?,
+                    weights: parse_weights(ev.get("weights"))?,
+                    layers: parse_layers(
+                        exit_layers
+                            .get(k)
+                            .ok_or_else(|| anyhow!("missing layers for exit {k}"))?,
+                    )?,
+                });
+            }
+        }
+        exits.sort_by_key(|e| e.after_node);
+
+        let mut history = Vec::new();
+        if let Some(arr) = v.get("history").and_then(Json::as_arr) {
+            for h in arr {
+                history.push(EpochRecord {
+                    epoch: h.get("epoch").and_then(Json::as_usize).unwrap_or(0),
+                    lr: h.get("lr").and_then(Json::as_f64).unwrap_or(0.0),
+                    train_loss: h.get("train_loss").and_then(Json::as_f64).unwrap_or(0.0),
+                    train_acc: h.get("train_acc").and_then(Json::as_f64).unwrap_or(0.0),
+                    variant_acc: VariantAccuracies::from_json(
+                        h.get("variant_acc")
+                            .ok_or_else(|| anyhow!("history missing variant_acc"))?,
+                    )?,
+                    weight_stats: h
+                        .get("weight_stats")
+                        .and_then(Json::as_obj)
+                        .map(|m| {
+                            m.iter()
+                                .filter_map(|(k, v)| {
+                                    v.as_f64_vec().map(|fv| (k.clone(), fv))
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                });
+            }
+        }
+
+        Ok(ModelMeta {
+            name: name.to_string(),
+            num_nodes: v
+                .get("num_nodes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing num_nodes"))?,
+            nodes,
+            exits,
+            skippable_nodes: v
+                .get("skippable_nodes")
+                .and_then(Json::as_usize_vec)
+                .unwrap_or_default(),
+            exit_nodes: v
+                .get("exit_nodes")
+                .and_then(Json::as_usize_vec)
+                .unwrap_or_default(),
+            weights_file: v
+                .get("weights_file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing weights_file"))?
+                .to_string(),
+            final_accuracy: VariantAccuracies::from_json(
+                v.get("final_accuracy")
+                    .ok_or_else(|| anyhow!("missing final_accuracy"))?,
+            )?,
+            history,
+        })
+    }
+
+    pub fn node(&self, index: usize) -> Result<&NodeMeta> {
+        self.nodes
+            .iter()
+            .find(|n| n.index == index)
+            .ok_or_else(|| anyhow!("{}: no node {index}", self.name))
+    }
+
+    pub fn exit(&self, after_node: usize) -> Result<&ExitMeta> {
+        self.exits
+            .iter()
+            .find(|e| e.after_node == after_node)
+            .ok_or_else(|| anyhow!("{}: no exit after node {after_node}", self.name))
+    }
+
+    pub fn is_skippable(&self, node: usize) -> bool {
+        self.skippable_nodes.contains(&node)
+    }
+
+    pub fn has_exit_before(&self, failed: usize) -> bool {
+        failed >= 2 && self.exit_nodes.contains(&(failed - 1))
+    }
+
+    /// All layer specs on the full path (every node, in order).
+    pub fn all_layers(&self) -> Vec<&LayerSpec> {
+        self.nodes.iter().flat_map(|n| n.layers.iter()).collect()
+    }
+}
+
+fn parse_artifacts(v: Option<&Json>) -> Result<BTreeMap<usize, String>> {
+    let obj = v
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow!("missing artifacts map"))?;
+    let mut out = BTreeMap::new();
+    for (k, path) in obj {
+        out.insert(
+            k.parse::<usize>()
+                .map_err(|_| anyhow!("bad batch key '{k}'"))?,
+            path.as_str()
+                .ok_or_else(|| anyhow!("artifact path not a string"))?
+                .to_string(),
+        );
+    }
+    Ok(out)
+}
+
+fn parse_weights(v: Option<&Json>) -> Result<Vec<WeightEntry>> {
+    v.and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing weights array"))?
+        .iter()
+        .map(WeightEntry::from_json)
+        .collect()
+}
+
+#[cfg(test)]
+pub mod test_fixtures {
+    use super::*;
+    use crate::dnn::layers::LayerKind;
+
+    /// A small synthetic 5-node model for unit tests (no artifacts).
+    pub fn tiny_model() -> ModelMeta {
+        let mk_node = |index: usize, skippable: bool, c: usize| NodeMeta {
+            index,
+            in_shape: vec![8, 8, c],
+            out_shape: vec![8, 8, c],
+            skippable,
+            artifacts: BTreeMap::new(),
+            weights: Vec::new(),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Conv,
+                input_h: 8,
+                input_w: 8,
+                input_c: c,
+                kernel: 3,
+                stride: 1,
+                filters: c,
+            }],
+        };
+        let mk_exit = |after: usize| ExitMeta {
+            after_node: after,
+            in_shape: vec![8, 8, 4],
+            artifacts: BTreeMap::new(),
+            weights: Vec::new(),
+            layers: vec![LayerSpec {
+                kind: LayerKind::Dense,
+                input_h: 1,
+                input_w: 1,
+                input_c: 256,
+                kernel: 0,
+                stride: 0,
+                filters: 10,
+            }],
+        };
+        let mut final_accuracy = VariantAccuracies {
+            repartition: 0.9,
+            ..Default::default()
+        };
+        for e in 1..=4 {
+            final_accuracy.exit.insert(e, 0.5 + 0.1 * e as f64);
+        }
+        for s in [2, 3, 4] {
+            final_accuracy.skip.insert(s, 0.85);
+        }
+        ModelMeta {
+            name: "tiny".into(),
+            num_nodes: 5,
+            nodes: (1..=5).map(|i| mk_node(i, (2..=4).contains(&i), 4)).collect(),
+            exits: (1..=4).map(mk_exit).collect(),
+            skippable_nodes: vec![2, 3, 4],
+            exit_nodes: vec![1, 2, 3, 4],
+            weights_file: "none".into(),
+            final_accuracy,
+            history: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::tiny_model;
+    use super::*;
+
+    #[test]
+    fn tiny_model_lookups() {
+        let m = tiny_model();
+        assert_eq!(m.node(3).unwrap().index, 3);
+        assert!(m.node(9).is_err());
+        assert_eq!(m.exit(2).unwrap().after_node, 2);
+        assert!(m.is_skippable(3));
+        assert!(!m.is_skippable(1));
+        assert!(m.has_exit_before(3));
+        assert!(!m.has_exit_before(1));
+    }
+
+    #[test]
+    fn parse_minimal_model_json() {
+        let j = Json::parse(
+            r#"{
+              "num_nodes": 1,
+              "nodes": {"1": {"in_shape": [32,32,3], "out_shape": [10],
+                        "skippable": false,
+                        "artifacts": {"1": "blocks/m_n1_b1.hlo.txt"},
+                        "weights": [{"name": "p:0/w", "shape": [3,3,3,8], "offset": 0}]}},
+              "exits": {},
+              "node_layers": {"1": [{"kind": "conv", "input_h": 32, "input_w": 32,
+                               "input_c": 3, "kernel": 3, "stride": 1, "filters": 8}]},
+              "exit_layers": {},
+              "skippable_nodes": [],
+              "exit_nodes": [],
+              "weights_file": "weights_m.bin",
+              "final_accuracy": {"repartition": 0.8, "exit": {}, "skip": {}},
+              "history": []
+            }"#,
+        )
+        .unwrap();
+        let m = ModelMeta::from_json("m", &j).unwrap();
+        assert_eq!(m.nodes.len(), 1);
+        assert_eq!(m.nodes[0].weights[0].elems(), 3 * 3 * 3 * 8);
+        assert_eq!(m.nodes[0].out_bytes(), 40);
+        assert_eq!(m.final_accuracy.repartition, 0.8);
+    }
+}

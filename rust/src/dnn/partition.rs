@@ -1,0 +1,247 @@
+//! Repartition planner: redistributes the DNN's blocks over the surviving
+//! nodes after a failure (paper technique 1, §II-B-1).
+//!
+//! Blocks must stay contiguous (the DNN is a chain); a *plan* assigns each
+//! surviving node a contiguous range of blocks. The planner minimises the
+//! end-to-end pipeline latency estimate:
+//!
+//!   sum_i compute(range_i)  +  sum over adjacent pairs transfer(boundary)
+//!
+//! using dynamic programming over (block index, node count). Compute costs
+//! come from the latency model (or FLOPs as a proxy); transfer costs from
+//! the boundary activation size and the link model. An optional per-node
+//! capacity (max compute per node) models resource-limited edge nodes; the
+//! DP also exposes the bottleneck (max stage) objective for pipelined
+//! serving.
+
+use anyhow::{bail, Result};
+
+/// Objective for the planner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimise total end-to-end latency (sum of stages + transfers):
+    /// matches the paper's single-request latency metric.
+    TotalLatency,
+    /// Minimise the slowest stage (throughput-optimal for pipelining).
+    Bottleneck,
+}
+
+/// A repartition plan: `assignment[i]` = contiguous block range (1-based,
+/// inclusive) hosted by the i-th surviving node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub assignment: Vec<(usize, usize)>,
+    /// Estimated end-to-end latency (ms) under the cost model.
+    pub est_latency_ms: f64,
+}
+
+/// Plan a repartition of `n_blocks` blocks over `n_nodes` nodes.
+///
+/// `compute_ms[b]` is the estimated compute latency of block b+1;
+/// `transfer_ms[b]` is the link cost of moving block b+1's *output* to the
+/// next node (the cost paid iff a node boundary is placed after block b+1).
+/// `capacity_ms` optionally caps per-node total compute.
+pub fn plan(
+    n_blocks: usize,
+    n_nodes: usize,
+    compute_ms: &[f64],
+    transfer_ms: &[f64],
+    objective: Objective,
+    capacity_ms: Option<f64>,
+) -> Result<Plan> {
+    if n_blocks == 0 || n_nodes == 0 {
+        bail!("plan: empty problem");
+    }
+    if compute_ms.len() != n_blocks || transfer_ms.len() != n_blocks {
+        bail!("plan: cost arrays must have n_blocks entries");
+    }
+    let k = n_nodes.min(n_blocks);
+    // prefix sums of compute
+    let mut pre = vec![0.0; n_blocks + 1];
+    for b in 0..n_blocks {
+        pre[b + 1] = pre[b] + compute_ms[b];
+    }
+    let seg = |lo: usize, hi: usize| pre[hi] - pre[lo]; // blocks lo+1..=hi
+    let fits = |lo: usize, hi: usize| match capacity_ms {
+        Some(cap) => seg(lo, hi) <= cap,
+        None => true,
+    };
+
+    // dp[j][b] = best objective using j nodes for the first b blocks.
+    const INF: f64 = f64::INFINITY;
+    let mut dp = vec![vec![INF; n_blocks + 1]; k + 1];
+    let mut parent = vec![vec![0usize; n_blocks + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        for b in j..=n_blocks {
+            // last node hosts blocks p+1..=b
+            for p in (j - 1)..b {
+                if dp[j - 1][p] == INF || !fits(p, b) {
+                    continue;
+                }
+                let stage = seg(p, b);
+                // transfer paid after block p (boundary into this node)
+                let trans = if p > 0 { transfer_ms[p - 1] } else { 0.0 };
+                let cand = match objective {
+                    Objective::TotalLatency => dp[j - 1][p] + stage + trans,
+                    Objective::Bottleneck => dp[j - 1][p].max(stage + trans),
+                };
+                if cand < dp[j][b] {
+                    dp[j][b] = cand;
+                    parent[j][b] = p;
+                }
+            }
+        }
+    }
+    // Prefer using all k nodes only if it helps; any j <= k is allowed.
+    let (best_j, best) = (1..=k)
+        .map(|j| (j, dp[j][n_blocks]))
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    if best == INF {
+        bail!("plan: infeasible under capacity constraint");
+    }
+    // Reconstruct.
+    let mut ranges = Vec::new();
+    let mut b = n_blocks;
+    let mut j = best_j;
+    while j > 0 {
+        let p = parent[j][b];
+        ranges.push((p + 1, b));
+        b = p;
+        j -= 1;
+    }
+    ranges.reverse();
+    Ok(Plan {
+        assignment: ranges,
+        est_latency_ms: best,
+    })
+}
+
+/// Validity check used by tests and the property suite.
+pub fn is_valid(plan: &Plan, n_blocks: usize, n_nodes: usize) -> bool {
+    if plan.assignment.is_empty() || plan.assignment.len() > n_nodes {
+        return false;
+    }
+    let mut next = 1usize;
+    for &(lo, hi) in &plan.assignment {
+        if lo != next || hi < lo {
+            return false;
+        }
+        next = hi + 1;
+    }
+    next == n_blocks + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_node_gets_everything() {
+        let p = plan(4, 1, &[1.0; 4], &[0.5; 4], Objective::TotalLatency, None).unwrap();
+        assert_eq!(p.assignment, vec![(1, 4)]);
+        assert!((p.est_latency_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_latency_avoids_transfers() {
+        // With expensive transfers, the total-latency objective should use
+        // as few boundaries as possible.
+        let p = plan(4, 4, &[1.0; 4], &[100.0; 4], Objective::TotalLatency, None).unwrap();
+        assert_eq!(p.assignment.len(), 1);
+    }
+
+    #[test]
+    fn bottleneck_balances() {
+        let p = plan(
+            4,
+            2,
+            &[3.0, 1.0, 1.0, 3.0],
+            &[0.0; 4],
+            Objective::Bottleneck,
+            None,
+        )
+        .unwrap();
+        assert_eq!(p.assignment, vec![(1, 2), (3, 4)]);
+        assert!((p.est_latency_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_forces_split() {
+        let p = plan(4, 4, &[1.0; 4], &[0.1; 4], Objective::TotalLatency, Some(1.5)).unwrap();
+        assert_eq!(p.assignment.len(), 4, "capacity 1.5 allows 1 block/node");
+        assert!(is_valid(&p, 4, 4));
+    }
+
+    #[test]
+    fn capacity_infeasible() {
+        assert!(plan(2, 1, &[5.0, 5.0], &[0.0; 2], Objective::TotalLatency, Some(1.0)).is_err());
+    }
+
+    #[test]
+    fn prop_plans_always_valid_partitions() {
+        check(200, 0xC0FFEE, |g| {
+            let n_blocks = g.usize(1, 18);
+            let n_nodes = g.usize(1, 14);
+            let compute: Vec<f64> = (0..n_blocks).map(|_| g.f64(0.1, 5.0)).collect();
+            let transfer: Vec<f64> = (0..n_blocks).map(|_| g.f64(0.0, 2.0)).collect();
+            let obj = if g.bool() {
+                Objective::TotalLatency
+            } else {
+                Objective::Bottleneck
+            };
+            let p = plan(n_blocks, n_nodes, &compute, &transfer, obj, None)
+                .map_err(|e| e.to_string())?;
+            prop_assert(is_valid(&p, n_blocks, n_nodes), "plan must be a valid partition")?;
+            prop_assert(p.est_latency_ms.is_finite(), "finite latency")
+        });
+    }
+
+    #[test]
+    fn prop_total_latency_optimal_vs_bruteforce() {
+        // For small instances compare the DP against brute force over all
+        // contiguous partitions.
+        fn brute(n_blocks: usize, n_nodes: usize, c: &[f64], t: &[f64]) -> f64 {
+            fn go(
+                start: usize,
+                nodes_left: usize,
+                c: &[f64],
+                t: &[f64],
+            ) -> f64 {
+                let n = c.len();
+                if start == n {
+                    return 0.0;
+                }
+                if nodes_left == 0 {
+                    return f64::INFINITY;
+                }
+                let mut best = f64::INFINITY;
+                for end in start + 1..=n {
+                    let stage: f64 = c[start..end].iter().sum();
+                    let trans = if end < n { t[end - 1] } else { 0.0 };
+                    let rest = go(end, nodes_left - 1, c, t);
+                    best = best.min(stage + trans + rest);
+                }
+                best
+            }
+            go(0, n_nodes.min(n_blocks), c, t)
+        }
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let n_blocks = 1 + rng.below(7);
+            let n_nodes = 1 + rng.below(5);
+            let c: Vec<f64> = (0..n_blocks).map(|_| rng.range(0.1, 4.0)).collect();
+            let t: Vec<f64> = (0..n_blocks).map(|_| rng.range(0.0, 3.0)).collect();
+            let p = plan(n_blocks, n_nodes, &c, &t, Objective::TotalLatency, None).unwrap();
+            let b = brute(n_blocks, n_nodes, &c, &t);
+            assert!(
+                (p.est_latency_ms - b).abs() < 1e-9,
+                "dp {} vs brute {b}",
+                p.est_latency_ms
+            );
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Technique variants: the candidate recovery actions CONTINUER chooses
+//! among when a node fails (paper §II-D).
+
+use super::model::ModelMeta;
+
+/// One candidate recovery technique for a specific failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Technique {
+    /// Repartition the full DNN over the surviving nodes.
+    Repartition,
+    /// Terminate requests at the exit head after node `.0` (the node just
+    /// before the failed one).
+    EarlyExit(usize),
+    /// Bypass failed node `.0` via its identity skip connection.
+    SkipConnection(usize),
+}
+
+impl Technique {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Technique::Repartition => "repartition",
+            Technique::EarlyExit(_) => "early-exit",
+            Technique::SkipConnection(_) => "skip-connection",
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Technique::Repartition => "repartition".into(),
+            Technique::EarlyExit(e) => format!("early-exit@{e}"),
+            Technique::SkipConnection(k) => format!("skip@{k}"),
+        }
+    }
+}
+
+/// Enumerate the feasible techniques when `failed` fails (1-based node id).
+///
+/// - Repartitioning is always feasible (the DNN redeploys over survivors).
+/// - Early-exit is feasible iff an exit head exists after node failed-1.
+/// - Skip-connection is feasible iff the failed node is identity-skippable
+///   (paper Fig. 6 red stars mark the impossible positions).
+///
+/// Failure of the *first* node is unrecoverable by exit/skip; failure of
+/// the last node can still exit at the last exit head.
+pub fn candidates(model: &ModelMeta, failed: usize) -> Vec<Technique> {
+    let mut out = vec![Technique::Repartition];
+    if failed >= 2 && model.exit_nodes.contains(&(failed - 1)) {
+        out.push(Technique::EarlyExit(failed - 1));
+    }
+    if model.is_skippable(failed) {
+        out.push(Technique::SkipConnection(failed));
+    }
+    out
+}
+
+/// Nodes whose failure the evaluation sweeps (all interior failures the
+/// paper's figures iterate: 2..=num_nodes, i.e. every node that has a
+/// predecessor).
+pub fn failure_sweep(model: &ModelMeta) -> Vec<usize> {
+    (2..=model.num_nodes).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::model::test_fixtures::tiny_model;
+
+    #[test]
+    fn candidates_interior_skippable() {
+        let m = tiny_model();
+        let c = candidates(&m, 3);
+        assert!(c.contains(&Technique::Repartition));
+        assert!(c.contains(&Technique::EarlyExit(2)));
+        assert!(c.contains(&Technique::SkipConnection(3)));
+    }
+
+    #[test]
+    fn candidates_first_node() {
+        let m = tiny_model();
+        // node 1 failing: no exit before it, not skippable
+        assert_eq!(candidates(&m, 1), vec![Technique::Repartition]);
+    }
+
+    #[test]
+    fn candidates_last_node() {
+        let m = tiny_model();
+        let c = candidates(&m, 5);
+        assert!(c.contains(&Technique::EarlyExit(4)));
+        assert!(!c.iter().any(|t| matches!(t, Technique::SkipConnection(_))));
+    }
+
+    #[test]
+    fn sweep_covers_interior() {
+        let m = tiny_model();
+        assert_eq!(failure_sweep(&m), vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Technique::Repartition.label(), "repartition");
+        assert_eq!(Technique::EarlyExit(3).label(), "early-exit@3");
+        assert_eq!(Technique::SkipConnection(7).label(), "skip@7");
+        assert_eq!(Technique::SkipConnection(7).kind_name(), "skip-connection");
+    }
+}

@@ -1,0 +1,222 @@
+//! Table VI + Fig 8: measured vs predicted accuracy per failed node and
+//! technique.
+//!
+//! Measured: the real per-block pipeline executed in rust over the eval
+//! set (batch 32) — a genuine end-to-end measurement through the AOT
+//! artifacts, independently of the python-side numbers.
+//! Predicted: the Accuracy Prediction Model on the deployed weights'
+//! statistics.
+//!
+//! Persists `results/accuracy_eval.json` for Table VII.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cluster::sim::EdgeCluster;
+use crate::coordinator::estimator::Estimator;
+use crate::coordinator::profiler::DowntimeTable;
+use crate::dnn::variants::{candidates, failure_sweep, Technique};
+use crate::predict::{AccuracyModel, GbdtParams, LatencyModel, LayerSample};
+use crate::util::bench::{f, pct, Table};
+use crate::util::json::{obj, Json};
+use crate::util::stats::avg_pct_error;
+
+use super::latency_eval::tech_from_json;
+use super::ExpContext;
+
+#[derive(Debug, Clone)]
+pub struct AccuracyPoint {
+    pub model: String,
+    pub failed: usize,
+    pub technique: Technique,
+    /// percent
+    pub measured: f64,
+    /// percent
+    pub predicted: f64,
+}
+
+fn to_json(points: &[AccuracyPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                obj(&[
+                    ("model", p.model.as_str().into()),
+                    ("failed", p.failed.into()),
+                    (
+                        "technique",
+                        obj(&[
+                            ("kind", p.technique.kind_name().into()),
+                            (
+                                "index",
+                                match p.technique {
+                                    Technique::Repartition => 0usize.into(),
+                                    Technique::EarlyExit(e) => e.into(),
+                                    Technique::SkipConnection(k) => k.into(),
+                                },
+                            ),
+                        ]),
+                    ),
+                    ("measured", p.measured.into()),
+                    ("predicted", p.predicted.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn points_from_json(v: &Json) -> Result<Vec<AccuracyPoint>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bad accuracy points"))?
+        .iter()
+        .map(|p| {
+            Ok(AccuracyPoint {
+                model: p
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                failed: p.get("failed").and_then(Json::as_usize).unwrap_or(0),
+                technique: tech_from_json(
+                    p.get("technique")
+                        .ok_or_else(|| anyhow::anyhow!("missing technique"))?,
+                )?,
+                measured: p.get("measured").and_then(Json::as_f64).unwrap_or(0.0),
+                predicted: p.get("predicted").and_then(Json::as_f64).unwrap_or(0.0),
+            })
+        })
+        .collect()
+}
+
+/// Compute (or load cached) every accuracy point.
+pub fn evaluate(ctx: &ExpContext) -> Result<Vec<AccuracyPoint>> {
+    if ctx.has_result("accuracy_eval") {
+        return points_from_json(&ctx.load_result("accuracy_eval")?);
+    }
+    let params = GbdtParams::default();
+    let metas: Vec<&crate::dnn::model::ModelMeta> = ctx.store.models.values().collect();
+    let (acc_model, quality) = AccuracyModel::fit(&metas, &params, ctx.config.seed)?;
+    println!(
+        "accuracy model: {} train / {} test instances, MSE = {:.3}, R2 = {:.2}%",
+        quality.n_train,
+        quality.n_test,
+        quality.mse,
+        quality.r2 * 100.0
+    );
+    // Latency model irrelevant here; build a trivial one.
+    let dummy_samples = vec![LayerSample {
+        spec: crate::dnn::layers::LayerSpec {
+            kind: crate::dnn::layers::LayerKind::Relu,
+            input_h: 1,
+            input_w: 1,
+            input_c: 1,
+            kernel: 0,
+            stride: 0,
+            filters: 0,
+        },
+        latency_ms: 0.01,
+    }];
+    let (lat_model, _) = LatencyModel::fit(&dummy_samples, &params, 0)?;
+    let downtime = DowntimeTable::new();
+
+    let mut points = Vec::new();
+    let eval_batch = 32;
+    for name in ctx.model_names() {
+        let meta = ctx.store.model(&name)?;
+        let cluster = EdgeCluster::new(
+            &ctx.engine,
+            &ctx.store,
+            meta,
+            ctx.config.link.clone(),
+            ctx.config.seed,
+        );
+        let est = Estimator::new(
+        meta,
+        &lat_model,
+        &acc_model,
+        cluster.link(),
+        &downtime,
+        ctx.config.reinstate_ms,
+    );
+        let (images, labels) = ctx.store.test_set()?;
+        // Measured accuracy depends only on the technique (not which node
+        // triggered it): memoise per technique.
+        let mut measured_cache: BTreeMap<String, f64> = BTreeMap::new();
+        eprintln!("[accuracy_eval] {name}: evaluating techniques on {} images ...", images.shape[0]);
+        for failed in failure_sweep(meta) {
+            for tech in candidates(meta, failed) {
+                let key = tech.label();
+                let measured = match measured_cache.get(&key) {
+                    Some(&m) => m,
+                    None => {
+                        let m = cluster.measure_accuracy(
+                            tech,
+                            Some(failed),
+                            &images,
+                            &labels,
+                            eval_batch,
+                        )? * 100.0;
+                        measured_cache.insert(key, m);
+                        m
+                    }
+                };
+                let predicted = est.predict_accuracy(tech)?;
+                points.push(AccuracyPoint {
+                    model: name.clone(),
+                    failed,
+                    technique: tech,
+                    measured,
+                    predicted,
+                });
+            }
+        }
+    }
+    ctx.save_result("accuracy_eval", &to_json(&points))?;
+    Ok(points)
+}
+
+pub fn run(ctx: &ExpContext, fig8: bool) -> Result<()> {
+    let points = evaluate(ctx)?;
+
+    if fig8 {
+        for name in ctx.model_names() {
+            let mut t = Table::new(
+                &format!("Fig 8 — measured vs predicted accuracy ({name})"),
+                &["failed node", "technique", "measured %", "predicted %"],
+            );
+            for p in points.iter().filter(|p| p.model == name) {
+                t.row(&[
+                    format!("n{}", p.failed),
+                    p.technique.label(),
+                    f(p.measured, 2),
+                    f(p.predicted, 2),
+                ]);
+            }
+            t.print();
+        }
+    }
+
+    let mut t = Table::new(
+        "Table VI — avg % error of accuracy estimation",
+        &["Technique", "resnet32", "mobilenetv2"],
+    );
+    for kind in ["repartition", "early-exit", "skip-connection"] {
+        let mut cells = vec![kind.to_string()];
+        for name in ["resnet32", "mobilenetv2"] {
+            let (pred, meas): (Vec<f64>, Vec<f64>) = points
+                .iter()
+                .filter(|p| p.model == name && p.technique.kind_name() == kind)
+                .map(|p| (p.predicted, p.measured))
+                .unzip();
+            cells.push(if pred.is_empty() {
+                "-".into()
+            } else {
+                pct(avg_pct_error(&pred, &meas), 2)
+            });
+        }
+        t.row(&cells);
+    }
+    t.print();
+    Ok(())
+}

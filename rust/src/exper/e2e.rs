@@ -1,0 +1,156 @@
+//! End-to-end serving driver (the mandated full-system validation): load a
+//! model, serve a poisson request stream through the distributed pipeline,
+//! inject a node failure mid-run, let CONTINUER fail over, and report
+//! latency / throughput / downtime before vs after.
+
+use anyhow::Result;
+
+use crate::cluster::failure::{Detector, FailurePlan};
+use crate::cluster::sim::EdgeCluster;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::estimator::Estimator;
+use crate::coordinator::failover::Failover;
+use crate::coordinator::profiler::DowntimeTable;
+use crate::coordinator::service::{run as serve, ServiceConfig, ServiceReport};
+use crate::predict::{AccuracyModel, GbdtParams};
+use crate::util::bench::{f, Table};
+use crate::util::stats::Summary;
+use crate::workload::{generate, Arrival};
+
+use super::table2::layer_samples;
+use super::ExpContext;
+
+pub struct E2eParams {
+    pub model: String,
+    pub n_requests: usize,
+    pub rate_rps: f64,
+    pub fail_node: usize,
+    pub fail_at_ms: f64,
+}
+
+pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
+    let meta = ctx.store.model(&p.model)?;
+    let samples = layer_samples(ctx)?;
+    let params = GbdtParams::default();
+    let (lat_model, _) = crate::predict::LatencyModel::fit(&samples, &params, ctx.config.seed)?;
+    let metas: Vec<&crate::dnn::model::ModelMeta> = ctx.store.models.values().collect();
+    let (acc_model, _) = AccuracyModel::fit(&metas, &params, ctx.config.seed)?;
+    let downtime = DowntimeTable::new();
+
+    let mut cluster = EdgeCluster::new(
+        &ctx.engine,
+        &ctx.store,
+        meta,
+        ctx.config.link.clone(),
+        ctx.config.seed,
+    );
+    eprintln!("[e2e] preloading {} blocks ...", meta.num_nodes);
+    cluster.preload(1, true)?;
+
+    let link = crate::cluster::link::LinkModel::new(ctx.config.link.clone());
+    let est = Estimator::new(
+        meta,
+        &lat_model,
+        &acc_model,
+        &link,
+        &downtime,
+        ctx.config.reinstate_ms,
+    );
+    let mut failover = Failover::new(ctx.config.objectives.clone());
+    let (images, _) = ctx.store.test_set()?;
+    let requests = generate(
+        p.n_requests,
+        Arrival::Poisson { rate_rps: p.rate_rps },
+        images.shape[0],
+        ctx.config.seed,
+    );
+    let plan = FailurePlan::crash(p.fail_node, p.fail_at_ms);
+    let cfg = ServiceConfig {
+        batcher: BatcherConfig::new(
+            ctx.store.batch_sizes.clone(),
+            ctx.config.batch_timeout_ms,
+            ctx.config.max_batch,
+        ),
+        detector: Detector::default(),
+        deadline_ms: None,
+    };
+    eprintln!(
+        "[e2e] serving {} requests at {} rps; node {} fails at t={} ms",
+        p.n_requests, p.rate_rps, p.fail_node, p.fail_at_ms
+    );
+    let report = serve(
+        &mut cluster,
+        &est,
+        &mut failover,
+        &cfg,
+        &requests,
+        &images,
+        &plan,
+    )?;
+    Ok(report)
+}
+
+pub fn print_report(p: &E2eParams, report: &ServiceReport) {
+    let mut t = Table::new(
+        &format!("E2E serving report — {}", p.model),
+        &["metric", "value"],
+    );
+    t.row(&["requests completed".into(), report.completed.len().to_string()]);
+    t.row(&["requests dropped".into(), report.dropped.to_string()]);
+    t.row(&["throughput (rps)".into(), f(report.throughput_rps, 1)]);
+    t.row(&["latency mean (ms)".into(), f(report.latency.mean, 2)]);
+    t.row(&["latency p50 (ms)".into(), f(report.latency.p50, 2)]);
+    t.row(&["latency p95 (ms)".into(), f(report.latency.p95, 2)]);
+    t.row(&["latency p99 (ms)".into(), f(report.latency.p99, 2)]);
+    t.row(&["sim span (ms)".into(), f(report.sim_span_ms, 0)]);
+    for (start, end, tech) in &report.failovers {
+        t.row(&[
+            "failover".into(),
+            format!("t={:.1}ms downtime={:.2}ms -> {}", start, end - start, tech.label()),
+        ]);
+    }
+    t.print();
+
+    // Before/after failure latency comparison.
+    if let Some((fail_t, _, _)) = report.failovers.first() {
+        let before: Vec<f64> = report
+            .completed
+            .iter()
+            .filter(|c| c.technique.is_none())
+            .map(|c| c.latency_ms)
+            .collect();
+        let after: Vec<f64> = report
+            .completed
+            .iter()
+            .filter(|c| c.technique.is_some())
+            .map(|c| c.latency_ms)
+            .collect();
+        let b = Summary::of(&before);
+        let a = Summary::of(&after);
+        println!(
+            "before failure (t<{fail_t:.0}ms): n={} mean={:.2}ms | after failover: n={} mean={:.2}ms\n",
+            b.n, b.mean, a.n, a.mean
+        );
+    }
+}
+
+pub fn run_default(ctx: &ExpContext) -> Result<()> {
+    let model = ctx.config.model.clone();
+    let meta = ctx.store.model(&model)?;
+    // Fail a mid-pipeline skippable node so all three techniques compete.
+    let fail_node = meta
+        .skippable_nodes
+        .get(meta.skippable_nodes.len() / 2)
+        .copied()
+        .unwrap_or(meta.num_nodes / 2);
+    let p = E2eParams {
+        model,
+        n_requests: 60,
+        rate_rps: 6.0,
+        fail_node,
+        fail_at_ms: 4000.0,
+    };
+    let report = run_e2e(ctx, &p)?;
+    print_report(&p, &report);
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Figures 2, 3, 4 and 6: architecture enumerations and the accuracy of
+//! exit points / skip connections.
+
+use anyhow::Result;
+
+use crate::util::bench::{f, Table};
+
+use super::ExpContext;
+
+/// Fig. 2: partition points — how blocks map onto nodes.
+pub fn fig2(ctx: &ExpContext) -> Result<()> {
+    for name in ctx.model_names() {
+        let m = ctx.store.model(&name)?;
+        let mut t = Table::new(
+            &format!("Fig 2 — partition points: {name} ({} nodes)", m.num_nodes),
+            &["node", "in_shape", "out_shape", "layers", "kflops", "skippable"],
+        );
+        for n in &m.nodes {
+            t.row(&[
+                format!("n{}", n.index),
+                format!("{:?}", n.in_shape),
+                format!("{:?}", n.out_shape),
+                n.layers.len().to_string(),
+                (n.flops() / 1000).to_string(),
+                if n.skippable { "yes".into() } else { "no".into() },
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Fig. 3: exit-point placement.
+pub fn fig3(ctx: &ExpContext) -> Result<()> {
+    for name in ctx.model_names() {
+        let m = ctx.store.model(&name)?;
+        let mut t = Table::new(
+            &format!("Fig 3 — exit points: {name} ({} exits)", m.exits.len()),
+            &["exit", "after node", "input shape", "head layers"],
+        );
+        for e in &m.exits {
+            t.row(&[
+                format!("E{}", e.after_node),
+                format!("n{}", e.after_node),
+                format!("{:?}", e.in_shape),
+                e.layers.len().to_string(),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Fig. 4: accuracy of each early exit point (build-time measured on the
+/// full test set; paper Fig. 4).
+pub fn fig4(ctx: &ExpContext) -> Result<()> {
+    for name in ctx.model_names() {
+        let m = ctx.store.model(&name)?;
+        let mut t = Table::new(
+            &format!("Fig 4 — early-exit accuracy: {name}"),
+            &["exit", "accuracy %"],
+        );
+        for (&e, &acc) in &m.final_accuracy.exit {
+            t.row(&[format!("E{e}"), f(acc * 100.0, 2)]);
+        }
+        t.row(&["full".into(), f(m.final_accuracy.repartition * 100.0, 2)]);
+        t.print();
+    }
+    Ok(())
+}
+
+/// Fig. 6: accuracy of each skip connection; impossible positions (paper's
+/// red stars) are reported as such.
+pub fn fig6(ctx: &ExpContext) -> Result<()> {
+    for name in ctx.model_names() {
+        let m = ctx.store.model(&name)?;
+        let mut t = Table::new(
+            &format!("Fig 6 — skip-connection accuracy: {name}"),
+            &["node skipped", "accuracy %"],
+        );
+        for n in &m.nodes {
+            if n.index == 1 || n.index == m.num_nodes {
+                continue;
+            }
+            match m.final_accuracy.skip.get(&n.index) {
+                Some(&acc) => t.row(&[format!("n{}", n.index), f(acc * 100.0, 2)]),
+                None => t.row(&[format!("n{}", n.index), "* (not possible)".into()]),
+            }
+        }
+        t.row(&["none (full)".into(), f(m.final_accuracy.repartition * 100.0, 2)]);
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,270 @@
+//! Table V + Fig 7: measured vs predicted end-to-end latency for every
+//! (platform, model, failed node, technique).
+//!
+//! Measured: the real pipeline executed on the cluster (batch 1), averaged
+//! over reps; platform 2 scales the measured compute portion by the
+//! slow-platform factor (network is platform-independent).
+//! Predicted: the Estimator (per-layer GBDT sums + analytic link time).
+//!
+//! Persists `results/latency_eval.json` for Table VII.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cluster::sim::EdgeCluster;
+use crate::config::Platform;
+use crate::coordinator::estimator::Estimator;
+use crate::coordinator::profiler::{fit_platform, DowntimeTable};
+use crate::dnn::variants::{candidates, failure_sweep, Technique};
+use crate::predict::{AccuracyModel, GbdtParams};
+use crate::util::bench::{f, pct, Table};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::stats::avg_pct_error;
+
+use super::table2::layer_samples;
+use super::ExpContext;
+
+/// One evaluated point.
+#[derive(Debug, Clone)]
+pub struct LatencyPoint {
+    pub platform: String,
+    pub model: String,
+    pub failed: usize,
+    pub technique: Technique,
+    pub measured_ms: f64,
+    pub predicted_ms: f64,
+}
+
+fn tech_json(t: Technique) -> Json {
+    obj(&[
+        ("kind", t.kind_name().into()),
+        (
+            "index",
+            match t {
+                Technique::Repartition => 0usize.into(),
+                Technique::EarlyExit(e) => e.into(),
+                Technique::SkipConnection(k) => k.into(),
+            },
+        ),
+    ])
+}
+
+pub fn tech_from_json(v: &Json) -> Result<Technique> {
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("missing technique kind"))?;
+    let idx = v.get("index").and_then(Json::as_usize).unwrap_or(0);
+    Ok(match kind {
+        "repartition" => Technique::Repartition,
+        "early-exit" => Technique::EarlyExit(idx),
+        "skip-connection" => Technique::SkipConnection(idx),
+        other => anyhow::bail!("bad technique kind {other}"),
+    })
+}
+
+fn points_to_json(points: &[LatencyPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                obj(&[
+                    ("platform", p.platform.as_str().into()),
+                    ("model", p.model.as_str().into()),
+                    ("failed", p.failed.into()),
+                    ("technique", tech_json(p.technique)),
+                    ("measured_ms", p.measured_ms.into()),
+                    ("predicted_ms", p.predicted_ms.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn points_from_json(v: &Json) -> Result<Vec<LatencyPoint>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bad latency points"))?
+        .iter()
+        .map(|p| {
+            Ok(LatencyPoint {
+                platform: p
+                    .get("platform")
+                    .and_then(Json::as_str)
+                    .unwrap_or("platform1")
+                    .to_string(),
+                model: p
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                failed: p.get("failed").and_then(Json::as_usize).unwrap_or(0),
+                technique: tech_from_json(
+                    p.get("technique")
+                        .ok_or_else(|| anyhow::anyhow!("missing technique"))?,
+                )?,
+                measured_ms: p.get("measured_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                predicted_ms: p.get("predicted_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            })
+        })
+        .collect()
+}
+
+/// Compute (or load cached) every latency point.
+pub fn evaluate(ctx: &ExpContext) -> Result<Vec<LatencyPoint>> {
+    if ctx.has_result("latency_eval") {
+        return points_from_json(&ctx.load_result("latency_eval")?);
+    }
+    let samples = layer_samples(ctx)?;
+    let params = GbdtParams::default();
+    let platforms = [Platform::Host, Platform::platform2()];
+    let fitted: Vec<_> = platforms
+        .iter()
+        .map(|p| fit_platform(&samples, p.clone(), &params, ctx.config.seed))
+        .collect::<Result<_>>()?;
+
+    // Accuracy model only needed to satisfy the Estimator signature here;
+    // fit it once (cheap) over all model histories.
+    let metas: Vec<&crate::dnn::model::ModelMeta> = ctx.store.models.values().collect();
+    let (acc_model, _) = AccuracyModel::fit(&metas, &params, ctx.config.seed)?;
+    let downtime: DowntimeTable = DowntimeTable::new();
+
+    let mut points = Vec::new();
+    let reps = ctx.config.profile_reps.min(10);
+    let mut rng = Rng::new(ctx.config.seed ^ 0x7A7A);
+    let p2 = Platform::platform2();
+    let (p2_factor, p2_noise) = match p2 {
+        Platform::Scaled { factor, noise } => (factor, noise),
+        _ => unreachable!(),
+    };
+
+    for name in ctx.model_names() {
+        let meta = ctx.store.model(&name)?;
+        let cluster = EdgeCluster::new(
+            &ctx.engine,
+            &ctx.store,
+            meta,
+            ctx.config.link.clone(),
+            ctx.config.seed,
+        );
+        let (images, _) = ctx.store.test_set()?;
+        let sample = images.slice0(0, 1)?;
+        eprintln!("[latency_eval] {name}: measuring {} failure cases ...", failure_sweep(meta).len());
+        for failed in failure_sweep(meta) {
+            for tech in candidates(meta, failed) {
+                let (comp_ms, net_ms) =
+                    cluster.measure_latency_split(tech, Some(failed), &sample, reps)?;
+                for (pi, fitted_p) in fitted.iter().enumerate() {
+                    let est = Estimator::new(
+        meta,
+        &fitted_p.model,
+        &acc_model,
+        cluster.link(),
+        &downtime,
+        ctx.config.reinstate_ms,
+    );
+                    let predicted = est.predict_latency_ms(tech, Some(failed));
+                    let measured = if pi == 0 {
+                        comp_ms + net_ms
+                    } else {
+                        // Platform 2: scale measured compute by the slow
+                        // factor with bounded jitter; network unchanged.
+                        comp_ms * p2_factor * (1.0 + p2_noise * rng.normal()) + net_ms
+                    };
+                    points.push(LatencyPoint {
+                        platform: fitted_p.platform.name(),
+                        model: name.clone(),
+                        failed,
+                        technique: tech,
+                        measured_ms: measured,
+                        predicted_ms: predicted,
+                    });
+                }
+            }
+        }
+    }
+    ctx.save_result("latency_eval", &points_to_json(&points))?;
+    Ok(points)
+}
+
+/// Render Table V (avg % error per technique/platform/model) and
+/// optionally the Fig 7 per-node series.
+pub fn run(ctx: &ExpContext, fig7: bool) -> Result<()> {
+    let points = evaluate(ctx)?;
+
+    if fig7 {
+        for platform in ["platform1", "platform2"] {
+            for name in ctx.model_names() {
+                let mut t = Table::new(
+                    &format!("Fig 7 — measured vs predicted latency ({platform}, {name})"),
+                    &["failed node", "technique", "measured ms", "predicted ms"],
+                );
+                for p in points
+                    .iter()
+                    .filter(|p| p.platform == platform && p.model == name)
+                {
+                    t.row(&[
+                        format!("n{}", p.failed),
+                        p.technique.label(),
+                        f(p.measured_ms, 2),
+                        f(p.predicted_ms, 2),
+                    ]);
+                }
+                t.print();
+            }
+        }
+    }
+
+    // Table V: avg % error grouped by (technique kind, platform, model).
+    let mut t = Table::new(
+        "Table V — avg % error of latency estimation",
+        &["Technique", "P1 resnet32", "P1 mobilenetv2", "P2 resnet32", "P2 mobilenetv2"],
+    );
+    for kind in ["repartition", "early-exit", "skip-connection"] {
+        let mut cells = vec![kind.to_string()];
+        for platform in ["platform1", "platform2"] {
+            for name in ["resnet32", "mobilenetv2"] {
+                let (pred, meas): (Vec<f64>, Vec<f64>) = points
+                    .iter()
+                    .filter(|p| {
+                        p.platform == platform
+                            && p.model == name
+                            && p.technique.kind_name() == kind
+                    })
+                    .map(|p| (p.predicted_ms, p.measured_ms))
+                    .unzip();
+                cells.push(if pred.is_empty() {
+                    "-".into()
+                } else {
+                    pct(avg_pct_error(&pred, &meas), 2)
+                });
+            }
+        }
+        t.row(&cells);
+    }
+    t.print();
+
+    // Paper headline: max avg error (13.06% for early-exit in the paper).
+    let mut worst: BTreeMap<&str, f64> = BTreeMap::new();
+    for kind in ["repartition", "early-exit", "skip-connection"] {
+        for platform in ["platform1", "platform2"] {
+            for name in ctx.model_names() {
+                let (pred, meas): (Vec<f64>, Vec<f64>) = points
+                    .iter()
+                    .filter(|p| {
+                        p.platform == platform && p.model == name && p.technique.kind_name() == kind
+                    })
+                    .map(|p| (p.predicted_ms, p.measured_ms))
+                    .unzip();
+                if !pred.is_empty() {
+                    let e = avg_pct_error(&pred, &meas);
+                    let w = worst.entry(kind).or_insert(0.0);
+                    *w = w.max(e);
+                }
+            }
+        }
+    }
+    println!("worst avg %% error per technique: {worst:?}\n");
+    Ok(())
+}

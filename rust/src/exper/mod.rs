@@ -1,0 +1,119 @@
+//! Experiment harness: one driver per table/figure of the paper's
+//! evaluation (§V), wired to `continuer exp <id>`. See DESIGN.md §4 for
+//! the index. Drivers persist intermediate results under
+//! `artifacts/results/*.json` so downstream experiments (e.g. Table VII)
+//! reuse measured data instead of re-measuring.
+
+pub mod accuracy_eval;
+pub mod e2e;
+pub mod figures;
+pub mod latency_eval;
+pub mod table2;
+pub mod table7;
+pub mod table8;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::runtime::{ArtifactStore, Engine};
+use crate::util::json::Json;
+
+/// Shared context for experiment drivers.
+pub struct ExpContext {
+    pub engine: Engine,
+    pub store: ArtifactStore,
+    pub config: Config,
+}
+
+impl ExpContext {
+    pub fn open(config: Config) -> Result<ExpContext> {
+        let store = ArtifactStore::open(&config.artifacts_dir)?;
+        let engine = Engine::cpu()?;
+        Ok(ExpContext {
+            engine,
+            store,
+            config,
+        })
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.config.artifacts_dir.join("results")
+    }
+
+    pub fn save_result(&self, name: &str, value: &Json) -> Result<PathBuf> {
+        let dir = self.results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_string())?;
+        Ok(path)
+    }
+
+    pub fn load_result(&self, name: &str) -> Result<Json> {
+        let path = self.results_dir().join(format!("{name}.json"));
+        Json::from_file(&path)
+    }
+
+    pub fn has_result(&self, name: &str) -> bool {
+        self.results_dir().join(format!("{name}.json")).exists()
+    }
+
+    /// Model names to evaluate (all in the manifest).
+    pub fn model_names(&self) -> Vec<String> {
+        self.store.models.keys().cloned().collect()
+    }
+}
+
+/// Registry: run an experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
+    match id {
+        "fig2" => figures::fig2(ctx),
+        "fig3" => figures::fig3(ctx),
+        "fig4" => figures::fig4(ctx),
+        "fig6" => figures::fig6(ctx),
+        "table2" => table2::run(ctx),
+        "table5" | "fig7" => latency_eval::run(ctx, id == "fig7"),
+        "table6" | "fig8" => accuracy_eval::run(ctx, id == "fig8"),
+        "table7" => table7::run(ctx),
+        "table8" => table8::run(ctx),
+        "e2e" => e2e::run_default(ctx),
+        "all" => {
+            for id in [
+                "fig2", "fig3", "fig4", "fig6", "table2", "table5", "fig7", "table6", "fig8",
+                "table7", "table8", "e2e",
+            ] {
+                println!("\n###### experiment {id} ######");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown experiment '{other}' (try fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8 table7 table8 e2e all)"
+        )),
+    }
+}
+
+/// Shared helper: artifacts dir from env or default.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("CONTINUER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            // Prefer CARGO_MANIFEST_DIR (tests/examples) else cwd.
+            let base = std::env::var("CARGO_MANIFEST_DIR")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| PathBuf::from("."));
+            base.join("artifacts")
+        })
+}
+
+/// Check the artifacts exist, with a helpful message.
+pub fn require_artifacts(dir: &Path) -> Result<()> {
+    if !dir.join("manifest.json").exists() {
+        return Err(anyhow!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Table II: quality (MSE, R²) of the per-layer-type latency prediction
+//! models, for both platforms. Also persists the measured layer samples
+//! (`results/layer_samples.json`) for reuse by Table V / Fig 7.
+
+use anyhow::Result;
+
+use crate::config::Platform;
+use crate::coordinator::profiler::{fit_platform, LayerProfiler};
+use crate::dnn::layers::{LayerKind, LayerSpec};
+use crate::predict::{GbdtParams, LayerSample};
+use crate::util::bench::{f, Table};
+use crate::util::json::{obj, Json};
+
+use super::ExpContext;
+
+/// Serialize layer samples for the results cache.
+fn samples_to_json(samples: &[LayerSample]) -> Json {
+    Json::Arr(
+        samples
+            .iter()
+            .map(|s| {
+                obj(&[
+                    ("kind", s.spec.kind.name().into()),
+                    ("input_h", s.spec.input_h.into()),
+                    ("input_w", s.spec.input_w.into()),
+                    ("input_c", s.spec.input_c.into()),
+                    ("kernel", s.spec.kernel.into()),
+                    ("stride", s.spec.stride.into()),
+                    ("filters", s.spec.filters.into()),
+                    ("latency_ms", s.latency_ms.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn samples_from_json(v: &Json) -> Result<Vec<LayerSample>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("bad samples json"))?
+        .iter()
+        .map(|s| {
+            Ok(LayerSample {
+                spec: LayerSpec::from_json(s)?,
+                latency_ms: s
+                    .get("latency_ms")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("missing latency_ms"))?,
+            })
+        })
+        .collect()
+}
+
+/// Measure (or load cached) platform-1 layer samples.
+pub fn layer_samples(ctx: &ExpContext) -> Result<Vec<LayerSample>> {
+    if ctx.has_result("layer_samples") {
+        return samples_from_json(&ctx.load_result("layer_samples")?);
+    }
+    let profiler = LayerProfiler {
+        engine: &ctx.engine,
+        store: &ctx.store,
+    };
+    eprintln!(
+        "profiling {} layer micro-benchmarks x {} reps ...",
+        ctx.store.micro.len(),
+        ctx.config.profile_reps
+    );
+    let samples = profiler.profile_micro(ctx.config.profile_reps)?;
+    ctx.save_result("layer_samples", &samples_to_json(&samples))?;
+    Ok(samples)
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let samples = layer_samples(ctx)?;
+    let params = GbdtParams::default();
+    for platform in [Platform::Host, Platform::platform2()] {
+        let fitted = fit_platform(&samples, platform.clone(), &params, ctx.config.seed)?;
+        let mut t = Table::new(
+            &format!(
+                "Table II — latency predictor quality ({})",
+                platform.name()
+            ),
+            &["Layer Type", "n", "MSE", "R2"],
+        );
+        for q in &fitted.quality {
+            t.row(&[
+                q.kind.name().to_string(),
+                (q.n_train + q.n_test).to_string(),
+                f(q.mse, 4),
+                f(q.r2, 3),
+            ]);
+        }
+        t.print();
+        // paper's headline: R2 close to 1 for nearly all layer types
+        let good = fitted.quality.iter().filter(|q| q.r2 > 0.8).count();
+        println!(
+            "{}/{} layer types with R2 > 0.8 (MSE on log-latency scale)\n",
+            good,
+            fitted.quality.len()
+        );
+    }
+    let _ = LayerKind::ALL; // referenced for doc completeness
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Table VII: quality of the Scheduler's selection — the paper's parameter
+//! sweep over objective weights ω ∈ {0.1..0.9}³.
+//!
+//! For every (model, platform, failed node, weight combination): select a
+//! technique using the *estimated* metrics, and compare against the ground
+//! truth selected from the *measured* metrics (Tables V and VI data). The
+//! quality is classification accuracy over all instances, as in the paper.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::scheduler::{select, weight_sweep, CandidateMetrics};
+use crate::dnn::variants::Technique;
+use crate::util::bench::{pct, Table};
+
+use super::{accuracy_eval, latency_eval, ExpContext};
+
+/// Downtime constants (ms) used for the sweep: empirical magnitudes from
+/// Table VIII's regime (prediction+selection cost; exit is cheapest).
+fn downtime_for(kind: &str, reinstate_ms: f64) -> f64 {
+    match kind {
+        "early-exit" => 1.8,
+        "repartition" => 3.5 + reinstate_ms,
+        _ => 3.3 + reinstate_ms,
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let lat_points = latency_eval::evaluate(ctx)?;
+    let acc_points = accuracy_eval::evaluate(ctx)?;
+    let weights = weight_sweep(0.1, 0.9, 0.1);
+
+    // Index the measured/predicted metrics per (platform, model, failed).
+    type Key = (String, String, usize);
+    let mut lat: BTreeMap<Key, Vec<(Technique, f64, f64)>> = BTreeMap::new();
+    for p in &lat_points {
+        lat.entry((p.platform.clone(), p.model.clone(), p.failed))
+            .or_default()
+            .push((p.technique, p.measured_ms, p.predicted_ms));
+    }
+    let mut acc: BTreeMap<(String, usize), Vec<(Technique, f64, f64)>> = BTreeMap::new();
+    for p in &acc_points {
+        acc.entry((p.model.clone(), p.failed))
+            .or_default()
+            .push((p.technique, p.measured, p.predicted));
+    }
+
+    let mut t = Table::new(
+        "Table VII — Scheduler selection quality (classification accuracy)",
+        &["DNN Model", "Platform 1", "Platform 2"],
+    );
+    for name in ctx.model_names() {
+        let mut cells = vec![name.clone()];
+        for platform in ["platform1", "platform2"] {
+            let mut correct = 0usize;
+            let mut total = 0usize;
+            for ((plat, model, failed), lat_entries) in &lat {
+                if plat != platform || model != &name {
+                    continue;
+                }
+                let Some(acc_entries) = acc.get(&(model.clone(), *failed)) else {
+                    continue;
+                };
+                // Join on technique.
+                let mut est_c: Vec<CandidateMetrics> = Vec::new();
+                let mut meas_c: Vec<CandidateMetrics> = Vec::new();
+                for (tech, meas_ms, pred_ms) in lat_entries {
+                    let Some((_, meas_acc, pred_acc)) =
+                        acc_entries.iter().find(|(t2, _, _)| t2 == tech)
+                    else {
+                        continue;
+                    };
+                    let d = downtime_for(tech.kind_name(), ctx.config.reinstate_ms);
+                    est_c.push(CandidateMetrics {
+                        technique: *tech,
+                        accuracy: *pred_acc,
+                        latency_ms: *pred_ms,
+                        downtime_ms: d,
+                    });
+                    meas_c.push(CandidateMetrics {
+                        technique: *tech,
+                        accuracy: *meas_acc,
+                        latency_ms: *meas_ms,
+                        downtime_ms: d,
+                    });
+                }
+                if est_c.len() < 2 {
+                    continue; // selection trivial with one candidate
+                }
+                for w in &weights {
+                    let est_pick = select(&est_c, w)?.chosen;
+                    let truth = select(&meas_c, w)?.chosen;
+                    if est_pick == truth {
+                        correct += 1;
+                    }
+                    total += 1;
+                }
+            }
+            cells.push(if total == 0 {
+                "-".into()
+            } else {
+                pct(100.0 * correct as f64 / total as f64, 2)
+            });
+            if total > 0 {
+                println!(
+                    "{name}/{platform}: {total} instances ({} failure cases x {} weight combos)",
+                    total / weights.len(),
+                    weights.len()
+                );
+            }
+        }
+        t.row(&cells);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! # CONTINUER — maintaining distributed DNN services during edge failures
+//!
+//! Rust reproduction of *CONTINUER* (Abdul Majeed et al., 2022): a
+//! coordinator that keeps a distributed DNN inference service alive when an
+//! edge node fails by selecting, per failure, one of three recovery
+//! techniques — **repartitioning**, **early-exit** or **skip-connection** —
+//! from predicted accuracy, predicted end-to-end latency and empirical
+//! downtime under user-defined objective weights.
+//!
+//! Architecture (DESIGN.md):
+//! - [`runtime`] loads AOT-compiled HLO-text artifacts (produced once by
+//!   the python/JAX/Pallas build path) via the PJRT C API and executes
+//!   them; python never runs at request time.
+//! - [`cluster`] simulates the edge cluster: nodes hosting per-block
+//!   executables, links with a latency/bandwidth model, failure injection.
+//! - [`dnn`] holds model/layer metadata mirroring the python definitions.
+//! - [`predict`] is a from-scratch gradient-boosted-tree library providing
+//!   the paper's Latency Prediction Model and Accuracy Prediction Model.
+//! - [`coordinator`] is the CONTINUER framework itself: the offline
+//!   profiler phase and the runtime scheduler / failover machinery plus
+//!   the serving pipeline (router, batcher, service).
+//! - [`workload`], [`baselines`], [`exper`] support the evaluation: load
+//!   generators, comparison policies and one driver per paper table/figure.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dnn;
+pub mod exper;
+pub mod predict;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use config::Config;

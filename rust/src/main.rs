@@ -1,0 +1,125 @@
+//! CONTINUER CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                         artifact/manifest summary
+//!   exp <id>                     regenerate a paper table/figure
+//!                                (fig2 fig3 fig4 fig6 table2 table5 fig7
+//!                                 table6 fig8 table7 table8 e2e all)
+//!   serve                        e2e serving demo with failure injection
+//!   profile                      run the layer profiler sweep
+//!   clean-results                drop cached experiment results
+//!
+//! Common options:
+//!   --artifacts <dir>   artifacts directory (default ./artifacts)
+//!   --config <file>     TOML config (see configs/default.toml)
+//!   --model <name>      resnet32 | mobilenetv2
+//!   --seed <n>          simulation seed
+
+use anyhow::{anyhow, Result};
+
+use continuer::config::Config;
+use continuer::exper::{self, ExpContext};
+use continuer::util::cli::Args;
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    } else if cfg.artifacts_dir == std::path::PathBuf::from("artifacts") {
+        cfg.artifacts_dir = exper::default_artifacts_dir();
+    }
+    if let Some(model) = args.get("model") {
+        cfg.model = model.to_string();
+    }
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    cfg.profile_reps = args.get_usize("reps", cfg.profile_reps)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "info" => {
+            let cfg = build_config(&args)?;
+            exper::require_artifacts(&cfg.artifacts_dir)?;
+            let ctx = ExpContext::open(cfg)?;
+            println!("platform: {}", ctx.engine.platform_name());
+            println!("artifacts: {}", ctx.config.artifacts_dir.display());
+            println!("micro benchmarks: {}", ctx.store.micro.len());
+            for (name, m) in &ctx.store.models {
+                println!(
+                    "model {name}: {} nodes, {} exits, {} skippable, full acc {:.2}%, {} history epochs",
+                    m.num_nodes,
+                    m.exits.len(),
+                    m.skippable_nodes.len(),
+                    m.final_accuracy.repartition * 100.0,
+                    m.history.len()
+                );
+            }
+            Ok(())
+        }
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow!("usage: continuer exp <id>"))?
+                .clone();
+            let cfg = build_config(&args)?;
+            exper::require_artifacts(&cfg.artifacts_dir)?;
+            let ctx = ExpContext::open(cfg)?;
+            exper::run(&id, &ctx)
+        }
+        "serve" => {
+            let cfg = build_config(&args)?;
+            exper::require_artifacts(&cfg.artifacts_dir)?;
+            let ctx = ExpContext::open(cfg)?;
+            exper::e2e::run_default(&ctx)
+        }
+        "profile" => {
+            let cfg = build_config(&args)?;
+            exper::require_artifacts(&cfg.artifacts_dir)?;
+            let ctx = ExpContext::open(cfg)?;
+            exper::table2::run(&ctx)
+        }
+        "clean-results" => {
+            let cfg = build_config(&args)?;
+            let dir = cfg.artifacts_dir.join("results");
+            if dir.exists() {
+                std::fs::remove_dir_all(&dir)?;
+                println!("removed {}", dir.display());
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand '{other}'; try `continuer help`")),
+    }
+}
+
+const HELP: &str = "\
+CONTINUER — maintaining distributed DNN services during edge failures
+
+USAGE: continuer <subcommand> [options]
+
+SUBCOMMANDS
+  info            summarize the artifact manifest
+  exp <id>        regenerate a paper table/figure:
+                  fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8
+                  table7 table8 e2e all
+  serve           end-to-end serving demo with failure injection
+  profile         layer-latency profiling sweep (= exp table2)
+  clean-results   drop cached experiment results
+
+OPTIONS
+  --artifacts <dir>  artifacts directory (default ./artifacts)
+  --config <file>    TOML config file
+  --model <name>     resnet32 | mobilenetv2 (for serve)
+  --seed <n>         simulation seed
+  --reps <n>         profiling repetitions";

@@ -1,0 +1,312 @@
+//! Accuracy Prediction Model (paper §IV-B-ii).
+//!
+//! Estimates the accuracy a technique variant would deliver, from the
+//! pretrained weights of the DNN — following the paper's adoption of
+//! Unterthiner et al. [23]: per-layer-group weight statistics (mean, std,
+//! percentiles q0/25/50/75/100) plus the Table-III training parameters
+//! (train accuracy/loss, learning rate, epoch, architecture id).
+//!
+//! The training set is the AOT build's per-epoch history: one instance per
+//! (epoch, technique variant); the label is that variant's measured eval
+//! accuracy. An 80:20 split (paper's ratio) yields held-out MSE / R².
+//! Accuracies are in percent, matching the paper's reported MSE scale.
+
+use anyhow::{anyhow, Result};
+
+use crate::dnn::model::{EpochRecord, ModelMeta};
+use crate::dnn::variants::Technique;
+
+use super::dataset::Dataset;
+use super::gbdt::{Gbdt, GbdtParams};
+
+const STAT_LEN: usize = 8; // [count, mean, std, q0, q25, q50, q75, q100]
+
+pub struct AccuracyModel {
+    gbdt: Gbdt,
+    pub feature_names: Vec<String>,
+}
+
+/// Quality of the fitted model on the held-out split.
+#[derive(Debug, Clone)]
+pub struct AccuracyQuality {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub mse: f64,
+    pub r2: f64,
+}
+
+pub fn feature_names() -> Vec<String> {
+    let mut names: Vec<String> = vec![
+        "is_repartition",
+        "is_exit",
+        "is_skip",
+        "position_frac",
+        "epoch_frac",
+        "lr",
+        "train_acc",
+        "train_loss",
+        "model_resnet32",
+        "model_mobilenetv2",
+        "log_active_params",
+    ]
+    .into_iter()
+    .map(String::from)
+    .collect();
+    for stat in ["mean", "std", "q0", "q25", "q50", "q75", "q100"] {
+        names.push(format!("path_{stat}"));
+    }
+    for stat in ["mean", "std", "q0", "q25", "q50", "q75", "q100"] {
+        names.push(format!("head_{stat}"));
+    }
+    names
+}
+
+/// Aggregate per-unit weight stats (count-weighted mean of each statistic)
+/// over the given unit keys ("n3", "e5", ...).
+fn aggregate_stats(rec: &EpochRecord, keys: &[String]) -> (Vec<f64>, f64) {
+    let mut agg = vec![0.0; STAT_LEN - 1];
+    let mut total = 0.0;
+    for k in keys {
+        if let Some(s) = rec.weight_stats.get(k) {
+            if s.len() == STAT_LEN {
+                let count = s[0];
+                for (i, v) in s[1..].iter().enumerate() {
+                    agg[i] += count * v;
+                }
+                total += count;
+            }
+        }
+    }
+    if total > 0.0 {
+        for v in &mut agg {
+            *v /= total;
+        }
+    }
+    (agg, total)
+}
+
+/// Unit keys on a variant's active path.
+fn active_keys(model: &ModelMeta, tech: Technique) -> (Vec<String>, String) {
+    match tech {
+        Technique::Repartition => (
+            model.nodes.iter().map(|n| format!("n{}", n.index)).collect(),
+            format!("n{}", model.num_nodes),
+        ),
+        Technique::EarlyExit(e) => (
+            model
+                .nodes
+                .iter()
+                .filter(|n| n.index <= e)
+                .map(|n| format!("n{}", n.index))
+                .chain(std::iter::once(format!("e{e}")))
+                .collect(),
+            format!("e{e}"),
+        ),
+        Technique::SkipConnection(k) => (
+            model
+                .nodes
+                .iter()
+                .filter(|n| n.index != k)
+                .map(|n| format!("n{}", n.index))
+                .collect(),
+            format!("n{}", model.num_nodes),
+        ),
+    }
+}
+
+/// Feature row for (model, epoch record, technique).
+pub fn features(model: &ModelMeta, rec: &EpochRecord, epochs: usize, tech: Technique) -> Vec<f64> {
+    let (onehot, pos) = match tech {
+        Technique::Repartition => ([1.0, 0.0, 0.0], 1.0),
+        Technique::EarlyExit(e) => ([0.0, 1.0, 0.0], e as f64 / model.num_nodes as f64),
+        Technique::SkipConnection(k) => ([0.0, 0.0, 1.0], k as f64 / model.num_nodes as f64),
+    };
+    let (path_keys, head_key) = active_keys(model, tech);
+    let (path_stats, path_count) = aggregate_stats(rec, &path_keys);
+    let (head_stats, _) = aggregate_stats(rec, &[head_key]);
+    let mut row = vec![
+        onehot[0],
+        onehot[1],
+        onehot[2],
+        pos,
+        rec.epoch as f64 / epochs.max(1) as f64,
+        rec.lr,
+        rec.train_acc,
+        rec.train_loss,
+        if model.name == "resnet32" { 1.0 } else { 0.0 },
+        if model.name == "mobilenetv2" { 1.0 } else { 0.0 },
+        (path_count + 1.0).ln(),
+    ];
+    row.extend(path_stats);
+    row.extend(head_stats);
+    row
+}
+
+/// Label (accuracy %) of a variant at one epoch, if recorded.
+fn label(rec: &EpochRecord, tech: Technique) -> Option<f64> {
+    match tech {
+        Technique::Repartition => Some(rec.variant_acc.repartition * 100.0),
+        Technique::EarlyExit(e) => rec.variant_acc.exit.get(&e).map(|a| a * 100.0),
+        Technique::SkipConnection(k) => rec.variant_acc.skip.get(&k).map(|a| a * 100.0),
+    }
+}
+
+/// All technique variants a model's history records.
+fn history_variants(model: &ModelMeta) -> Vec<Technique> {
+    let mut v = vec![Technique::Repartition];
+    v.extend(model.exit_nodes.iter().map(|&e| Technique::EarlyExit(e)));
+    v.extend(
+        model
+            .skippable_nodes
+            .iter()
+            .map(|&k| Technique::SkipConnection(k)),
+    );
+    v
+}
+
+/// Build the (features, label) dataset from one or more models' histories.
+pub fn build_dataset(models: &[&ModelMeta]) -> Dataset {
+    let mut d = Dataset::new(feature_names());
+    for m in models {
+        let epochs = m.history.len();
+        for rec in &m.history {
+            for tech in history_variants(m) {
+                if let Some(y) = label(rec, tech) {
+                    d.push(features(m, rec, epochs, tech), y);
+                }
+            }
+        }
+    }
+    d
+}
+
+impl AccuracyModel {
+    /// Fit on the models' training histories; returns held-out quality.
+    pub fn fit(
+        models: &[&ModelMeta],
+        params: &GbdtParams,
+        seed: u64,
+    ) -> Result<(AccuracyModel, AccuracyQuality)> {
+        let data = build_dataset(models);
+        if data.len() < 10 {
+            return Err(anyhow!(
+                "accuracy model: only {} instances in history",
+                data.len()
+            ));
+        }
+        let (tr, te) = data.split(0.8, seed);
+        let probe = Gbdt::fit(&tr, params);
+        let (mse, r2) = probe.evaluate(&te);
+        let quality = AccuracyQuality {
+            n_train: tr.len(),
+            n_test: te.len(),
+            mse,
+            r2,
+        };
+        // Runtime model refits on everything.
+        let gbdt = Gbdt::fit(&data, params);
+        Ok((
+            AccuracyModel {
+                gbdt,
+                feature_names: data.feature_names.clone(),
+            },
+            quality,
+        ))
+    }
+
+    /// Predict the accuracy (%) of a technique, using the final epoch's
+    /// weight statistics (i.e. the deployed weights).
+    pub fn predict(&self, model: &ModelMeta, tech: Technique) -> Result<f64> {
+        let rec = model
+            .history
+            .last()
+            .ok_or_else(|| anyhow!("{}: empty history", model.name))?;
+        let row = features(model, rec, model.history.len(), tech);
+        Ok(self.gbdt.predict_one(&row).clamp(0.0, 100.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::model::test_fixtures::tiny_model;
+    use crate::dnn::model::VariantAccuracies;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    /// Give the tiny model a plausible synthetic history.
+    fn with_history(epochs: usize) -> ModelMeta {
+        let mut m = tiny_model();
+        let mut rng = Rng::new(1);
+        for epoch in 0..epochs {
+            let progress = (epoch + 1) as f64 / epochs as f64;
+            let mut va = VariantAccuracies {
+                repartition: 0.4 + 0.5 * progress,
+                ..Default::default()
+            };
+            for e in 1..=4usize {
+                va.exit
+                    .insert(e, (0.2 + 0.1 * e as f64) * progress + 0.1);
+            }
+            for k in [2usize, 3, 4] {
+                va.skip.insert(k, 0.35 + 0.45 * progress);
+            }
+            let mut ws = BTreeMap::new();
+            for key in ["n1", "n2", "n3", "n4", "n5", "e1", "e2", "e3", "e4"] {
+                let spread = 1.0 - 0.5 * progress;
+                ws.insert(
+                    key.to_string(),
+                    vec![
+                        1000.0,
+                        0.01 * rng.normal(),
+                        spread,
+                        -2.0 * spread,
+                        -0.5 * spread,
+                        0.0,
+                        0.5 * spread,
+                        2.0 * spread,
+                    ],
+                );
+            }
+            m.history.push(EpochRecord {
+                epoch,
+                lr: 1e-3,
+                train_loss: 2.0 * (1.0 - progress) + 0.1,
+                train_acc: 0.3 + 0.65 * progress,
+                variant_acc: va,
+                weight_stats: ws,
+            });
+        }
+        m
+    }
+
+    #[test]
+    fn dataset_shape() {
+        let m = with_history(6);
+        let d = build_dataset(&[&m]);
+        // 6 epochs x (1 repartition + 4 exits + 3 skips) = 48
+        assert_eq!(d.len(), 48);
+        assert_eq!(d.n_features(), feature_names().len());
+    }
+
+    #[test]
+    fn fits_and_predicts_ordering() {
+        let m = with_history(10);
+        let (model, q) = AccuracyModel::fit(&[&m], &GbdtParams::default(), 3).unwrap();
+        assert!(q.r2 > 0.5, "r2 = {}", q.r2);
+        let full = model.predict(&m, Technique::Repartition).unwrap();
+        let early = model.predict(&m, Technique::EarlyExit(1)).unwrap();
+        assert!(
+            full > early,
+            "full {full}% should beat earliest exit {early}%"
+        );
+        // predictions clamped to [0, 100]
+        assert!((0.0..=100.0).contains(&full));
+    }
+
+    #[test]
+    fn too_little_history_errors() {
+        let m = tiny_model(); // no history
+        assert!(AccuracyModel::fit(&[&m], &GbdtParams::default(), 0).is_err());
+    }
+}

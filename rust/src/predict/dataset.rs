@@ -1,0 +1,132 @@
+//! Feature-matrix container + train/test split for the prediction models.
+
+use crate::util::rng::Rng;
+
+/// Row-major feature matrix with targets.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub features: Vec<Vec<f64>>, // rows x cols
+    pub targets: Vec<f64>,
+    pub feature_names: Vec<String>,
+}
+
+impl Dataset {
+    pub fn new(feature_names: Vec<String>) -> Dataset {
+        Dataset {
+            features: Vec::new(),
+            targets: Vec::new(),
+            feature_names,
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<f64>, target: f64) {
+        debug_assert!(
+            self.feature_names.is_empty() || row.len() == self.feature_names.len(),
+            "row arity mismatch"
+        );
+        self.features.push(row);
+        self.targets.push(target);
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.features.first().map(|r| r.len()).unwrap_or(0)
+    }
+
+    /// Shuffled train/test split; `train_frac` in (0, 1]. The paper uses
+    /// 80:20 for the accuracy model.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let n_train = n_train.clamp(1, self.len());
+        let pick = |ids: &[usize]| Dataset {
+            features: ids.iter().map(|&i| self.features[i].clone()).collect(),
+            targets: ids.iter().map(|&i| self.targets[i]).collect(),
+            feature_names: self.feature_names.clone(),
+        };
+        (pick(&idx[..n_train]), pick(&idx[n_train..]))
+    }
+
+    /// K-fold iterator: returns (train, valid) datasets per fold.
+    pub fn kfold(&self, k: usize, seed: u64) -> Vec<(Dataset, Dataset)> {
+        let k = k.max(2).min(self.len().max(2));
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let mut folds = Vec::new();
+        for f in 0..k {
+            let valid_ids: Vec<usize> = idx
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % k == f)
+                .map(|(_, &v)| v)
+                .collect();
+            let train_ids: Vec<usize> = idx
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % k != f)
+                .map(|(_, &v)| v)
+                .collect();
+            let pick = |ids: &[usize]| Dataset {
+                features: ids.iter().map(|&i| self.features[i].clone()).collect(),
+                targets: ids.iter().map(|&i| self.targets[i]).collect(),
+                feature_names: self.feature_names.clone(),
+            };
+            folds.push((pick(&train_ids), pick(&valid_ids)));
+        }
+        folds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make(n: usize) -> Dataset {
+        let mut d = Dataset::new(vec!["x".into()]);
+        for i in 0..n {
+            d.push(vec![i as f64], (i * 2) as f64);
+        }
+        d
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = make(100);
+        let (tr, te) = d.split(0.8, 1);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        // disjoint and exhaustive
+        let mut all: Vec<f64> = tr.targets.iter().chain(te.targets.iter()).cloned().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, (0..100).map(|i| (i * 2) as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_deterministic() {
+        let d = make(50);
+        let (a, _) = d.split(0.5, 7);
+        let (b, _) = d.split(0.5, 7);
+        assert_eq!(a.targets, b.targets);
+    }
+
+    #[test]
+    fn kfold_covers_everything() {
+        let d = make(25);
+        let folds = d.kfold(5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut seen: Vec<f64> = folds.iter().flat_map(|(_, v)| v.targets.clone()).collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen.len(), 25);
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), 25);
+        }
+    }
+}

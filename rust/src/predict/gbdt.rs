@@ -1,0 +1,216 @@
+//! Gradient-boosted regression trees (squared loss) — the from-scratch
+//! substitute for XGBoost (Latency Prediction Model) and LightGBM
+//! (Accuracy Prediction Model); DESIGN.md §1.3.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::dataset::Dataset;
+use super::tree::{Tree, TreeParams};
+
+/// Boosting hyperparameters (named after their XGBoost equivalents, which
+/// the paper tunes via Optuna — here via `tuner::random_search`).
+#[derive(Debug, Clone)]
+pub struct GbdtParams {
+    pub n_estimators: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    pub min_child_weight: usize,
+    pub subsample: f64,
+    pub colsample_bytree: f64,
+    pub lambda: f64,
+    pub n_bins: usize,
+    /// Stop when `early_stop` consecutive rounds fail to improve training
+    /// loss by at least `tol` (0 disables).
+    pub early_stop: usize,
+    pub seed: u64,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            n_estimators: 200,
+            learning_rate: 0.1,
+            max_depth: 6,
+            min_child_weight: 1,
+            subsample: 1.0,
+            colsample_bytree: 1.0,
+            lambda: 1.0,
+            n_bins: 32,
+            early_stop: 10,
+            seed: 123,
+        }
+    }
+}
+
+/// A fitted GBDT model.
+#[derive(Debug, Clone)]
+pub struct Gbdt {
+    base: f64,
+    learning_rate: f64,
+    trees: Vec<Tree>,
+}
+
+impl Gbdt {
+    pub fn fit(data: &Dataset, params: &GbdtParams) -> Gbdt {
+        assert!(!data.is_empty(), "Gbdt::fit on empty dataset");
+        let n = data.len();
+        let base = stats::mean(&data.targets);
+        let mut pred = vec![base; n];
+        let mut trees = Vec::new();
+        let mut rng = Rng::new(params.seed);
+        let tree_params = TreeParams {
+            max_depth: params.max_depth,
+            min_child_weight: params.min_child_weight,
+            n_bins: params.n_bins,
+            colsample: params.colsample_bytree,
+            lambda: params.lambda,
+        };
+        let mut best_loss = f64::INFINITY;
+        let mut stall = 0usize;
+        for _ in 0..params.n_estimators {
+            let residuals: Vec<f64> = data
+                .targets
+                .iter()
+                .zip(&pred)
+                .map(|(y, p)| y - p)
+                .collect();
+            let rows: Vec<usize> = if params.subsample < 1.0 {
+                let k = ((n as f64) * params.subsample).ceil() as usize;
+                rng.sample_indices(n, k.clamp(1, n))
+            } else {
+                (0..n).collect()
+            };
+            let tree = Tree::fit(&data.features, &residuals, &rows, &tree_params, &mut rng);
+            for i in 0..n {
+                pred[i] += params.learning_rate * tree.predict_one(&data.features[i]);
+            }
+            trees.push(tree);
+            if params.early_stop > 0 {
+                let loss = stats::mse(&pred, &data.targets);
+                if loss + 1e-12 < best_loss {
+                    best_loss = loss;
+                    stall = 0;
+                } else {
+                    stall += 1;
+                    if stall >= params.early_stop {
+                        break;
+                    }
+                }
+            }
+        }
+        Gbdt {
+            base,
+            learning_rate: params.learning_rate,
+            trees,
+        }
+    }
+
+    pub fn predict_one(&self, row: &[f64]) -> f64 {
+        let mut p = self.base;
+        for t in &self.trees {
+            p += self.learning_rate * t.predict_one(row);
+        }
+        p
+    }
+
+    pub fn predict(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict_one(r)).collect()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Evaluate (MSE, R²) on a dataset.
+    pub fn evaluate(&self, data: &Dataset) -> (f64, f64) {
+        let pred = self.predict(&data.features);
+        (
+            stats::mse(&pred, &data.targets),
+            stats::r2(&pred, &data.targets),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn friedman_like(n: usize, seed: u64) -> Dataset {
+        // y = 10 sin(x0 x1) + 20 (x2 - .5)^2 + 10 x3 + 5 x4 + noise
+        let mut rng = Rng::new(seed);
+        let mut d = Dataset::new((0..5).map(|i| format!("x{i}")).collect());
+        for _ in 0..n {
+            let x: Vec<f64> = (0..5).map(|_| rng.f64()).collect();
+            let y = 10.0 * (x[0] * x[1] * std::f64::consts::PI).sin()
+                + 20.0 * (x[2] - 0.5).powi(2)
+                + 10.0 * x[3]
+                + 5.0 * x[4]
+                + rng.normal() * 0.1;
+            d.push(x, y);
+        }
+        d
+    }
+
+    #[test]
+    fn learns_nonlinear_function() {
+        let data = friedman_like(600, 1);
+        let (tr, te) = data.split(0.8, 2);
+        let model = Gbdt::fit(&tr, &GbdtParams::default());
+        let (mse, r2) = model.evaluate(&te);
+        assert!(r2 > 0.9, "r2 = {r2}, mse = {mse}");
+    }
+
+    #[test]
+    fn constant_target() {
+        let mut d = Dataset::new(vec!["x".into()]);
+        for i in 0..50 {
+            d.push(vec![i as f64], 7.0);
+        }
+        let m = Gbdt::fit(&d, &GbdtParams::default());
+        assert!((m.predict_one(&[25.0]) - 7.0).abs() < 1e-6);
+        // early stop should have kicked in long before 200 trees
+        assert!(m.n_trees() < 50);
+    }
+
+    #[test]
+    fn shrinkage_stabilises() {
+        let data = friedman_like(300, 3);
+        let slow = Gbdt::fit(
+            &data,
+            &GbdtParams {
+                learning_rate: 0.05,
+                n_estimators: 50,
+                early_stop: 0,
+                ..Default::default()
+            },
+        );
+        assert_eq!(slow.n_trees(), 50);
+        let (_, r2_train) = slow.evaluate(&data);
+        assert!(r2_train > 0.8);
+    }
+
+    #[test]
+    fn subsample_and_colsample_run() {
+        let data = friedman_like(300, 4);
+        let (tr, te) = data.split(0.8, 5);
+        let m = Gbdt::fit(
+            &tr,
+            &GbdtParams {
+                subsample: 0.7,
+                colsample_bytree: 0.6,
+                ..Default::default()
+            },
+        );
+        let (_, r2) = m.evaluate(&te);
+        assert!(r2 > 0.8, "r2 = {r2}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = friedman_like(200, 6);
+        let a = Gbdt::fit(&data, &GbdtParams::default());
+        let b = Gbdt::fit(&data, &GbdtParams::default());
+        assert_eq!(a.predict_one(&[0.5; 5]), b.predict_one(&[0.5; 5]));
+    }
+}

@@ -1,0 +1,211 @@
+//! Latency Prediction Model (paper §IV-B-i).
+//!
+//! One GBDT per layer type (Table I), trained on the profiler's layer
+//! micro-benchmarks and queried at failure time to estimate the end-to-end
+//! latency of each candidate technique. Targets are trained in log space
+//! (layer latencies span orders of magnitude); reported MSE/R² (Table II)
+//! are computed on the log-scale targets, matching the paper's
+//! normalised-error regime.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::dnn::layers::{LayerKind, LayerSpec};
+
+use super::dataset::Dataset;
+use super::gbdt::{Gbdt, GbdtParams};
+
+/// A profiled layer sample: spec + measured latency (milliseconds).
+#[derive(Debug, Clone)]
+pub struct LayerSample {
+    pub spec: LayerSpec,
+    pub latency_ms: f64,
+}
+
+/// Per-kind regression quality (paper Table II rows).
+#[derive(Debug, Clone)]
+pub struct KindQuality {
+    pub kind: LayerKind,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub mse: f64,
+    pub r2: f64,
+}
+
+/// The fitted latency model.
+pub struct LatencyModel {
+    models: BTreeMap<LayerKind, Gbdt>,
+    /// Fallback ms-per-flop for kinds with no samples at all.
+    fallback_ms_per_flop: f64,
+}
+
+fn log_target(ms: f64) -> f64 {
+    (ms.max(1e-9)).ln()
+}
+
+fn unlog(v: f64) -> f64 {
+    v.exp()
+}
+
+impl LatencyModel {
+    /// Fit per-kind models. Returns the model plus held-out quality per
+    /// kind (80:20 split per kind; the runtime models are refit on all
+    /// samples afterwards).
+    pub fn fit(
+        samples: &[LayerSample],
+        params: &GbdtParams,
+        seed: u64,
+    ) -> Result<(LatencyModel, Vec<KindQuality>)> {
+        if samples.is_empty() {
+            return Err(anyhow!("LatencyModel::fit: no samples"));
+        }
+        let mut by_kind: BTreeMap<LayerKind, Vec<&LayerSample>> = BTreeMap::new();
+        for s in samples {
+            by_kind.entry(s.spec.kind).or_default().push(s);
+        }
+        let mut models = BTreeMap::new();
+        let mut quality = Vec::new();
+        for (kind, group) in &by_kind {
+            let mut data = Dataset::new(
+                LayerSpec::FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            );
+            for s in group {
+                data.push(s.spec.features(), log_target(s.latency_ms));
+            }
+            if data.len() >= 8 {
+                let (tr, te) = data.split(0.8, seed);
+                let m = Gbdt::fit(&tr, params);
+                let (mse, r2) = m.evaluate(&te);
+                quality.push(KindQuality {
+                    kind: *kind,
+                    n_train: tr.len(),
+                    n_test: te.len(),
+                    mse,
+                    r2,
+                });
+            }
+            // Runtime model uses every sample.
+            models.insert(*kind, Gbdt::fit(&data, params));
+        }
+        // Fallback constant from the global flops/latency ratio.
+        let tot_ms: f64 = samples.iter().map(|s| s.latency_ms).sum();
+        let tot_flops: f64 = samples.iter().map(|s| s.spec.flops() as f64).sum();
+        Ok((
+            LatencyModel {
+                models,
+                fallback_ms_per_flop: if tot_flops > 0.0 { tot_ms / tot_flops } else { 1e-6 },
+            },
+            quality,
+        ))
+    }
+
+    /// Predicted latency of one layer, milliseconds.
+    pub fn predict_layer(&self, spec: &LayerSpec) -> f64 {
+        match self.models.get(&spec.kind) {
+            Some(m) => unlog(m.predict_one(&spec.features())),
+            None => spec.flops() as f64 * self.fallback_ms_per_flop,
+        }
+    }
+
+    /// Predicted compute latency of a layer path (sum over layers), ms.
+    pub fn predict_path<'a>(&self, layers: impl IntoIterator<Item = &'a LayerSpec>) -> f64 {
+        layers.into_iter().map(|l| self.predict_layer(l)).sum()
+    }
+
+    pub fn kinds(&self) -> Vec<LayerKind> {
+        self.models.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthetic ground truth: latency ~ a*flops + b*output + noise.
+    fn synth_samples(kind: LayerKind, n: usize, seed: u64) -> Vec<LayerSample> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::new();
+        for _ in 0..n {
+            let h = [4usize, 8, 16, 32][rng.below(4)];
+            let c = [8usize, 16, 32, 64][rng.below(4)];
+            let f = [16usize, 32, 64][rng.below(3)];
+            let spec = LayerSpec {
+                kind,
+                input_h: h,
+                input_w: h,
+                input_c: c,
+                kernel: if kind == LayerKind::Conv { 3 } else { 0 },
+                stride: 1,
+                filters: if kind == LayerKind::Conv { f } else { 0 },
+            };
+            let lat = 1e-6 * spec.flops() as f64 * (1.0 + 0.05 * rng.normal()) + 0.01;
+            out.push(LayerSample {
+                spec,
+                latency_ms: lat.max(1e-4),
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn fits_flops_driven_latency() {
+        let mut samples = synth_samples(LayerKind::Conv, 120, 1);
+        samples.extend(synth_samples(LayerKind::Relu, 60, 2));
+        let (model, quality) = LatencyModel::fit(&samples, &GbdtParams::default(), 3).unwrap();
+        assert_eq!(quality.len(), 2);
+        for q in &quality {
+            assert!(q.r2 > 0.7, "{:?} r2 = {}", q.kind, q.r2);
+        }
+        // big conv must predict slower than small conv
+        let small = LayerSpec {
+            kind: LayerKind::Conv,
+            input_h: 4,
+            input_w: 4,
+            input_c: 8,
+            kernel: 3,
+            stride: 1,
+            filters: 16,
+        };
+        let big = LayerSpec {
+            input_h: 32,
+            input_w: 32,
+            input_c: 64,
+            filters: 64,
+            ..small.clone()
+        };
+        assert!(model.predict_layer(&big) > model.predict_layer(&small));
+    }
+
+    #[test]
+    fn path_is_sum() {
+        let samples = synth_samples(LayerKind::Conv, 80, 4);
+        let (model, _) = LatencyModel::fit(&samples, &GbdtParams::default(), 5).unwrap();
+        let s = &samples[0].spec;
+        let one = model.predict_layer(s);
+        let three = model.predict_path([s, s, s]);
+        assert!((three - 3.0 * one).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fallback_for_unseen_kind() {
+        let samples = synth_samples(LayerKind::Conv, 40, 6);
+        let (model, _) = LatencyModel::fit(&samples, &GbdtParams::default(), 7).unwrap();
+        let dense = LayerSpec {
+            kind: LayerKind::Dense,
+            input_h: 1,
+            input_w: 1,
+            input_c: 128,
+            kernel: 0,
+            stride: 0,
+            filters: 10,
+        };
+        assert!(model.predict_layer(&dense) > 0.0);
+    }
+
+    #[test]
+    fn empty_errors() {
+        assert!(LatencyModel::fit(&[], &GbdtParams::default(), 0).is_err());
+    }
+}

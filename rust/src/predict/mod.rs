@@ -1,0 +1,20 @@
+//! Prediction substrate: a from-scratch gradient-boosted-tree library
+//! (XGBoost / LightGBM / Optuna substitutes — DESIGN.md §1.3) plus the two
+//! models the CONTINUER profiler phase trains:
+//!
+//! - [`latency_model::LatencyModel`] — per-layer-type latency regression
+//!   (paper Table I features, Table II quality).
+//! - [`accuracy_model::AccuracyModel`] — accuracy-from-weight-statistics
+//!   regression (paper §IV-B-ii, Unterthiner et al. [23]).
+
+pub mod accuracy_model;
+pub mod dataset;
+pub mod gbdt;
+pub mod latency_model;
+pub mod tree;
+pub mod tuner;
+
+pub use accuracy_model::{AccuracyModel, AccuracyQuality};
+pub use dataset::Dataset;
+pub use gbdt::{Gbdt, GbdtParams};
+pub use latency_model::{KindQuality, LatencyModel, LayerSample};

@@ -1,0 +1,283 @@
+//! Regression tree with histogram-based split finding — the weak learner
+//! of the GBDT (the paper's XGBoost uses `tree_method=hist`; this is the
+//! same idea built from scratch).
+
+use crate::util::rng::Rng;
+
+/// Tree growth parameters.
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    /// Minimum number of samples in a leaf (XGBoost's min_child_weight
+    /// with hessian=1 under squared loss).
+    pub min_child_weight: usize,
+    /// Number of histogram bins per feature.
+    pub n_bins: usize,
+    /// Fraction of features considered per split (colsample).
+    pub colsample: f64,
+    /// L2 regularisation on leaf values (XGBoost lambda).
+    pub lambda: f64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 6,
+            min_child_weight: 1,
+            n_bins: 32,
+            colsample: 1.0,
+            lambda: 1.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// A fitted regression tree.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// Fit to (features[rows], residuals[rows]) over the given row subset.
+    pub fn fit(
+        features: &[Vec<f64>],
+        residuals: &[f64],
+        rows: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        let n_features = features.first().map(|r| r.len()).unwrap_or(0);
+        let mut tree = Tree { nodes: Vec::new() };
+        let root_rows: Vec<usize> = rows.to_vec();
+        tree.grow(features, residuals, root_rows, 0, n_features, params, rng);
+        tree
+    }
+
+    fn leaf_value(residuals: &[f64], rows: &[usize], lambda: f64) -> f64 {
+        // Squared loss: grad = -(r), hess = 1 => value = sum(r)/(n + lambda)
+        let sum: f64 = rows.iter().map(|&i| residuals[i]).sum();
+        sum / (rows.len() as f64 + lambda)
+    }
+
+    fn grow(
+        &mut self,
+        features: &[Vec<f64>],
+        residuals: &[f64],
+        rows: Vec<usize>,
+        depth: usize,
+        n_features: usize,
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> usize {
+        let make_leaf = |t: &mut Tree, rows: &[usize]| {
+            t.nodes.push(Node::Leaf {
+                value: Self::leaf_value(residuals, rows, params.lambda),
+            });
+            t.nodes.len() - 1
+        };
+        if depth >= params.max_depth || rows.len() < 2 * params.min_child_weight {
+            return make_leaf(self, &rows);
+        }
+
+        // Candidate features (colsample).
+        let n_cand = ((n_features as f64) * params.colsample).ceil() as usize;
+        let cand: Vec<usize> = if n_cand >= n_features {
+            (0..n_features).collect()
+        } else {
+            rng.sample_indices(n_features, n_cand.max(1))
+        };
+
+        // Best split by gain (variance-reduction / XGBoost gain with h=1).
+        let total_g: f64 = rows.iter().map(|&i| residuals[i]).sum();
+        let total_n = rows.len() as f64;
+        let lam = params.lambda;
+        let score = |g: f64, n: f64| g * g / (n + lam);
+        let base_score = score(total_g, total_n);
+        let mut best: Option<(f64, usize, f64)> = None; // (gain, feature, threshold)
+
+        for &f in &cand {
+            // Histogram bins from min/max of this node's rows.
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &i in &rows {
+                let v = features[i][f];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if !(hi > lo) {
+                continue;
+            }
+            let nb = params.n_bins;
+            let width = (hi - lo) / nb as f64;
+            let mut bin_g = vec![0.0f64; nb];
+            let mut bin_n = vec![0usize; nb];
+            for &i in &rows {
+                let b = (((features[i][f] - lo) / width) as usize).min(nb - 1);
+                bin_g[b] += residuals[i];
+                bin_n[b] += 1;
+            }
+            let mut g_left = 0.0;
+            let mut n_left = 0usize;
+            for b in 0..nb - 1 {
+                g_left += bin_g[b];
+                n_left += bin_n[b];
+                let n_right = rows.len() - n_left;
+                if n_left < params.min_child_weight || n_right < params.min_child_weight {
+                    continue;
+                }
+                let gain = score(g_left, n_left as f64)
+                    + score(total_g - g_left, n_right as f64)
+                    - base_score;
+                let threshold = lo + width * (b + 1) as f64;
+                if gain > 1e-12 && best.map(|(bg, _, _)| gain > bg).unwrap_or(true) {
+                    best = Some((gain, f, threshold));
+                }
+            }
+        }
+
+        let Some((_, feature, threshold)) = best else {
+            return make_leaf(self, &rows);
+        };
+        let (left_rows, right_rows): (Vec<usize>, Vec<usize>) =
+            rows.iter().partition(|&&i| features[i][feature] < threshold);
+        if left_rows.is_empty() || right_rows.is_empty() {
+            return make_leaf(self, &rows);
+        }
+        // Reserve our slot, then grow children.
+        let my_idx = self.nodes.len();
+        self.nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+        let left = self.grow(features, residuals, left_rows, depth + 1, n_features, params, rng);
+        let right = self.grow(features, residuals, right_rows, depth + 1, n_features, params, rng);
+        self.nodes[my_idx] = Node::Split {
+            feature,
+            threshold,
+            left,
+            right,
+        };
+        my_idx
+    }
+
+    pub fn predict_one(&self, row: &[f64]) -> f64 {
+        let mut idx = 0usize;
+        loop {
+            match &self.nodes[idx] {
+                Node::Leaf { value } => return *value,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    idx = if row[*feature] < *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn d(nodes: &[Node], i: usize) -> usize {
+            match &nodes[i] {
+                Node::Leaf { .. } => 1,
+                Node::Split { left, right, .. } => 1 + d(nodes, *left).max(d(nodes, *right)),
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            d(&self.nodes, 0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = 1 if x > 5 else -1
+        let features: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 10.0]).collect();
+        let targets: Vec<f64> = (0..100).map(|i| if i > 50 { 1.0 } else { -1.0 }).collect();
+        (features, targets)
+    }
+
+    #[test]
+    fn fits_step_function() {
+        let (x, y) = step_data();
+        let rows: Vec<usize> = (0..x.len()).collect();
+        let mut rng = Rng::new(0);
+        let t = Tree::fit(&x, &y, &rows, &TreeParams::default(), &mut rng);
+        assert!(t.predict_one(&[9.0]) > 0.8);
+        assert!(t.predict_one(&[1.0]) < -0.8);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (x, y) = step_data();
+        let rows: Vec<usize> = (0..x.len()).collect();
+        let mut rng = Rng::new(0);
+        let p = TreeParams {
+            max_depth: 2,
+            ..Default::default()
+        };
+        let t = Tree::fit(&x, &y, &rows, &p, &mut rng);
+        assert!(t.depth() <= 3, "depth {} exceeds max_depth+1", t.depth());
+    }
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y = vec![2.0; 20];
+        let rows: Vec<usize> = (0..20).collect();
+        let mut rng = Rng::new(1);
+        let t = Tree::fit(&x, &y, &rows, &TreeParams::default(), &mut rng);
+        assert_eq!(t.n_nodes(), 1);
+        // shrinks toward 0 by lambda: 40/(20+1)
+        assert!((t.predict_one(&[5.0]) - 40.0 / 21.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_feature_interaction() {
+        // y depends only on feature 1; tree should ignore feature 0
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let a = rng.f64();
+            let b = rng.f64();
+            x.push(vec![a, b]);
+            y.push(if b > 0.5 { 3.0 } else { -3.0 });
+        }
+        let rows: Vec<usize> = (0..x.len()).collect();
+        let t = Tree::fit(&x, &y, &rows, &TreeParams::default(), &mut Rng::new(0));
+        assert!(t.predict_one(&[0.1, 0.9]) > 2.0);
+        assert!(t.predict_one(&[0.9, 0.1]) < -2.0);
+    }
+
+    #[test]
+    fn min_child_weight_blocks_tiny_leaves() {
+        let (x, y) = step_data();
+        let rows: Vec<usize> = (0..x.len()).collect();
+        let p = TreeParams {
+            min_child_weight: 60, // cannot split 100 rows into >= 60 + >= 60
+            ..Default::default()
+        };
+        let t = Tree::fit(&x, &y, &rows, &p, &mut Rng::new(0));
+        assert_eq!(t.n_nodes(), 1);
+    }
+}

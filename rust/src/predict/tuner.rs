@@ -1,0 +1,152 @@
+//! Random-search hyperparameter tuner — the from-scratch substitute for the
+//! paper's Optuna optimisation of the XGBoost predictors (DESIGN.md §1.3).
+//!
+//! Search space mirrors what the paper reports tuning: learning rate,
+//! n_estimators, max_depth, colsample_bytree, min_child_weight. Selection
+//! is by mean k-fold validation MSE.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::dataset::Dataset;
+use super::gbdt::{Gbdt, GbdtParams};
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct TunerConfig {
+    pub trials: usize,
+    pub folds: usize,
+    pub seed: u64,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            trials: 20,
+            folds: 3,
+            seed: 7,
+        }
+    }
+}
+
+/// Result of a tuning run.
+#[derive(Debug, Clone)]
+pub struct TunerResult {
+    pub best: GbdtParams,
+    pub best_mse: f64,
+    /// (params, validation mse) per trial, in evaluation order.
+    pub trials: Vec<(GbdtParams, f64)>,
+}
+
+fn sample_params(rng: &mut Rng) -> GbdtParams {
+    let n_estimators = [50usize, 100, 200, 400];
+    let learning_rate = [0.03, 0.05, 0.1, 0.2];
+    let subsample = [0.7, 0.85, 1.0];
+    let colsample = [0.7, 1.0];
+    let lambda = [0.5, 1.0, 2.0];
+    GbdtParams {
+        n_estimators: n_estimators[rng.below(4)],
+        learning_rate: learning_rate[rng.below(4)],
+        max_depth: rng.int_range(3, 10) as usize,
+        min_child_weight: rng.int_range(1, 4) as usize,
+        subsample: subsample[rng.below(3)],
+        colsample_bytree: colsample[rng.below(2)],
+        lambda: lambda[rng.below(3)],
+        ..GbdtParams::default()
+    }
+}
+
+fn cv_mse(data: &Dataset, params: &GbdtParams, folds: usize, seed: u64) -> f64 {
+    let fold_mses: Vec<f64> = data
+        .kfold(folds, seed)
+        .into_iter()
+        .filter(|(tr, va)| !tr.is_empty() && !va.is_empty())
+        .map(|(tr, va)| {
+            let m = Gbdt::fit(&tr, params);
+            let pred = m.predict(&va.features);
+            stats::mse(&pred, &va.targets)
+        })
+        .collect();
+    stats::mean(&fold_mses)
+}
+
+/// Random-search over GBDT hyperparameters; returns the best params by
+/// cross-validated MSE. Always includes the defaults as trial 0 so the
+/// tuner can only improve on them.
+pub fn random_search(data: &Dataset, cfg: &TunerConfig) -> TunerResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut trials = Vec::new();
+    let mut best: Option<(GbdtParams, f64)> = None;
+    for t in 0..cfg.trials.max(1) {
+        let params = if t == 0 {
+            GbdtParams::default()
+        } else {
+            sample_params(&mut rng)
+        };
+        let mse = cv_mse(data, &params, cfg.folds, cfg.seed);
+        if best
+            .as_ref()
+            .map(|(_, bm)| mse < *bm)
+            .unwrap_or(true)
+        {
+            best = Some((params.clone(), mse));
+        }
+        trials.push((params, mse));
+    }
+    let (best_params, best_mse) = best.unwrap();
+    TunerResult {
+        best: best_params,
+        best_mse,
+        trials,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic(n: usize) -> Dataset {
+        let mut rng = Rng::new(1);
+        let mut d = Dataset::new(vec!["x".into()]);
+        for _ in 0..n {
+            let x = rng.f64() * 4.0 - 2.0;
+            d.push(vec![x], x * x + rng.normal() * 0.05);
+        }
+        d
+    }
+
+    #[test]
+    fn finds_reasonable_params() {
+        let data = quadratic(300);
+        let res = random_search(
+            &data,
+            &TunerConfig {
+                trials: 5,
+                folds: 3,
+                seed: 2,
+            },
+        );
+        assert_eq!(res.trials.len(), 5);
+        assert!(res.best_mse < 0.1, "best cv mse {}", res.best_mse);
+        // best must be min over trials
+        let min_trial = res
+            .trials
+            .iter()
+            .map(|(_, m)| *m)
+            .fold(f64::INFINITY, f64::min);
+        assert!((res.best_mse - min_trial).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic() {
+        let data = quadratic(150);
+        let cfg = TunerConfig {
+            trials: 4,
+            folds: 2,
+            seed: 9,
+        };
+        let a = random_search(&data, &cfg);
+        let b = random_search(&data, &cfg);
+        assert_eq!(a.best_mse, b.best_mse);
+    }
+}

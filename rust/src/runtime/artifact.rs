@@ -1,0 +1,178 @@
+//! Artifact store: the manifest.json + weights + data files the python AOT
+//! path emits, resolved into typed metadata and loadable units.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::dnn::layers::LayerSpec;
+use crate::dnn::model::{ModelMeta, WeightEntry};
+use crate::util::json::Json;
+
+use super::pjrt::{Engine, UnitExecutable};
+use super::tensor::{read_f32_file, read_i32_file, HostTensor};
+
+/// One latency micro-benchmark artifact (single layer).
+#[derive(Debug, Clone)]
+pub struct MicroEntry {
+    pub spec: LayerSpec,
+    pub artifact: String,
+}
+
+/// Which unit of a model to load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnitKind {
+    Node(usize),
+    Exit(usize),
+}
+
+/// Parsed artifact store.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub micro: Vec<MicroEntry>,
+    pub rust_eval_n: usize,
+    pub num_classes: usize,
+    pub batch_sizes: Vec<usize>,
+    /// Lazily-loaded flat weight files per model.
+    weights: Mutex<BTreeMap<String, std::sync::Arc<Vec<f32>>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: &Path) -> Result<ArtifactStore> {
+        let manifest = Json::from_file(&dir.join("manifest.json"))?;
+        let mut models = BTreeMap::new();
+        for (name, v) in manifest
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            models.insert(name.clone(), ModelMeta::from_json(name, v)?);
+        }
+        let mut micro = Vec::new();
+        if let Some(arr) = manifest.get("micro").and_then(Json::as_arr) {
+            for m in arr {
+                micro.push(MicroEntry {
+                    spec: LayerSpec::from_json(m)?,
+                    artifact: m
+                        .get("artifact")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("micro entry missing artifact"))?
+                        .to_string(),
+                });
+            }
+        }
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            models,
+            micro,
+            rust_eval_n: manifest
+                .get("rust_eval_n")
+                .and_then(Json::as_usize)
+                .unwrap_or(128),
+            num_classes: manifest
+                .get("num_classes")
+                .and_then(Json::as_usize)
+                .unwrap_or(10),
+            batch_sizes: manifest
+                .get("batch_sizes")
+                .and_then(Json::as_usize_vec)
+                .unwrap_or_else(|| vec![1]),
+            weights: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("no model '{name}' in manifest"))
+    }
+
+    /// Flat weight file for a model (cached).
+    pub fn weights(&self, model: &str) -> Result<std::sync::Arc<Vec<f32>>> {
+        let mut cache = self.weights.lock().unwrap();
+        if let Some(w) = cache.get(model) {
+            return Ok(w.clone());
+        }
+        let meta = self.model(model)?;
+        let path = self.dir.join(&meta.weights_file);
+        let bytes =
+            std::fs::read(&path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let arc = std::sync::Arc::new(data);
+        cache.insert(model.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Materialise the weight-leaf tensors for a unit, in argument order.
+    pub fn weight_slices(&self, model: &str, entries: &[WeightEntry]) -> Result<Vec<HostTensor>> {
+        let flat = self.weights(model)?;
+        entries
+            .iter()
+            .map(|e| {
+                let end = e.offset + e.elems();
+                if end > flat.len() {
+                    return Err(anyhow!(
+                        "{model}: weight '{}' [{}..{end}) beyond file ({})",
+                        e.name,
+                        e.offset,
+                        flat.len()
+                    ));
+                }
+                HostTensor::new(e.shape.clone(), flat[e.offset..end].to_vec())
+            })
+            .collect()
+    }
+
+    /// Load + compile a model unit at a batch size present in the manifest.
+    pub fn load_unit(
+        &self,
+        engine: &Engine,
+        model: &str,
+        unit: UnitKind,
+        batch: usize,
+    ) -> Result<UnitExecutable> {
+        let meta = self.model(model)?;
+        let (artifacts, weights, in_shape, out_shape) = match unit {
+            UnitKind::Node(i) => {
+                let n = meta.node(i)?;
+                (&n.artifacts, &n.weights, n.in_shape.clone(), n.out_shape.clone())
+            }
+            UnitKind::Exit(i) => {
+                let e = meta.exit(i)?;
+                (
+                    &e.artifacts,
+                    &e.weights,
+                    e.in_shape.clone(),
+                    vec![self.num_classes],
+                )
+            }
+        };
+        let rel = artifacts
+            .get(&batch)
+            .ok_or_else(|| anyhow!("{model} {unit:?}: no artifact for batch {batch}"))?;
+        let slices = self.weight_slices(model, weights)?;
+        let mut bin = vec![batch];
+        bin.extend(in_shape);
+        let mut bout = vec![batch];
+        bout.extend(out_shape);
+        UnitExecutable::load(engine, &self.dir.join(rel), slices, bin, bout)
+    }
+
+    /// The rust-side eval set: (images [n, 32, 32, 3], labels).
+    pub fn test_set(&self) -> Result<(HostTensor, Vec<i32>)> {
+        let n = self.rust_eval_n;
+        let x = read_f32_file(&self.dir.join("data/test_x.bin"), vec![n, 32, 32, 3])?;
+        let y = read_i32_file(&self.dir.join("data/test_y.bin"), n)?;
+        Ok((x, y))
+    }
+
+    pub fn micro_path(&self, entry: &MicroEntry) -> PathBuf {
+        self.dir.join(&entry.artifact)
+    }
+}

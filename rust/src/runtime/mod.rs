@@ -1,0 +1,10 @@
+//! Runtime layer: PJRT engine, AOT artifact store and host tensors.
+//! Python never runs here — artifacts were lowered once at build time.
+
+pub mod artifact;
+pub mod pjrt;
+pub mod tensor;
+
+pub use artifact::{ArtifactStore, MicroEntry, UnitKind};
+pub use pjrt::{Engine, UnitExecutable};
+pub use tensor::HostTensor;

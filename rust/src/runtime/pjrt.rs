@@ -1,0 +1,114 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client (the `xla` crate / xla_extension 0.5.1).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids which this XLA rejects; `HloModuleProto::from_text_file`
+//! reparses and reassigns ids (see /opt/xla-example/README.md).
+//!
+//! A `UnitExecutable` couples one compiled per-node (or exit-head) artifact
+//! with its weight arguments, which are uploaded once as device buffers at
+//! load time — the request path only transfers the activation.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::tensor::HostTensor;
+
+/// Wrapper around the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact.
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("uploading tensor: {e}"))
+    }
+}
+
+/// One compiled block/exit artifact plus its resident weight buffers.
+pub struct UnitExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::PjRtBuffer>,
+    /// Expected activation shape (with batch dim).
+    pub in_shape: Vec<usize>,
+    /// Output shape (with batch dim).
+    pub out_shape: Vec<usize>,
+}
+
+impl UnitExecutable {
+    /// Compile `path` and bind `weight_slices` (leaf tensors in argument
+    /// order) as resident buffers.
+    pub fn load(
+        engine: &Engine,
+        path: &Path,
+        weight_slices: Vec<HostTensor>,
+        in_shape: Vec<usize>,
+        out_shape: Vec<usize>,
+    ) -> Result<UnitExecutable> {
+        let exe = engine.compile_file(path)?;
+        let weights = weight_slices
+            .iter()
+            .map(|t| engine.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(UnitExecutable {
+            exe,
+            weights,
+            in_shape,
+            out_shape,
+        })
+    }
+
+    /// Run the unit on an activation. Returns the output tensor.
+    pub fn run(&self, engine: &Engine, activation: &HostTensor) -> Result<HostTensor> {
+        if activation.shape != self.in_shape {
+            return Err(anyhow!(
+                "activation shape {:?} != expected {:?}",
+                activation.shape,
+                self.in_shape
+            ));
+        }
+        let act = engine.upload(activation)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&act);
+        args.extend(self.weights.iter());
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing unit: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        // Artifacts are lowered with return_tuple=True -> 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untupling: {e}"))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("reading result: {e}"))?;
+        HostTensor::new(self.out_shape.clone(), data)
+    }
+}

@@ -1,0 +1,159 @@
+//! Host-side tensors and raw binary readers for the AOT data files.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A dense f32 host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let expect: usize = shape.iter().product();
+        if data.len() != expect {
+            bail!(
+                "tensor data length {} does not match shape {:?} ({} elems)",
+                data.len(),
+                shape,
+                expect
+            );
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Leading-axis slice [lo, hi): e.g. a batch sub-range.
+    pub fn slice0(&self, lo: usize, hi: usize) -> Result<HostTensor> {
+        if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+            bail!("slice0({lo}, {hi}) out of range for shape {:?}", self.shape);
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Ok(HostTensor {
+            shape,
+            data: self.data[lo * row..hi * row].to_vec(),
+        })
+    }
+
+    /// Concatenate along axis 0. All tensors must share trailing dims.
+    pub fn concat0(parts: &[HostTensor]) -> Result<HostTensor> {
+        let first = parts.first().ok_or_else(|| anyhow!("concat0 of nothing"))?;
+        let trailing = &first.shape[1..];
+        let mut n0 = 0;
+        let mut data = Vec::new();
+        for p in parts {
+            if &p.shape[1..] != trailing {
+                bail!("concat0: trailing shape mismatch");
+            }
+            n0 += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = first.shape.clone();
+        shape[0] = n0;
+        HostTensor::new(shape, data)
+    }
+
+    /// Argmax over the last axis, per leading row (logits -> class ids).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        let c = *self.shape.last().unwrap_or(&1);
+        self.data
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Read a raw little-endian f32 file into a tensor of the given shape.
+pub fn read_f32_file(path: &std::path::Path, shape: Vec<usize>) -> Result<HostTensor> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let expect: usize = shape.iter().product::<usize>() * 4;
+    if bytes.len() != expect {
+        bail!(
+            "{}: {} bytes but shape {:?} needs {}",
+            path.display(),
+            bytes.len(),
+            shape,
+            expect
+        );
+    }
+    let data = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    HostTensor::new(shape, data)
+}
+
+/// Read a raw little-endian i32 file (labels).
+pub fn read_i32_file(path: &std::path::Path, n: usize) -> Result<Vec<i32>> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    if bytes.len() != n * 4 {
+        bail!("{}: {} bytes but expected {}", path.display(), bytes.len(), n * 4);
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let t = HostTensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        let a = t.slice0(0, 2).unwrap();
+        let b = t.slice0(2, 4).unwrap();
+        assert_eq!(a.shape, vec![2, 2]);
+        assert_eq!(HostTensor::concat0(&[a, b]).unwrap(), t);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = HostTensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("continuer_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals: Vec<f32> = vec![1.5, -2.0, 3.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, &bytes).unwrap();
+        let t = read_f32_file(&p, vec![2, 2]).unwrap();
+        assert_eq!(t.data, vals);
+        assert!(read_f32_file(&p, vec![3, 2]).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `Bencher` does warmup + timed iterations with outlier-robust reporting;
+//! `Table` renders aligned ASCII tables for the experiment harness so every
+//! paper table/figure prints in a consistent format.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Time `f` with warmup; returns per-iteration summaries in microseconds.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    Summary::of(&samples)
+}
+
+/// Time a batch-style closure that reports how many items it processed;
+/// returns (per-item mean us, items/sec).
+pub fn bench_throughput<F: FnMut() -> usize>(warmup: usize, iters: usize, mut f: F) -> (f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut items = 0usize;
+    for _ in 0..iters {
+        items += f();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    if items == 0 {
+        return (0.0, 0.0);
+    }
+    (secs * 1e6 / items as f64, items as f64 / secs)
+}
+
+/// Aligned ASCII table builder.
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("| ");
+            for i in 0..ncol {
+                line.push_str(&format!("{:w$} ", cells[i], w = widths[i]));
+                line.push_str("| ");
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with fixed decimals, for table cells.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format a percentage.
+pub fn pct(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let s = bench(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(s.n, 10);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let (per_item, per_sec) = bench_throughput(1, 5, || 100);
+        assert!(per_item > 0.0);
+        assert!(per_sec > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long_header"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["yyyy".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("long_header"));
+        let lines: Vec<&str> = r.lines().collect();
+        // all data lines equal length
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(12.345, 1), "12.3%");
+    }
+}

@@ -1,0 +1,126 @@
+//! Tiny command-line parser (no `clap` in the offline vendor set).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(raw: Vec<String>) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = p("serve extra1 extra2");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = p("exp table7 --model resnet32 --seed=42");
+        assert_eq!(a.get("model"), Some("resnet32"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.positional, vec!["table7"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = p("serve --verbose");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        // --verbose takes the next token because it doesn't start with --;
+        // that's the documented `--key value` behaviour.
+        let a = p("run --dry-run --n 5");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = p("x --n 5 --rate 0.25 --bad abc");
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 0.25);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("bad", 0).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation substrates built from scratch for the offline environment
+//! (no serde / clap / rand / tokio / criterion / proptest in the vendor
+//! set — see DESIGN.md §1.7).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

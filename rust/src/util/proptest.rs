@@ -1,0 +1,159 @@
+//! Mini property-based testing framework (the `proptest` crate is not in
+//! the offline vendor set).
+//!
+//! Usage:
+//! ```ignore
+//! check(100, seed, |g| {
+//!     let xs = g.vec_f64(0.0, 100.0, 1..50);
+//!     let norm = min_max_normalize(&xs);
+//!     prop_assert(norm.iter().all(|v| (0.0..=1.0).contains(v)), "in range")
+//! });
+//! ```
+//!
+//! On failure the framework performs greedy input-level shrinking: the
+//! failing case's generator trace is replayed with halved sizes/values
+//! where possible, and the smallest still-failing seed is reported.
+
+use super::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("expected {a:?} == {b:?}"))
+    }
+}
+
+/// Close-to comparison for floats.
+pub fn prop_assert_close(a: f64, b: f64, tol: f64) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| > {tol}"))
+    }
+}
+
+/// Generator handle passed to properties. `size` scales collection sizes
+/// during shrinking (1.0 = full size).
+pub struct Gen {
+    rng: Rng,
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        // During shrinking bias toward lo.
+        lo + self.rng.f64() * (hi - lo) * self.size
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + if span == 0 { 0 } else { self.rng.below(span + 1) }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, len: std::ops::Range<usize>) -> Vec<f64> {
+        let n = self.usize(len.start, len.end.saturating_sub(1).max(len.start));
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, lo: usize, hi: usize, len: std::ops::Range<usize>) -> Vec<usize> {
+        let n = self.usize(len.start, len.end.saturating_sub(1).max(len.start));
+        (0..n).map(|_| self.usize(lo, hi)).collect()
+    }
+
+    /// Raw access for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of the property. Panics (test failure) on the
+/// first failing case after shrinking, reporting the seed for replay.
+pub fn check<F: Fn(&mut Gen) -> PropResult>(cases: u64, seed: u64, prop: F) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case);
+        let mut g = Gen::new(case_seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry with progressively smaller `size` and keep the
+            // smallest size that still fails.
+            let mut fail_size = 1.0;
+            let mut fail_msg = msg;
+            for k in 1..=6 {
+                let size = 1.0 / (1 << k) as f64;
+                let mut g = Gen::new(case_seed, size);
+                if let Err(m) = prop(&mut g) {
+                    fail_size = size;
+                    fail_msg = m;
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed}, size {fail_size}): {fail_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(50, 1, |g| {
+            let xs = g.vec_f64(0.0, 10.0, 1..20);
+            prop_assert(xs.iter().all(|x| (0.0..=10.0).contains(x)), "bounds")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(50, 2, |g| {
+            let x = g.f64(0.0, 10.0);
+            prop_assert(x < 5.0, "x too big")
+        });
+    }
+
+    #[test]
+    fn gen_usize_bounds() {
+        check(100, 3, |g| {
+            let v = g.usize(2, 8);
+            prop_assert((2..=8).contains(&v), "usize bounds")
+        });
+    }
+
+    #[test]
+    fn assert_helpers() {
+        assert!(prop_assert_eq(1, 1).is_ok());
+        assert!(prop_assert_eq(1, 2).is_err());
+        assert!(prop_assert_close(1.0, 1.0005, 1e-3).is_ok());
+        assert!(prop_assert_close(1.0, 2.0, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Workload generation for the serving experiments: request streams with
+//! poisson, burst or fixed-interval arrivals, plus trace replay.
+
+use crate::util::rng::Rng;
+
+/// One inference request (payload is an index into the eval set).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time, ms since stream start.
+    pub arrival_ms: f64,
+    /// Index of the input image in the eval set.
+    pub input_idx: usize,
+}
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Poisson arrivals at `rate_rps` requests/second.
+    Poisson { rate_rps: f64 },
+    /// Fixed inter-arrival gap.
+    Uniform { gap_ms: f64 },
+    /// Bursts of `size` back-to-back requests every `period_ms`.
+    Burst { size: usize, period_ms: f64 },
+}
+
+/// Generate `n` requests with the given arrival process.
+pub fn generate(n: usize, arrival: Arrival, pool_size: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    match arrival {
+        Arrival::Poisson { rate_rps } => {
+            let rate_per_ms = rate_rps / 1e3;
+            for id in 0..n {
+                t += rng.exp(rate_per_ms.max(1e-9));
+                out.push(Request {
+                    id,
+                    arrival_ms: t,
+                    input_idx: rng.below(pool_size.max(1)),
+                });
+            }
+        }
+        Arrival::Uniform { gap_ms } => {
+            for id in 0..n {
+                t += gap_ms;
+                out.push(Request {
+                    id,
+                    arrival_ms: t,
+                    input_idx: rng.below(pool_size.max(1)),
+                });
+            }
+        }
+        Arrival::Burst { size, period_ms } => {
+            let mut id = 0;
+            while id < n {
+                for _ in 0..size.min(n - id) {
+                    out.push(Request {
+                        id,
+                        arrival_ms: t,
+                        input_idx: rng.below(pool_size.max(1)),
+                    });
+                    id += 1;
+                }
+                t += period_ms;
+            }
+        }
+    }
+    out
+}
+
+/// Save/replay traces as a simple CSV (id,arrival_ms,input_idx).
+pub fn to_trace(reqs: &[Request]) -> String {
+    let mut s = String::from("id,arrival_ms,input_idx\n");
+    for r in reqs {
+        s.push_str(&format!("{},{},{}\n", r.id, r.arrival_ms, r.input_idx));
+    }
+    s
+}
+
+pub fn from_trace(text: &str) -> anyhow::Result<Vec<Request>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let mut parse = |name: &str| -> anyhow::Result<f64> {
+            parts
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("trace line {i}: missing {name}"))?
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("trace line {i}: {name}: {e}"))
+        };
+        let id = parse("id")? as usize;
+        let arrival_ms = parse("arrival_ms")?;
+        let input_idx = parse("input_idx")? as usize;
+        out.push(Request {
+            id,
+            arrival_ms,
+            input_idx,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let reqs = generate(2000, Arrival::Poisson { rate_rps: 100.0 }, 64, 1);
+        let span_s = reqs.last().unwrap().arrival_ms / 1e3;
+        let rate = 2000.0 / span_s;
+        assert!((80.0..120.0).contains(&rate), "rate {rate}");
+        assert!(reqs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+
+    #[test]
+    fn uniform_gap() {
+        let reqs = generate(10, Arrival::Uniform { gap_ms: 5.0 }, 8, 2);
+        assert!((reqs[9].arrival_ms - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_structure() {
+        let reqs = generate(10, Arrival::Burst { size: 4, period_ms: 100.0 }, 8, 3);
+        assert_eq!(reqs.len(), 10);
+        assert_eq!(reqs[0].arrival_ms, reqs[3].arrival_ms);
+        assert!(reqs[4].arrival_ms > reqs[3].arrival_ms);
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        let reqs = generate(20, Arrival::Poisson { rate_rps: 50.0 }, 16, 4);
+        let parsed = from_trace(&to_trace(&reqs)).unwrap();
+        assert_eq!(parsed.len(), reqs.len());
+        assert_eq!(parsed[7].id, reqs[7].id);
+        assert!((parsed[7].arrival_ms - reqs[7].arrival_ms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn input_indices_within_pool() {
+        let reqs = generate(100, Arrival::Poisson { rate_rps: 10.0 }, 5, 5);
+        assert!(reqs.iter().all(|r| r.input_idx < 5));
+    }
+}

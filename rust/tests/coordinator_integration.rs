@@ -1,0 +1,175 @@
+//! Integration: profiler-phase models + estimator + scheduler over the
+//! real artifacts (skipped when artifacts/ is absent).
+
+use std::path::PathBuf;
+
+use continuer::cluster::link::LinkModel;
+use continuer::config::{Config, Objectives};
+use continuer::coordinator::estimator::Estimator;
+use continuer::coordinator::failover::{Failover, Mode};
+use continuer::coordinator::profiler::DowntimeTable;
+use continuer::coordinator::scheduler::select;
+use continuer::dnn::variants::{candidates, Technique};
+use continuer::predict::{AccuracyModel, GbdtParams, LatencyModel, LayerSample};
+use continuer::runtime::ArtifactStore;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+struct Fixture {
+    store: ArtifactStore,
+    lat: LatencyModel,
+    acc: AccuracyModel,
+    link: LinkModel,
+    cfg: Config,
+}
+
+fn fixture() -> Option<Fixture> {
+    let dir = artifacts_dir()?;
+    let store = ArtifactStore::open(&dir).unwrap();
+    let params = GbdtParams::default();
+    let metas: Vec<_> = store.models.values().collect();
+    // Analytic flops-based samples: deterministic, fast, monotone.
+    let samples: Vec<LayerSample> = metas
+        .iter()
+        .flat_map(|m| m.all_layers())
+        .map(|l| LayerSample {
+            spec: l.clone(),
+            latency_ms: 1e-6 * l.flops() as f64 + 0.02,
+        })
+        .collect();
+    let (lat, _) = LatencyModel::fit(&samples, &params, 0).unwrap();
+    let (acc, quality) = AccuracyModel::fit(&metas, &params, 0).unwrap();
+    assert!(
+        quality.r2 > 0.5,
+        "accuracy model should fit the history (r2 = {})",
+        quality.r2
+    );
+    let cfg = Config::default();
+    let link = LinkModel::new(cfg.link.clone());
+    Some(Fixture {
+        store,
+        lat,
+        acc,
+        link,
+        cfg,
+    })
+}
+
+fn estimator<'a>(fx: &'a Fixture, model: &str, downtime: &'a DowntimeTable) -> Estimator<'a> {
+    Estimator::new(
+        fx.store.model(model).unwrap(),
+        &fx.lat,
+        &fx.acc,
+        &fx.link,
+        downtime,
+        fx.cfg.reinstate_ms,
+    )
+}
+
+#[test]
+fn estimates_have_papers_shape() {
+    let Some(fx) = fixture() else { return };
+    let downtime = DowntimeTable::new();
+    let est = estimator(&fx, "resnet32", &downtime);
+    let meta = fx.store.model("resnet32").unwrap();
+
+    // Repartition latency must be ~constant across failed nodes (paper
+    // Fig. 7) while early-exit latency grows with the failed node index.
+    let rep: Vec<f64> = (2..=meta.num_nodes)
+        .map(|f| est.predict_latency_ms(Technique::Repartition, Some(f)))
+        .collect();
+    let spread = (continuer::util::stats::max(&rep) - continuer::util::stats::min(&rep))
+        / continuer::util::stats::mean(&rep);
+    assert!(spread < 0.15, "repartition latency spread {spread}");
+
+    let exit_early = est.predict_latency_ms(Technique::EarlyExit(2), Some(3));
+    let exit_late = est.predict_latency_ms(Technique::EarlyExit(12), Some(13));
+    assert!(
+        exit_late > exit_early * 2.0,
+        "late exit {exit_late} should far exceed early exit {exit_early}"
+    );
+
+    // Skip should be cheaper than repartition (one block less + no extra
+    // transfer beyond the reroute).
+    let skip = est.predict_latency_ms(Technique::SkipConnection(3), Some(3));
+    assert!(skip < rep[1] * 1.05, "skip {skip} vs repartition {}", rep[1]);
+
+    // Accuracy ordering: repartition >= early exit at node 1 (ResNet's
+    // first exit is its weakest classifier).
+    let full_acc = est.predict_accuracy(Technique::Repartition).unwrap();
+    let e1_acc = est.predict_accuracy(Technique::EarlyExit(1)).unwrap();
+    assert!(
+        full_acc > e1_acc,
+        "full {full_acc}% should beat exit-1 {e1_acc}%"
+    );
+}
+
+#[test]
+fn failover_selects_and_switches_mode() {
+    let Some(fx) = fixture() else { return };
+    let downtime = DowntimeTable::new();
+    for model in ["resnet32", "mobilenetv2"] {
+        let est = estimator(&fx, model, &downtime);
+        let meta = fx.store.model(model).unwrap();
+        let failed = meta.skippable_nodes[0];
+        let mut fo = Failover::new(Objectives::default());
+        let report = fo.on_failure(&est, failed).unwrap();
+        assert_eq!(report.candidates.len(), 3, "{model}: all three feasible");
+        assert!(matches!(fo.mode, Mode::Degraded { .. }));
+        assert!(report.downtime_ms() < 100.0, "{model}: downtime {} ms", report.downtime_ms());
+        fo.on_recovery(failed);
+        assert_eq!(fo.mode, Mode::Healthy);
+    }
+}
+
+#[test]
+fn objective_weights_flip_the_choice() {
+    let Some(fx) = fixture() else { return };
+    let downtime = DowntimeTable::new();
+    let est = estimator(&fx, "resnet32", &downtime);
+    let meta = fx.store.model("resnet32").unwrap();
+    // Find a failure where accuracy-heavy and latency-heavy weights pick
+    // different techniques (must exist given the trade-off).
+    let mut flipped = false;
+    for f in 2..=meta.num_nodes {
+        let cands = est.candidate_metrics(f).unwrap();
+        if cands.len() < 2 {
+            continue;
+        }
+        let a = select(&cands, &Objectives::new(0.9, 0.05, 0.05)).unwrap().chosen;
+        let b = select(&cands, &Objectives::new(0.05, 0.9, 0.05)).unwrap().chosen;
+        if a != b {
+            flipped = true;
+            break;
+        }
+    }
+    assert!(flipped, "weights never changed the selection");
+}
+
+#[test]
+fn candidate_enumeration_matches_manifest() {
+    let Some(fx) = fixture() else { return };
+    for model in ["resnet32", "mobilenetv2"] {
+        let meta = fx.store.model(model).unwrap();
+        for f in 2..=meta.num_nodes {
+            let c = candidates(meta, f);
+            assert!(c.contains(&Technique::Repartition));
+            assert_eq!(
+                c.iter().any(|t| matches!(t, Technique::SkipConnection(_))),
+                meta.skippable_nodes.contains(&f)
+            );
+            assert_eq!(
+                c.iter().any(|t| matches!(t, Technique::EarlyExit(_))),
+                meta.exit_nodes.contains(&(f - 1))
+            );
+        }
+    }
+}

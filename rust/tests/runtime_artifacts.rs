@@ -1,0 +1,120 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`
+//! to have run; they are skipped with a message when artifacts/ is absent).
+
+use std::path::PathBuf;
+
+use continuer::cluster::sim::{steps_for, EdgeCluster};
+use continuer::config::LinkConfig;
+use continuer::dnn::variants::Technique;
+use continuer::runtime::{ArtifactStore, Engine, UnitKind};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_parses_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    assert!(store.models.contains_key("resnet32"));
+    assert!(!store.micro.is_empty());
+    let m = store.model("resnet32").unwrap();
+    assert_eq!(m.num_nodes, 14);
+    assert_eq!(m.exit_nodes.len(), 13);
+    assert_eq!(m.skippable_nodes.len(), 10, "paper: 10 skip connections");
+    // boundary chain consistency: out_shape of node i == in_shape of i+1
+    for w in m.nodes.windows(2) {
+        assert_eq!(w[0].out_shape, w[1].in_shape, "node {} boundary", w[0].index);
+    }
+    assert!(!m.history.is_empty());
+}
+
+#[test]
+fn single_block_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let unit = store
+        .load_unit(&engine, "resnet32", UnitKind::Node(1), 1)
+        .unwrap();
+    let (images, _) = store.test_set().unwrap();
+    let x = images.slice0(0, 1).unwrap();
+    let y = unit.run(&engine, &x).unwrap();
+    assert_eq!(y.shape, unit.out_shape);
+    assert!(y.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn full_pipeline_matches_python_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let meta = store.model("resnet32").unwrap();
+    let cluster = EdgeCluster::new(&engine, &store, meta, LinkConfig::default(), 0);
+    let (images, labels) = store.test_set().unwrap();
+    let n = 32.min(images.shape[0]);
+    let acc = cluster
+        .measure_accuracy(
+            Technique::Repartition,
+            None,
+            &images.slice0(0, n).unwrap(),
+            &labels[..n],
+            32,
+        )
+        .unwrap();
+    // python-side full-test accuracy is ~0.99; a 32-sample slice should be
+    // in the same regime if the rust pipeline computes the same function.
+    let expected = meta.final_accuracy.repartition;
+    assert!(
+        (acc - expected).abs() < 0.15,
+        "rust measured {acc} vs python {expected}"
+    );
+}
+
+#[test]
+fn exit_and_skip_paths_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let meta = store.model("resnet32").unwrap();
+    let cluster = EdgeCluster::new(&engine, &store, meta, LinkConfig::default(), 0);
+    let (images, _) = store.test_set().unwrap();
+    let x = images.slice0(0, 1).unwrap();
+
+    let exit = meta.exit_nodes[2];
+    let (logits, timing) = cluster
+        .execute_steps(&steps_for(meta, Technique::EarlyExit(exit), Some(exit + 1)), &x)
+        .unwrap();
+    assert_eq!(*logits.shape.last().unwrap(), store.num_classes);
+    assert!(timing.total_ms() > 0.0);
+
+    let skip = meta.skippable_nodes[0];
+    let (logits, _) = cluster
+        .execute_steps(&steps_for(meta, Technique::SkipConnection(skip), Some(skip)), &x)
+        .unwrap();
+    assert_eq!(*logits.shape.last().unwrap(), store.num_classes);
+}
+
+#[test]
+fn failed_node_rejects_execution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let meta = store.model("resnet32").unwrap();
+    let mut cluster = EdgeCluster::new(&engine, &store, meta, LinkConfig::default(), 0);
+    cluster.fail(3);
+    let (images, _) = store.test_set().unwrap();
+    let x = images.slice0(0, 1).unwrap();
+    // healthy path goes through node 3 -> must fail
+    let err = cluster.execute_technique(Technique::Repartition, None, &x);
+    assert!(err.is_err());
+    // repartitioned path re-hosts node 3's block -> must succeed
+    let ok = cluster.execute_technique(Technique::Repartition, Some(3), &x);
+    assert!(ok.is_ok(), "{:?}", ok.err());
+}

@@ -1,0 +1,82 @@
+//! Integration: the full serving loop with failure injection — a short
+//! end-to-end run asserting service continuity across a failover
+//! (skipped when artifacts/ is absent).
+
+use std::path::PathBuf;
+
+use continuer::config::Config;
+use continuer::exper::e2e::{run_e2e, E2eParams};
+use continuer::exper::ExpContext;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn service_survives_node_failure() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = dir;
+    let ctx = ExpContext::open(cfg).unwrap();
+    let meta = ctx.store.model("resnet32").unwrap();
+    let fail_node = meta.skippable_nodes[meta.skippable_nodes.len() / 2];
+    let p = E2eParams {
+        model: "resnet32".into(),
+        n_requests: 16,
+        rate_rps: 8.0,
+        fail_node,
+        fail_at_ms: 700.0,
+    };
+    let report = run_e2e(&ctx, &p).unwrap();
+
+    // every request completed despite the mid-run failure
+    assert_eq!(report.completed.len(), 16, "dropped={}", report.dropped);
+    assert_eq!(report.dropped, 0);
+
+    // exactly one failover happened and it picked a real technique
+    assert_eq!(report.failovers.len(), 1);
+    let (start, end, tech) = report.failovers[0];
+    assert!(start >= 700.0, "detection at {start} >= failure time");
+    assert!(end - start < 200.0, "downtime {} ms", end - start);
+    // requests served after the failover carry the chosen technique
+    let after: Vec<_> = report
+        .completed
+        .iter()
+        .filter(|c| c.technique.is_some())
+        .collect();
+    assert!(!after.is_empty(), "some requests must be served degraded");
+    assert!(after.iter().all(|c| c.technique.unwrap() == tech));
+
+    // latency is finite and sane
+    assert!(report.latency.mean > 0.0);
+    assert!(report.latency.p99 < 60_000.0);
+    assert!(report.throughput_rps > 0.0);
+}
+
+#[test]
+fn service_healthy_run_no_failovers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = dir;
+    let ctx = ExpContext::open(cfg).unwrap();
+    let p = E2eParams {
+        model: "mobilenetv2".into(),
+        n_requests: 8,
+        rate_rps: 10.0,
+        fail_node: 3,
+        fail_at_ms: 1e12, // never
+    };
+    let report = run_e2e(&ctx, &p).unwrap();
+    assert_eq!(report.completed.len(), 8);
+    assert!(report.failovers.is_empty());
+    assert!(report
+        .completed
+        .iter()
+        .all(|c| c.technique.is_none()), "all healthy");
+}
