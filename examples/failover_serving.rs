@@ -1,10 +1,13 @@
 //! End-to-end serving driver (the mandated full-system validation): serve
 //! a poisson request stream through the distributed ResNet-32 pipeline,
 //! crash a node mid-run, and report throughput/latency before vs after
-//! CONTINUER's failover. Results are recorded in EXPERIMENTS.md.
+//! CONTINUER's failover. Supports replica sharding and stage-level
+//! pipelining via the event-driven engine. Results are recorded in
+//! EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example failover_serving -- [--model m]
-//!       [--requests n] [--rate rps] [--fail-node k] [--fail-at ms]`
+//!       [--requests n] [--rate rps] [--fail-node k] [--fail-at ms]
+//!       [--replicas r] [--depth d]`
 
 use anyhow::Result;
 
@@ -33,6 +36,8 @@ fn main() -> Result<()> {
         rate_rps: args.get_f64("rate", 6.0)?,
         fail_node: args.get_usize("fail-node", default_fail)?,
         fail_at_ms: args.get_f64("fail-at", 4000.0)?,
+        replicas: args.get_usize("replicas", 1)?,
+        pipeline_depth: args.get_usize("depth", 1)?,
     };
     let report = run_e2e(&ctx, &p)?;
     print_report(&p, &report);

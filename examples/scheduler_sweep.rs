@@ -79,7 +79,7 @@ fn main() -> Result<()> {
     // Baseline policies for comparison.
     let mut t = Table::new("baseline policies", &["policy", "chosen technique"]);
     for p in all_policies(Objectives::default()) {
-        t.row(&[p.name().to_string(), p.decide(&candidates)?.label()]);
+        t.row(&[p.name().to_string(), p.decide(&candidates)?.chosen.label()]);
     }
     t.print();
     Ok(())

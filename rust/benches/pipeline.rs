@@ -1,22 +1,141 @@
-//! Bench: the serving hot path — end-to-end pipeline execution per
+//! Bench: the serving hot paths.
+//!
+//! Part 1 (always runs, no artifacts needed): serving throughput of the
+//! event-driven engine on a deterministic synthetic 4-node pipeline under
+//! saturating Poisson load — requests/sec for replica counts 1/2/4, each
+//! with pipelining off (`depth 1`, the seed's one-batch-in-flight regime)
+//! and on (`depth 4`). Emits machine-readable `BENCH_serving.json` for the
+//! perf trajectory; the acceptance floor is pipelined >= 2x sequential on
+//! the same single-replica workload.
+//!
+//! Part 2 (needs `make artifacts`): end-to-end pipeline execution per
 //! technique over the real PJRT block executables (regenerates the latency
-//! regime behind Fig 7 / Table V). Needs `make artifacts`; exits with a
-//! message otherwise.
+//! regime behind Fig 7 / Table V).
 
+use continuer::cluster::failure::Detector;
 use continuer::cluster::sim::EdgeCluster;
-use continuer::config::Config;
+use continuer::config::{Config, Objectives};
+use continuer::coordinator::batcher::BatcherConfig;
+use continuer::coordinator::engine::{serve, EngineConfig, SyntheticBackend};
+use continuer::coordinator::estimator::MetricsSource;
+use continuer::coordinator::router::RoutePolicy;
+use continuer::coordinator::scheduler::CandidateMetrics;
+use continuer::coordinator::Failover;
 use continuer::dnn::variants::Technique;
 use continuer::exper::{default_artifacts_dir, require_artifacts};
-use continuer::runtime::{ArtifactStore, Engine};
+use continuer::runtime::{ArtifactStore, Engine, HostTensor};
 use continuer::util::bench::{f, Table};
+use continuer::util::json::{obj, Json};
+use continuer::workload::{generate, Arrival};
 
-fn main() {
-    let mut cfg = Config::default();
-    cfg.artifacts_dir = default_artifacts_dir();
-    if require_artifacts(&cfg.artifacts_dir).is_err() {
-        eprintln!("skipping pipeline bench: run `make artifacts` first");
-        return;
+/// Stub predictions: the synthetic bench has no fitted models.
+struct StubMetrics;
+
+impl MetricsSource for StubMetrics {
+    fn candidate_metrics(&self, failed: usize) -> anyhow::Result<Vec<CandidateMetrics>> {
+        Ok(vec![CandidateMetrics {
+            technique: Technique::SkipConnection(failed),
+            accuracy: 85.0,
+            latency_ms: 25.0,
+            downtime_ms: 3.0,
+        }])
     }
+
+    fn reinstate_ms(&self) -> f64 {
+        1.0
+    }
+}
+
+fn serving_case(replicas: usize, depth: usize) -> (f64, usize) {
+    const NODES: usize = 4;
+    const STAGE_MS: f64 = 5.0;
+    const HOP_MS: f64 = 1.0;
+    let mut backends: Vec<SyntheticBackend> = (0..replicas)
+        .map(|_| SyntheticBackend::uniform(NODES, STAGE_MS, HOP_MS))
+        .collect();
+    let mut failovers: Vec<Failover> = (0..replicas)
+        .map(|_| Failover::new(Objectives::default()))
+        .collect();
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1], 2.0, 1),
+        detector: Detector::default(),
+        deadline_ms: None,
+        pipeline_depth: depth,
+        route: RoutePolicy::JoinShortestQueue,
+        decision_ms_override: Some(1.5),
+    };
+    // Saturating Poisson load: ~1 ms inter-arrival against a 23 ms path.
+    let requests = generate(400, Arrival::Poisson { rate_rps: 1000.0 }, 16, 42);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let report = serve(
+        &mut backends,
+        &StubMetrics,
+        &mut failovers,
+        &cfg,
+        &requests,
+        &inputs,
+        &[],
+    )
+    .unwrap();
+    assert_eq!(report.completed.len(), 400, "bench must serve everything");
+    (report.throughput_rps, report.max_in_flight)
+}
+
+fn serving_bench() {
+    let mut t = Table::new(
+        "bench: serving throughput — synthetic 4-node pipeline, saturating poisson",
+        &["replicas", "depth", "throughput rps", "peak in flight"],
+    );
+    let mut cases = Vec::new();
+    let mut seed_equivalent_rps = 0.0;
+    let mut pipelined_1r_rps = 0.0;
+    for replicas in [1usize, 2, 4] {
+        for depth in [1usize, 4] {
+            let (rps, peak) = serving_case(replicas, depth);
+            if replicas == 1 && depth == 1 {
+                seed_equivalent_rps = rps;
+            }
+            if replicas == 1 && depth == 4 {
+                pipelined_1r_rps = rps;
+            }
+            t.row(&[
+                replicas.to_string(),
+                depth.to_string(),
+                f(rps, 1),
+                peak.to_string(),
+            ]);
+            cases.push(obj(&[
+                ("replicas", replicas.into()),
+                ("pipeline_depth", depth.into()),
+                ("throughput_rps", rps.into()),
+                ("max_in_flight", peak.into()),
+            ]));
+        }
+    }
+    t.print();
+
+    let speedup = pipelined_1r_rps / seed_equivalent_rps.max(1e-9);
+    println!(
+        "pipelined (1 replica, depth 4) vs seed one-batch-in-flight: {:.2}x\n",
+        speedup
+    );
+    let out = obj(&[
+        ("bench", "serving".into()),
+        ("nodes", 4usize.into()),
+        ("stage_ms", 5.0.into()),
+        ("hop_ms", 1.0.into()),
+        ("requests", 400usize.into()),
+        ("arrival", "poisson 1000 rps".into()),
+        ("cases", Json::Arr(cases)),
+        ("seed_equivalent_rps", seed_equivalent_rps.into()),
+        ("pipelined_speedup_vs_seed", speedup.into()),
+    ]);
+    let path = "BENCH_serving.json";
+    std::fs::write(path, out.to_string()).unwrap();
+    println!("wrote {path}");
+}
+
+fn real_pipeline_bench(cfg: &Config) {
     let engine = Engine::cpu().unwrap();
     let store = ArtifactStore::open(&cfg.artifacts_dir).unwrap();
 
@@ -67,4 +186,16 @@ fn main() {
             1e3 / (c1 + n1)
         );
     }
+}
+
+fn main() {
+    serving_bench();
+
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = default_artifacts_dir();
+    if require_artifacts(&cfg.artifacts_dir).is_err() {
+        eprintln!("skipping real-pipeline bench: run `make artifacts` first");
+        return;
+    }
+    real_pipeline_bench(&cfg);
 }

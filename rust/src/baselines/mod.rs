@@ -1,31 +1,22 @@
 //! Baseline recovery policies the evaluation compares CONTINUER against:
 //! fixed single-technique policies and a SEE-like early-exit-only policy
 //! (Wang et al. [30], which always exits during outages).
+//!
+//! Every baseline implements [`RecoveryPolicy`], the same trait CONTINUER
+//! itself implements, so a baseline plugs into the serving engine via
+//! `Failover::with_policy` and the comparison runs inside the identical
+//! event loop rather than a per-policy reimplementation.
 
 use anyhow::Result;
 
 use crate::config::Objectives;
-use crate::coordinator::scheduler::{select, CandidateMetrics};
+use crate::coordinator::scheduler::{CandidateMetrics, Decision};
 use crate::dnn::variants::Technique;
 
-/// A recovery policy: picks a technique from the candidate metrics.
-pub trait Policy {
-    fn name(&self) -> &'static str;
-    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique>;
-}
+pub use crate::coordinator::policy::{Continuer, RecoveryPolicy};
 
-/// CONTINUER itself: additive-weighting scheduler under objectives.
-pub struct Continuer(pub Objectives);
-
-impl Policy for Continuer {
-    fn name(&self) -> &'static str {
-        "continuer"
-    }
-
-    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
-        Ok(select(candidates, &self.0)?.chosen)
-    }
-}
+/// Backwards-compatible alias: the trait used to live here.
+pub use crate::coordinator::policy::RecoveryPolicy as Policy;
 
 fn find_kind(candidates: &[CandidateMetrics], kind: &str) -> Option<Technique> {
     candidates
@@ -37,13 +28,14 @@ fn find_kind(candidates: &[CandidateMetrics], kind: &str) -> Option<Technique> {
 /// Always repartition (the traditional recovery; always feasible).
 pub struct AlwaysRepartition;
 
-impl Policy for AlwaysRepartition {
+impl RecoveryPolicy for AlwaysRepartition {
     fn name(&self) -> &'static str {
         "always-repartition"
     }
 
-    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Decision> {
         find_kind(candidates, "repartition")
+            .map(Decision::fixed)
             .ok_or_else(|| anyhow::anyhow!("repartition missing from candidates"))
     }
 }
@@ -51,14 +43,15 @@ impl Policy for AlwaysRepartition {
 /// Always early-exit when possible, else repartition (SEE-like).
 pub struct AlwaysEarlyExit;
 
-impl Policy for AlwaysEarlyExit {
+impl RecoveryPolicy for AlwaysEarlyExit {
     fn name(&self) -> &'static str {
         "always-early-exit"
     }
 
-    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Decision> {
         find_kind(candidates, "early-exit")
             .or_else(|| find_kind(candidates, "repartition"))
+            .map(Decision::fixed)
             .ok_or_else(|| anyhow::anyhow!("no feasible technique"))
     }
 }
@@ -66,20 +59,21 @@ impl Policy for AlwaysEarlyExit {
 /// Always skip when possible, else repartition (DeepFogGuard-like).
 pub struct AlwaysSkip;
 
-impl Policy for AlwaysSkip {
+impl RecoveryPolicy for AlwaysSkip {
     fn name(&self) -> &'static str {
         "always-skip"
     }
 
-    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Technique> {
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Decision> {
         find_kind(candidates, "skip-connection")
             .or_else(|| find_kind(candidates, "repartition"))
+            .map(Decision::fixed)
             .ok_or_else(|| anyhow::anyhow!("no feasible technique"))
     }
 }
 
 /// All baselines plus CONTINUER under the given objectives.
-pub fn all_policies(objectives: Objectives) -> Vec<Box<dyn Policy>> {
+pub fn all_policies(objectives: Objectives) -> Vec<Box<dyn RecoveryPolicy>> {
     vec![
         Box::new(Continuer(objectives)),
         Box::new(AlwaysRepartition),
@@ -118,15 +112,15 @@ mod tests {
     #[test]
     fn fixed_policies_pick_their_kind() {
         assert_eq!(
-            AlwaysRepartition.decide(&cands()).unwrap(),
+            AlwaysRepartition.decide(&cands()).unwrap().chosen,
             Technique::Repartition
         );
         assert_eq!(
-            AlwaysEarlyExit.decide(&cands()).unwrap(),
+            AlwaysEarlyExit.decide(&cands()).unwrap().chosen,
             Technique::EarlyExit(3)
         );
         assert_eq!(
-            AlwaysSkip.decide(&cands()).unwrap(),
+            AlwaysSkip.decide(&cands()).unwrap().chosen,
             Technique::SkipConnection(4)
         );
     }
@@ -135,16 +129,25 @@ mod tests {
     fn fallback_to_repartition() {
         let only_rep = vec![cands()[0]];
         assert_eq!(
-            AlwaysEarlyExit.decide(&only_rep).unwrap(),
+            AlwaysEarlyExit.decide(&only_rep).unwrap().chosen,
             Technique::Repartition
         );
-        assert_eq!(AlwaysSkip.decide(&only_rep).unwrap(), Technique::Repartition);
+        assert_eq!(
+            AlwaysSkip.decide(&only_rep).unwrap().chosen,
+            Technique::Repartition
+        );
+    }
+
+    #[test]
+    fn fixed_decisions_carry_no_scores() {
+        let d = AlwaysRepartition.decide(&cands()).unwrap();
+        assert!(d.scores.is_empty());
     }
 
     #[test]
     fn continuer_uses_weights() {
         let p = Continuer(Objectives::new(0.05, 0.9, 0.05));
-        assert_eq!(p.decide(&cands()).unwrap(), Technique::EarlyExit(3));
+        assert_eq!(p.decide(&cands()).unwrap().chosen, Technique::EarlyExit(3));
     }
 
     #[test]

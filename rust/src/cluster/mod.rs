@@ -7,4 +7,6 @@ pub mod sim;
 
 pub use failure::{Detector, FailureEvent, FailurePlan, NodeStatus};
 pub use link::LinkModel;
-pub use sim::{expected_network_ms, healthy_path, steps_for, EdgeCluster, PathTiming, Step};
+pub use sim::{
+    expected_network_ms, healthy_path, steps_for, steps_for_chain, EdgeCluster, PathTiming, Step,
+};

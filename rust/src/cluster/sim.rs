@@ -51,57 +51,57 @@ impl PathTiming {
     }
 }
 
-/// Build the step sequence of a technique.
+/// Build the step sequence of a technique on an `num_nodes`-long chain.
 ///
-/// `failed`: the failed node (None = healthy pipeline). Units are hosted on
-/// their own node except under repartitioning, where the failed node's
-/// block is re-hosted on its predecessor (successor for node 1) — the
-/// deterministic merge plan of `coordinator::deployment`.
-pub fn steps_for(meta: &ModelMeta, tech: Technique, failed: Option<usize>) -> Vec<Step> {
+/// Hosting depends only on the (1-based, contiguous) node indices, so this
+/// needs no model metadata — the synthetic serving backend shares it with
+/// the real cluster. `failed`: the failed node (None = healthy pipeline).
+/// Units are hosted on their own node except under repartitioning, where
+/// the failed node's block is re-hosted on its predecessor (successor for
+/// node 1) — the deterministic merge plan of `coordinator::deployment`.
+pub fn steps_for_chain(num_nodes: usize, tech: Technique, failed: Option<usize>) -> Vec<Step> {
     match tech {
-        Technique::Repartition => meta
-            .nodes
-            .iter()
-            .map(|n| {
+        Technique::Repartition => (1..=num_nodes)
+            .map(|i| {
                 let host = match failed {
-                    Some(f) if n.index == f => {
+                    Some(f) if i == f => {
                         if f == 1 {
                             2
                         } else {
                             f - 1
                         }
                     }
-                    _ => n.index,
+                    _ => i,
                 };
                 Step {
-                    unit: UnitKind::Node(n.index),
+                    unit: UnitKind::Node(i),
                     host,
                 }
             })
             .collect(),
-        Technique::EarlyExit(e) => meta
-            .nodes
-            .iter()
-            .filter(|n| n.index <= e)
-            .map(|n| Step {
-                unit: UnitKind::Node(n.index),
-                host: n.index,
+        Technique::EarlyExit(e) => (1..=num_nodes.min(e))
+            .map(|i| Step {
+                unit: UnitKind::Node(i),
+                host: i,
             })
             .chain(std::iter::once(Step {
                 unit: UnitKind::Exit(e),
                 host: e,
             }))
             .collect(),
-        Technique::SkipConnection(k) => meta
-            .nodes
-            .iter()
-            .filter(|n| n.index != k)
-            .map(|n| Step {
-                unit: UnitKind::Node(n.index),
-                host: n.index,
+        Technique::SkipConnection(k) => (1..=num_nodes)
+            .filter(|&i| i != k)
+            .map(|i| Step {
+                unit: UnitKind::Node(i),
+                host: i,
             })
             .collect(),
     }
+}
+
+/// Build the step sequence of a technique for a deployed model.
+pub fn steps_for(meta: &ModelMeta, tech: Technique, failed: Option<usize>) -> Vec<Step> {
+    steps_for_chain(meta.num_nodes, tech, failed)
 }
 
 /// Convenience: healthy full pipeline.
@@ -198,7 +198,36 @@ impl<'a> EdgeCluster<'a> {
 
     // ----- execution --------------------------------------------------------
 
-    /// Execute a step sequence on an input batch, checking host liveness.
+    /// Execute one step's unit on a batch (liveness-checked), returning
+    /// the output activation and the measured compute time, ms. This is
+    /// the engine's per-stage primitive: the serving engine schedules
+    /// stage occupancy around it instead of executing whole paths.
+    pub fn execute_stage(&self, step: Step, x: &HostTensor) -> Result<(HostTensor, f64)> {
+        if !self.is_up(step.host) {
+            bail!("step {:?} hosted on failed node {}", step.unit, step.host);
+        }
+        let unit = self.unit(step.unit, x.shape[0])?;
+        let t0 = Instant::now();
+        let y = unit.run(self.engine, x)?;
+        Ok((y, t0.elapsed().as_secs_f64() * 1e3))
+    }
+
+    /// Modeled transfer time of `bytes` moving from host `from` to host
+    /// `to`, ms. Zero when the hosts coincide; a non-adjacent forward hop
+    /// (a skip reroute) pays one extra base latency.
+    pub fn stage_transfer_ms(&self, from: usize, to: usize, bytes: usize) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let mut ms = self.link.sample_ms(bytes, &mut self.rng.borrow_mut());
+        if to > from + 1 {
+            ms += self.link.skip_extra_ms();
+        }
+        ms
+    }
+
+    /// Execute a step sequence on an input batch, checking host liveness
+    /// (stage-by-stage over [`Self::execute_stage`]).
     pub fn execute_steps(
         &self,
         steps: &[Step],
@@ -207,33 +236,16 @@ impl<'a> EdgeCluster<'a> {
         if steps.is_empty() {
             bail!("empty path");
         }
-        let batch = x.shape[0];
         let mut timing = PathTiming::default();
         let mut act = x.clone();
         let mut prev_host: Option<usize> = None;
-        for (i, step) in steps.iter().enumerate() {
-            if !self.is_up(step.host) {
-                bail!("step {i} ({:?}) hosted on failed node {}", step.unit, step.host);
-            }
+        for step in steps {
             if let Some(p) = prev_host {
-                if step.host != p {
-                    let mut ms = self
-                        .link
-                        .sample_ms(act.bytes(), &mut self.rng.borrow_mut());
-                    // Non-adjacent forward hop (a skip reroute) pays one
-                    // extra base latency.
-                    if step.host > p + 1 {
-                        ms += self.link.skip_extra_ms();
-                    }
-                    timing.network_ms += ms;
-                }
+                timing.network_ms += self.stage_transfer_ms(p, step.host, act.bytes());
             }
-            let unit = self.unit(step.unit, batch)?;
-            let t0 = Instant::now();
-            act = unit.run(self.engine, &act)?;
-            timing
-                .compute_ms
-                .push((step.unit, t0.elapsed().as_secs_f64() * 1e3));
+            let (y, ms) = self.execute_stage(*step, &act)?;
+            act = y;
+            timing.compute_ms.push((step.unit, ms));
             prev_host = Some(step.host);
         }
         Ok((act, timing))

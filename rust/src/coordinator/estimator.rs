@@ -17,6 +17,28 @@ use crate::runtime::UnitKind;
 use super::profiler::DowntimeTable;
 use super::scheduler::CandidateMetrics;
 
+/// What a failover controller needs from the prediction stack: candidate
+/// metrics for a failure plus the reinstate constant. Abstracted from the
+/// concrete [`Estimator`] so the serving engine and its tests can run
+/// against stub predictors without fitted models or artifacts.
+pub trait MetricsSource {
+    /// Candidate metrics for the failure of `failed`, in the scheduler's
+    /// canonical order.
+    fn candidate_metrics(&self, failed: usize) -> Result<Vec<CandidateMetrics>>;
+    /// Connection-reinstate constant (paper §IV-B-iii), ms.
+    fn reinstate_ms(&self) -> f64;
+}
+
+impl MetricsSource for Estimator<'_> {
+    fn candidate_metrics(&self, failed: usize) -> Result<Vec<CandidateMetrics>> {
+        Estimator::candidate_metrics(self, failed)
+    }
+
+    fn reinstate_ms(&self) -> f64 {
+        self.reinstate_ms
+    }
+}
+
 /// Bundles the two prediction models + the link/downtime constants for one
 /// deployed model on one platform.
 pub struct Estimator<'a> {

@@ -1,6 +1,8 @@
 //! Failover controller: the runtime-phase state machine that reacts to a
-//! node failure by querying the estimator, running the Scheduler and
-//! reconfiguring the serving path (paper Fig. 1, runtime phase).
+//! node failure by querying the estimator, consulting its
+//! [`RecoveryPolicy`] and reconfiguring the serving path (paper Fig. 1,
+//! runtime phase). Each pipeline replica owns one controller, so failures
+//! degrade replicas independently.
 
 use std::time::Instant;
 
@@ -9,8 +11,9 @@ use anyhow::Result;
 use crate::config::Objectives;
 use crate::dnn::variants::Technique;
 
-use super::estimator::Estimator;
-use super::scheduler::{select, CandidateMetrics, Decision};
+use super::estimator::MetricsSource;
+use super::policy::{Continuer, RecoveryPolicy};
+use super::scheduler::{CandidateMetrics, Decision};
 
 /// Current serving mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,11 +31,11 @@ pub struct FailoverReport {
     pub decision: Decision,
     /// Time to build candidate metrics (predictor queries), ms.
     pub predict_ms: f64,
-    /// Time to run the scheduler selection, ms.
+    /// Time to run the policy's selection, ms.
     pub select_ms: f64,
     /// Reinstate constant applied for the chosen technique, ms.
     pub reinstate_ms: f64,
-    /// Full candidate metrics as seen by the scheduler.
+    /// Full candidate metrics as seen by the policy.
     pub candidates: Vec<CandidateMetrics>,
 }
 
@@ -44,36 +47,43 @@ impl FailoverReport {
     }
 }
 
-/// The failover controller.
+/// The failover controller, parameterised by the recovery policy so the
+/// baselines run through the identical machinery.
 pub struct Failover {
-    pub objectives: Objectives,
+    pub policy: Box<dyn RecoveryPolicy>,
     pub mode: Mode,
     pub history: Vec<FailoverReport>,
 }
 
 impl Failover {
+    /// CONTINUER's own scheduler under the given objective weights.
     pub fn new(objectives: Objectives) -> Failover {
+        Failover::with_policy(Box::new(Continuer(objectives)))
+    }
+
+    /// Any recovery policy (baselines included).
+    pub fn with_policy(policy: Box<dyn RecoveryPolicy>) -> Failover {
         Failover {
-            objectives,
+            policy,
             mode: Mode::Healthy,
             history: Vec::new(),
         }
     }
 
-    /// Handle the failure of `failed`: query predictions, select, switch
-    /// mode. Returns the report (also kept in history).
-    pub fn on_failure(&mut self, est: &Estimator, failed: usize) -> Result<FailoverReport> {
+    /// Handle the failure of `failed`: query predictions, let the policy
+    /// select, switch mode. Returns the report (also kept in history).
+    pub fn on_failure(&mut self, est: &dyn MetricsSource, failed: usize) -> Result<FailoverReport> {
         let t0 = Instant::now();
         let candidates = est.candidate_metrics(failed)?;
         let predict_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let t1 = Instant::now();
-        let decision = select(&candidates, &self.objectives)?;
+        let decision = self.policy.decide(&candidates)?;
         let select_ms = t1.elapsed().as_secs_f64() * 1e3;
 
         let reinstate_ms = match decision.chosen {
             Technique::EarlyExit(_) => 0.0,
-            _ => est.reinstate_ms,
+            _ => est.reinstate_ms(),
         };
         self.mode = Mode::Degraded {
             failed,
@@ -106,6 +116,14 @@ impl Failover {
             Mode::Degraded { technique, .. } => Some(technique),
         }
     }
+
+    /// The failure the replica is currently degraded around, if any.
+    pub fn failed_node(&self) -> Option<usize> {
+        match self.mode {
+            Mode::Healthy => None,
+            Mode::Degraded { failed, .. } => Some(failed),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,8 +139,54 @@ mod tests {
         };
         f.on_recovery(5);
         assert!(matches!(f.mode, Mode::Degraded { failed: 3, .. }));
+        assert_eq!(f.failed_node(), Some(3));
         f.on_recovery(3);
         assert_eq!(f.mode, Mode::Healthy);
         assert_eq!(f.technique(), None);
+        assert_eq!(f.failed_node(), None);
+    }
+
+    #[test]
+    fn policy_drives_the_choice() {
+        struct AlwaysFirst;
+        impl RecoveryPolicy for AlwaysFirst {
+            fn name(&self) -> &'static str {
+                "always-first"
+            }
+            fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Decision> {
+                Ok(Decision::fixed(candidates[0].technique))
+            }
+        }
+        struct Stub;
+        impl MetricsSource for Stub {
+            fn candidate_metrics(&self, failed: usize) -> Result<Vec<CandidateMetrics>> {
+                Ok(vec![
+                    CandidateMetrics {
+                        technique: Technique::SkipConnection(failed),
+                        accuracy: 85.0,
+                        latency_ms: 25.0,
+                        downtime_ms: 3.0,
+                    },
+                    CandidateMetrics {
+                        technique: Technique::Repartition,
+                        accuracy: 90.0,
+                        latency_ms: 30.0,
+                        downtime_ms: 4.0,
+                    },
+                ])
+            }
+            fn reinstate_ms(&self) -> f64 {
+                1.0
+            }
+        }
+        let mut f = Failover::with_policy(Box::new(AlwaysFirst));
+        let report = f.on_failure(&Stub, 3).unwrap();
+        assert_eq!(report.decision.chosen, Technique::SkipConnection(3));
+        assert!(matches!(
+            f.mode,
+            Mode::Degraded { failed: 3, technique: Technique::SkipConnection(3) }
+        ));
+        // skip pays the reinstate constant
+        assert!((report.reinstate_ms - 1.0).abs() < 1e-12);
     }
 }

@@ -1,14 +1,43 @@
-//! The CONTINUER framework (paper §III-IV): profiler phase (offline) and
-//! runtime phase (scheduler + failover + serving loop).
+//! The CONTINUER framework (paper §III-IV) and the serving stack built on
+//! top of it.
+//!
+//! Offline phase: [`profiler`] fits the per-platform latency models and
+//! the downtime table. Runtime phase, bottom-up:
+//!
+//! - [`estimator`] bridges the fitted predictors to per-candidate metrics
+//!   ([`MetricsSource`] abstracts it for tests).
+//! - [`policy`] is the recovery decision: the [`RecoveryPolicy`] trait,
+//!   implemented by CONTINUER's additive-weighting scheduler
+//!   ([`Continuer`], via [`scheduler`]) and by every baseline in
+//!   [`crate::baselines`] — all policies run inside the identical engine.
+//! - [`failover`] is the per-replica state machine that reacts to a
+//!   detected failure by consulting its policy and switching the path.
+//! - [`batcher`] picks compiled batch sizes under queue pressure.
+//! - [`router`] spreads arrivals over pipeline replicas (round-robin or
+//!   join-shortest-queue).
+//! - [`engine`] is the event-driven serving core: a binary-heap event
+//!   queue (arrivals, failures, detections, batcher timeouts, stage
+//!   start/completion) with per-stage occupancy, so up to
+//!   `pipeline_depth` batches pipeline through each replica and replica
+//!   shards fail independently.
+//! - [`service`] holds the report types and the seed-compatible
+//!   single-pipeline entry point.
 
 pub mod batcher;
+pub mod engine;
 pub mod estimator;
 pub mod failover;
+pub mod policy;
 pub mod profiler;
+pub mod router;
 pub mod scheduler;
 pub mod service;
 
-pub use estimator::Estimator;
+pub use engine::{serve, EngineConfig, StageBackend, SyntheticBackend};
+pub use estimator::{Estimator, MetricsSource};
 pub use failover::{Failover, FailoverReport, Mode};
+pub use policy::{Continuer, RecoveryPolicy};
 pub use profiler::{fit_platform, platform_transform, DowntimeTable, LayerProfiler, PlatformLatencyModel};
+pub use router::{ReplicaLoad, RoutePolicy, Router};
 pub use scheduler::{select, weight_sweep, CandidateMetrics, Decision};
+pub use service::{Completion, DroppedRequest, FailoverWindow, ServiceConfig, ServiceReport};

@@ -1,0 +1,62 @@
+//! Recovery-policy interface: the single decision point the serving
+//! engine consults when a node failure is detected. CONTINUER's
+//! additive-weighting scheduler and every baseline in [`crate::baselines`]
+//! implement the same trait, so experiments compare policies inside the
+//! identical engine instead of through per-policy serving loops.
+
+use anyhow::Result;
+
+use crate::config::Objectives;
+
+use super::scheduler::{select, CandidateMetrics, Decision};
+
+/// A recovery policy: given the candidate techniques (with their predicted
+/// accuracy/latency and empirical downtime), pick one.
+pub trait RecoveryPolicy {
+    fn name(&self) -> &'static str;
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Decision>;
+}
+
+/// CONTINUER itself: simple additive weighting over min-max-normalised
+/// objectives (paper §IV-C).
+pub struct Continuer(pub Objectives);
+
+impl RecoveryPolicy for Continuer {
+    fn name(&self) -> &'static str {
+        "continuer"
+    }
+
+    fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Decision> {
+        select(candidates, &self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::variants::Technique;
+
+    #[test]
+    fn continuer_policy_matches_select() {
+        let cands = vec![
+            CandidateMetrics {
+                technique: Technique::Repartition,
+                accuracy: 90.0,
+                latency_ms: 30.0,
+                downtime_ms: 4.0,
+            },
+            CandidateMetrics {
+                technique: Technique::EarlyExit(3),
+                accuracy: 70.0,
+                latency_ms: 8.0,
+                downtime_ms: 1.0,
+            },
+        ];
+        let obj = Objectives::default();
+        let p = Continuer(obj.clone());
+        let via_policy = p.decide(&cands).unwrap();
+        let via_select = select(&cands, &obj).unwrap();
+        assert_eq!(via_policy.chosen, via_select.chosen);
+        assert_eq!(p.name(), "continuer");
+    }
+}

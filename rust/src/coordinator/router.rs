@@ -1,0 +1,99 @@
+//! Request router across pipeline replicas. Each replica is an
+//! independent copy of the distributed pipeline (own cluster state, own
+//! failover controller); the router decides, per arriving request, which
+//! replica's queue it joins.
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through replicas in index order.
+    RoundRobin,
+    /// Send each request to the replica with the fewest outstanding
+    /// requests (queued + in flight); ties go to the lowest index.
+    JoinShortestQueue,
+}
+
+/// Snapshot of one replica's load, as seen by the router at an arrival.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaLoad {
+    /// Requests waiting in the replica's queue.
+    pub queued: usize,
+    /// Requests inside batches currently moving through the pipeline.
+    pub in_flight: usize,
+}
+
+impl ReplicaLoad {
+    pub fn total(&self) -> usize {
+        self.queued + self.in_flight
+    }
+}
+
+/// Stateful router (round-robin keeps a cursor).
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    next_rr: usize,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Router {
+        Router { policy, next_rr: 0 }
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    /// Pick the replica for the next request.
+    pub fn route(&mut self, loads: &[ReplicaLoad]) -> usize {
+        assert!(!loads.is_empty(), "router needs >= 1 replica");
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.next_rr % loads.len();
+                self.next_rr = self.next_rr.wrapping_add(1);
+                r
+            }
+            RoutePolicy::JoinShortestQueue => loads
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, l)| (l.total(), *i))
+                .map(|(i, _)| i)
+                .unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(ls: &[(usize, usize)]) -> Vec<ReplicaLoad> {
+        ls.iter()
+            .map(|&(queued, in_flight)| ReplicaLoad { queued, in_flight })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutePolicy::RoundRobin);
+        let l = loads(&[(0, 0), (9, 9), (0, 0)]);
+        assert_eq!(r.route(&l), 0);
+        assert_eq!(r.route(&l), 1);
+        assert_eq!(r.route(&l), 2);
+        assert_eq!(r.route(&l), 0);
+    }
+
+    #[test]
+    fn jsq_picks_least_loaded() {
+        let mut r = Router::new(RoutePolicy::JoinShortestQueue);
+        assert_eq!(r.route(&loads(&[(3, 1), (0, 2), (4, 0)])), 1);
+        // counts queued + in-flight, not just queued
+        assert_eq!(r.route(&loads(&[(0, 5), (2, 1), (1, 1)])), 2);
+    }
+
+    #[test]
+    fn jsq_breaks_ties_low_index() {
+        let mut r = Router::new(RoutePolicy::JoinShortestQueue);
+        assert_eq!(r.route(&loads(&[(1, 1), (2, 0), (0, 2)])), 0);
+    }
+}

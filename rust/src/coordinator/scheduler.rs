@@ -30,8 +30,19 @@ pub struct CandidateMetrics {
 #[derive(Debug, Clone)]
 pub struct Decision {
     pub chosen: Technique,
-    /// (technique, score) for every candidate, in input order.
+    /// (technique, score) for every candidate, in input order. Empty for
+    /// policies that pick without scoring (the fixed baselines).
     pub scores: Vec<(Technique, f64)>,
+}
+
+impl Decision {
+    /// A decision made without scoring (fixed baseline policies).
+    pub fn fixed(chosen: Technique) -> Decision {
+        Decision {
+            chosen,
+            scores: Vec::new(),
+        }
+    }
 }
 
 /// Score and select among candidates. Deterministic tie-break: the earlier

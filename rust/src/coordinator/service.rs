@@ -1,31 +1,38 @@
-//! The serving loop: a deterministic discrete-event simulation that drives
-//! the real pipeline (PJRT compute) under a request stream and a failure
-//! plan, with the dynamic batcher and the failover controller in the loop.
+//! Serving report types and the single-pipeline entry point.
 //!
-//! Time model: the simulation clock advances to each request arrival; a
-//! dispatched batch occupies the pipeline for its *measured* wall-clock
-//! compute time plus modeled network time (the cluster is a chain, one
-//! batch in flight at a time — matching the paper's single-pipeline
-//! deployment). Failure events interleave at their scheduled times; a
-//! failover consumes real decision time plus the detector delay.
+//! The actual serving loop lives in [`super::engine`]: an event-driven
+//! simulation with stage-level pipelining and replica sharding. [`run`]
+//! keeps the seed's single-pipeline signature — one cluster, one failover
+//! controller, one failure plan — and drives it through the engine in a
+//! 1-replica, non-pipelined configuration, so every seed experiment
+//! driver produces the same serving regime as before the refactor.
+//!
+//! Time model (unchanged): the clock is virtual; a dispatched batch
+//! occupies each pipeline stage for its *measured* wall-clock compute
+//! time plus modeled network time. Failure events interleave at their
+//! scheduled times; a failover consumes real decision time plus the
+//! detector delay.
 
 use anyhow::Result;
 
-use crate::cluster::failure::{Detector, FailurePlan, NodeStatus};
-use crate::cluster::sim::{steps_for, EdgeCluster};
+use crate::cluster::failure::{Detector, FailurePlan};
+use crate::cluster::sim::EdgeCluster;
 use crate::dnn::variants::Technique;
 use crate::runtime::HostTensor;
 use crate::util::stats::Summary;
 use crate::workload::Request;
 
-use super::batcher::{decide, BatcherConfig, Dispatch};
+use super::batcher::BatcherConfig;
+use super::engine::{serve, EngineConfig};
 use super::estimator::Estimator;
-use super::failover::{Failover, Mode};
+use super::failover::Failover;
 
 /// Per-request outcome.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Completion {
     pub id: usize,
+    /// Replica that served the request.
+    pub replica: usize,
     /// End-to-end latency including queueing, ms.
     pub latency_ms: f64,
     /// Which technique served it (None = healthy full pipeline).
@@ -33,19 +40,64 @@ pub struct Completion {
     pub batch_size: usize,
 }
 
+/// A request dropped after exceeding its queueing deadline (or stranded on
+/// a replica no recovery technique could salvage).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DroppedRequest {
+    pub id: usize,
+    pub replica: usize,
+    /// When the request arrived, ms — lets experiments attribute drops to
+    /// failure windows.
+    pub arrival_ms: f64,
+    /// When it was abandoned, ms.
+    pub dropped_at_ms: f64,
+    /// Serving mode of its replica at drop time (true = degraded).
+    pub degraded: bool,
+}
+
+/// One failover: the downtime window and the technique chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailoverWindow {
+    pub replica: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub technique: Technique,
+}
+
+impl FailoverWindow {
+    pub fn downtime_ms(&self) -> f64 {
+        self.end_ms - self.start_ms
+    }
+}
+
 /// Aggregate report of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServiceReport {
     pub completed: Vec<Completion>,
-    pub dropped: usize,
+    /// Every dropped request with its arrival time and serving mode (the
+    /// seed kept only a bare counter).
+    pub dropped: Vec<DroppedRequest>,
     pub latency: Summary,
     pub throughput_rps: f64,
-    /// Downtime windows: (start_ms, end_ms, technique chosen).
-    pub failovers: Vec<(f64, f64, Technique)>,
+    pub failovers: Vec<FailoverWindow>,
     pub sim_span_ms: f64,
+    /// Peak number of batches concurrently in flight on any one replica
+    /// (1 in the seed-equivalent non-pipelined configuration).
+    pub max_in_flight: usize,
 }
 
-/// Serving-loop configuration.
+impl ServiceReport {
+    pub fn dropped_count(&self) -> usize {
+        self.dropped.len()
+    }
+
+    /// Drops that happened while the owning replica served degraded.
+    pub fn degraded_drops(&self) -> usize {
+        self.dropped.iter().filter(|d| d.degraded).count()
+    }
+}
+
+/// Single-pipeline serving configuration (the seed's shape).
 pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     pub detector: Detector,
@@ -53,7 +105,16 @@ pub struct ServiceConfig {
     pub deadline_ms: Option<f64>,
 }
 
-/// Run the service simulation.
+impl ServiceConfig {
+    /// The engine configuration this maps to: 1 replica, no pipelining.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig::sequential(self.batcher.clone(), self.detector.clone(), self.deadline_ms)
+    }
+}
+
+/// Run the service simulation on a single pipeline (seed-compatible
+/// entry point; multi-replica / pipelined serving goes through
+/// [`super::engine::serve`] directly).
 pub fn run(
     cluster: &mut EdgeCluster,
     est: &Estimator,
@@ -63,146 +124,13 @@ pub fn run(
     inputs: &HostTensor, // pool of eval images [n, ...]
     plan: &FailurePlan,
 ) -> Result<ServiceReport> {
-    let meta = cluster.meta;
-    let mut completed = Vec::new();
-    let mut dropped = 0usize;
-    let mut failovers = Vec::new();
-
-    let mut clock_ms = 0.0f64;
-    let mut queue: Vec<Request> = Vec::new();
-    let mut next_req = 0usize;
-    let mut plan_cursor = 0usize;
-
-    // Pending failure events become visible at detection time.
-    let mut pending: Vec<(f64, usize, NodeStatus)> = plan
-        .events
-        .iter()
-        .map(|e| {
-            let t = match e.status {
-                NodeStatus::Down => cfg.detector.detection_time(e.at_ms),
-                NodeStatus::Up => e.at_ms,
-            };
-            (t, e.node, e.status)
-        })
-        .collect();
-    pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-
-    loop {
-        // Apply raw failure events up to the clock (the node actually dies
-        // at at_ms; detection lags).
-        for e in plan.due(plan_cursor, clock_ms) {
-            match e.status {
-                NodeStatus::Down => cluster.fail(e.node),
-                NodeStatus::Up => cluster.restore(e.node),
-            }
-            plan_cursor += 1;
-        }
-        // Handle detections due.
-        while let Some(&(t, node, status)) = pending.first() {
-            if t > clock_ms {
-                break;
-            }
-            pending.remove(0);
-            match status {
-                NodeStatus::Down => {
-                    let report = failover.on_failure(est, node)?;
-                    failovers.push((t, t + report.downtime_ms(), report.decision.chosen));
-                }
-                NodeStatus::Up => failover.on_recovery(node),
-            }
-        }
-
-        // Admit arrivals up to the clock.
-        while next_req < requests.len() && requests[next_req].arrival_ms <= clock_ms {
-            queue.push(requests[next_req]);
-            next_req += 1;
-        }
-
-        // Drop timed-out requests.
-        if let Some(deadline) = cfg.deadline_ms {
-            let before = queue.len();
-            queue.retain(|r| clock_ms - r.arrival_ms <= deadline);
-            dropped += before - queue.len();
-        }
-
-        // Dispatch?
-        let head_age = queue.first().map(|r| clock_ms - r.arrival_ms).unwrap_or(0.0);
-        match decide(&cfg.batcher, queue.len(), head_age) {
-            Dispatch::Now(n) => {
-                let batch: Vec<Request> = queue.drain(..n.min(queue.len())).collect();
-                let n = batch.len();
-                // Build the input tensor for this batch.
-                let rows: Vec<HostTensor> = batch
-                    .iter()
-                    .map(|r| inputs.slice0(r.input_idx, r.input_idx + 1))
-                    .collect::<Result<_>>()?;
-                let mut x = HostTensor::concat0(&rows)?;
-                // Pad to the compiled batch size if needed.
-                let target = cfg
-                    .batcher
-                    .supported
-                    .iter()
-                    .copied()
-                    .find(|&s| s >= n)
-                    .unwrap_or(n);
-                while x.shape[0] < target {
-                    let pad = x.slice0(0, 1)?;
-                    x = HostTensor::concat0(&[x, pad])?;
-                }
-                let (technique, failed) = match failover.mode {
-                    Mode::Healthy => (Technique::Repartition, None),
-                    Mode::Degraded { failed, technique } => (technique, Some(failed)),
-                };
-                let steps = steps_for(meta, technique, failed);
-                let (_, timing) = cluster.execute_steps(&steps, &x)?;
-                let service_ms = timing.total_ms();
-                clock_ms += service_ms;
-                for r in &batch {
-                    completed.push(Completion {
-                        id: r.id,
-                        latency_ms: clock_ms - r.arrival_ms,
-                        technique: failover.technique(),
-                        batch_size: target,
-                    });
-                }
-            }
-            Dispatch::Wait => {
-                // Advance to the next event: arrival, detection, raw
-                // failure, or batcher timeout.
-                let mut next_t = f64::INFINITY;
-                if next_req < requests.len() {
-                    next_t = next_t.min(requests[next_req].arrival_ms);
-                }
-                if let Some(&(t, _, _)) = pending.first() {
-                    next_t = next_t.min(t);
-                }
-                if plan_cursor < plan.events.len() {
-                    next_t = next_t.min(plan.events[plan_cursor].at_ms);
-                }
-                if !queue.is_empty() {
-                    next_t = next_t.min(clock_ms + (cfg.batcher.timeout_ms - head_age).max(0.0));
-                }
-                if next_t.is_infinite() {
-                    break; // nothing left to do
-                }
-                clock_ms = next_t.max(clock_ms + 1e-9);
-            }
-        }
-
-        if next_req >= requests.len() && queue.is_empty() {
-            // flush remaining detections for reporting, then stop
-            break;
-        }
-    }
-
-    let latencies: Vec<f64> = completed.iter().map(|c| c.latency_ms).collect();
-    let span = clock_ms.max(1e-9);
-    Ok(ServiceReport {
-        throughput_rps: completed.len() as f64 / (span / 1e3),
-        latency: Summary::of(&latencies),
-        completed,
-        dropped,
-        failovers,
-        sim_span_ms: span,
-    })
+    serve(
+        std::slice::from_mut(cluster),
+        est,
+        std::slice::from_mut(failover),
+        &cfg.engine_config(),
+        requests,
+        inputs,
+        std::slice::from_ref(plan),
+    )
 }

@@ -1,17 +1,22 @@
 //! End-to-end serving driver (the mandated full-system validation): load a
-//! model, serve a poisson request stream through the distributed pipeline,
-//! inject a node failure mid-run, let CONTINUER fail over, and report
-//! latency / throughput / downtime before vs after.
+//! model, serve a poisson request stream through the distributed pipeline
+//! via the event-driven engine, inject a node failure mid-run, let
+//! CONTINUER fail over, and report latency / throughput / downtime before
+//! vs after. Supports replica sharding (`replicas`) and stage-level
+//! pipelining (`pipeline_depth`); the defaults reproduce the paper's
+//! single-pipeline, one-batch-in-flight deployment.
 
 use anyhow::Result;
 
 use crate::cluster::failure::{Detector, FailurePlan};
 use crate::cluster::sim::EdgeCluster;
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::engine::{serve, EngineConfig};
 use crate::coordinator::estimator::Estimator;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::profiler::DowntimeTable;
-use crate::coordinator::service::{run as serve, ServiceConfig, ServiceReport};
+use crate::coordinator::router::RoutePolicy;
+use crate::coordinator::service::{ServiceConfig, ServiceReport};
 use crate::predict::{AccuracyModel, GbdtParams};
 use crate::util::bench::{f, Table};
 use crate::util::stats::Summary;
@@ -24,11 +29,32 @@ pub struct E2eParams {
     pub model: String,
     pub n_requests: usize,
     pub rate_rps: f64,
+    /// Node that fails (on replica 0; other replicas keep serving).
     pub fail_node: usize,
     pub fail_at_ms: f64,
+    /// Number of independent pipeline replicas (1 = the paper's setup).
+    pub replicas: usize,
+    /// Max batches in flight per replica (1 = no pipelining).
+    pub pipeline_depth: usize,
+}
+
+impl E2eParams {
+    /// The seed deployment: one replica, one batch in flight.
+    pub fn single(model: String, n_requests: usize, rate_rps: f64, fail_node: usize, fail_at_ms: f64) -> E2eParams {
+        E2eParams {
+            model,
+            n_requests,
+            rate_rps,
+            fail_node,
+            fail_at_ms,
+            replicas: 1,
+            pipeline_depth: 1,
+        }
+    }
 }
 
 pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
+    anyhow::ensure!(p.replicas >= 1, "need >= 1 replica");
     let meta = ctx.store.model(&p.model)?;
     let samples = layer_samples(ctx)?;
     let params = GbdtParams::default();
@@ -37,15 +63,24 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
     let (acc_model, _) = AccuracyModel::fit(&metas, &params, ctx.config.seed)?;
     let downtime = DowntimeTable::new();
 
-    let mut cluster = EdgeCluster::new(
-        &ctx.engine,
-        &ctx.store,
-        meta,
-        ctx.config.link.clone(),
-        ctx.config.seed,
+    let mut clusters: Vec<EdgeCluster> = (0..p.replicas)
+        .map(|r| {
+            EdgeCluster::new(
+                &ctx.engine,
+                &ctx.store,
+                meta,
+                ctx.config.link.clone(),
+                ctx.config.seed ^ r as u64,
+            )
+        })
+        .collect();
+    eprintln!(
+        "[e2e] preloading {} blocks x {} replica(s) ...",
+        meta.num_nodes, p.replicas
     );
-    eprintln!("[e2e] preloading {} blocks ...", meta.num_nodes);
-    cluster.preload(1, true)?;
+    for c in &clusters {
+        c.preload(1, true)?;
+    }
 
     let link = crate::cluster::link::LinkModel::new(ctx.config.link.clone());
     let est = Estimator::new(
@@ -56,7 +91,9 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         &downtime,
         ctx.config.reinstate_ms,
     );
-    let mut failover = Failover::new(ctx.config.objectives.clone());
+    let mut failovers: Vec<Failover> = (0..p.replicas)
+        .map(|_| Failover::new(ctx.config.objectives.clone()))
+        .collect();
     let (images, _) = ctx.store.test_set()?;
     let requests = generate(
         p.n_requests,
@@ -64,30 +101,53 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         images.shape[0],
         ctx.config.seed,
     );
-    let plan = FailurePlan::crash(p.fail_node, p.fail_at_ms);
-    let cfg = ServiceConfig {
-        batcher: BatcherConfig::new(
-            ctx.store.batch_sizes.clone(),
-            ctx.config.batch_timeout_ms,
-            ctx.config.max_batch,
-        ),
+    // The failure hits replica 0; the remaining replicas stay healthy.
+    let mut plans = vec![FailurePlan::crash(p.fail_node, p.fail_at_ms)];
+    plans.extend((1..p.replicas).map(|_| FailurePlan { events: Vec::new() }));
+    let batcher = BatcherConfig::new(
+        ctx.store.batch_sizes.clone(),
+        ctx.config.batch_timeout_ms,
+        ctx.config.max_batch,
+    );
+    eprintln!(
+        "[e2e] serving {} requests at {} rps over {} replica(s) (depth {}); node {} fails at t={} ms",
+        p.n_requests, p.rate_rps, p.replicas, p.pipeline_depth, p.fail_node, p.fail_at_ms
+    );
+    if p.replicas == 1 && p.pipeline_depth == 1 {
+        // The paper's deployment goes through the seed-compatible
+        // single-pipeline entry point (same engine underneath).
+        let scfg = ServiceConfig {
+            batcher,
+            detector: Detector::default(),
+            deadline_ms: None,
+        };
+        return crate::coordinator::service::run(
+            &mut clusters[0],
+            &est,
+            &mut failovers[0],
+            &scfg,
+            &requests,
+            &images,
+            &plans[0],
+        );
+    }
+    let cfg = EngineConfig {
+        batcher,
         detector: Detector::default(),
         deadline_ms: None,
+        pipeline_depth: p.pipeline_depth,
+        route: RoutePolicy::JoinShortestQueue,
+        decision_ms_override: None,
     };
-    eprintln!(
-        "[e2e] serving {} requests at {} rps; node {} fails at t={} ms",
-        p.n_requests, p.rate_rps, p.fail_node, p.fail_at_ms
-    );
-    let report = serve(
-        &mut cluster,
+    serve(
+        &mut clusters,
         &est,
-        &mut failover,
+        &mut failovers,
         &cfg,
         &requests,
         &images,
-        &plan,
-    )?;
-    Ok(report)
+        &plans,
+    )
 }
 
 pub fn print_report(p: &E2eParams, report: &ServiceReport) {
@@ -96,23 +156,50 @@ pub fn print_report(p: &E2eParams, report: &ServiceReport) {
         &["metric", "value"],
     );
     t.row(&["requests completed".into(), report.completed.len().to_string()]);
-    t.row(&["requests dropped".into(), report.dropped.to_string()]);
+    t.row(&[
+        "requests dropped".into(),
+        format!(
+            "{} ({} while degraded)",
+            report.dropped_count(),
+            report.degraded_drops()
+        ),
+    ]);
+    t.row(&["replicas / depth".into(), format!("{} / {}", p.replicas, p.pipeline_depth)]);
+    t.row(&["peak batches in flight".into(), report.max_in_flight.to_string()]);
     t.row(&["throughput (rps)".into(), f(report.throughput_rps, 1)]);
     t.row(&["latency mean (ms)".into(), f(report.latency.mean, 2)]);
     t.row(&["latency p50 (ms)".into(), f(report.latency.p50, 2)]);
     t.row(&["latency p95 (ms)".into(), f(report.latency.p95, 2)]);
     t.row(&["latency p99 (ms)".into(), f(report.latency.p99, 2)]);
     t.row(&["sim span (ms)".into(), f(report.sim_span_ms, 0)]);
-    for (start, end, tech) in &report.failovers {
+    for w in &report.failovers {
         t.row(&[
             "failover".into(),
-            format!("t={:.1}ms downtime={:.2}ms -> {}", start, end - start, tech.label()),
+            format!(
+                "replica {} t={:.1}ms downtime={:.2}ms -> {}",
+                w.replica,
+                w.start_ms,
+                w.downtime_ms(),
+                w.technique.label()
+            ),
+        ]);
+    }
+    for d in report.dropped.iter().take(5) {
+        t.row(&[
+            "dropped".into(),
+            format!(
+                "req {} (arrived {:.1}ms, {} mode)",
+                d.id,
+                d.arrival_ms,
+                if d.degraded { "degraded" } else { "healthy" }
+            ),
         ]);
     }
     t.print();
 
     // Before/after failure latency comparison.
-    if let Some((fail_t, _, _)) = report.failovers.first() {
+    if let Some(w) = report.failovers.first() {
+        let fail_t = w.start_ms;
         let before: Vec<f64> = report
             .completed
             .iter()
@@ -128,7 +215,7 @@ pub fn print_report(p: &E2eParams, report: &ServiceReport) {
         let b = Summary::of(&before);
         let a = Summary::of(&after);
         println!(
-            "before failure (t<{fail_t:.0}ms): n={} mean={:.2}ms | after failover: n={} mean={:.2}ms\n",
+            "healthy (t<{fail_t:.0}ms or surviving replicas): n={} mean={:.2}ms | degraded: n={} mean={:.2}ms\n",
             b.n, b.mean, a.n, a.mean
         );
     }
@@ -143,13 +230,7 @@ pub fn run_default(ctx: &ExpContext) -> Result<()> {
         .get(meta.skippable_nodes.len() / 2)
         .copied()
         .unwrap_or(meta.num_nodes / 2);
-    let p = E2eParams {
-        model,
-        n_requests: 60,
-        rate_rps: 6.0,
-        fail_node,
-        fail_at_ms: 4000.0,
-    };
+    let p = E2eParams::single(model, 60, 6.0, fail_node, 4000.0);
     let report = run_e2e(ctx, &p)?;
     print_report(&p, &report);
     Ok(())

@@ -157,13 +157,13 @@ pub fn evaluate(ctx: &ExpContext) -> Result<Vec<LatencyPoint>> {
                     cluster.measure_latency_split(tech, Some(failed), &sample, reps)?;
                 for (pi, fitted_p) in fitted.iter().enumerate() {
                     let est = Estimator::new(
-        meta,
-        &fitted_p.model,
-        &acc_model,
-        cluster.link(),
-        &downtime,
-        ctx.config.reinstate_ms,
-    );
+                        meta,
+                        &fitted_p.model,
+                        &acc_model,
+                        cluster.link(),
+                        &downtime,
+                        ctx.config.reinstate_ms,
+                    );
                     let predicted = est.predict_latency_ms(tech, Some(failed));
                     let measured = if pi == 0 {
                         comp_ms + net_ms

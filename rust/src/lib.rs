@@ -12,15 +12,25 @@
 //!   the python/JAX/Pallas build path) via the PJRT C API and executes
 //!   them; python never runs at request time.
 //! - [`cluster`] simulates the edge cluster: nodes hosting per-block
-//!   executables, links with a latency/bandwidth model, failure injection.
+//!   executables, links with a latency/bandwidth model, failure
+//!   injection, and per-stage execution primitives the serving engine
+//!   schedules around.
 //! - [`dnn`] holds model/layer metadata mirroring the python definitions.
 //! - [`predict`] is a from-scratch gradient-boosted-tree library providing
 //!   the paper's Latency Prediction Model and Accuracy Prediction Model.
-//! - [`coordinator`] is the CONTINUER framework itself: the offline
-//!   profiler phase and the runtime scheduler / failover machinery plus
-//!   the serving pipeline (router, batcher, service).
+//! - [`coordinator`] is the CONTINUER framework plus the serving stack:
+//!   the offline profiler phase; the runtime decision machinery
+//!   (estimator → [`coordinator::RecoveryPolicy`] → failover); and the
+//!   event-driven serving engine — stage-level pipelining (up to
+//!   `pipeline_depth` batches in flight per replica, throughput set by
+//!   the bottleneck stage) across `R` pipeline replicas behind a
+//!   round-robin / join-shortest-queue router, with per-replica failure
+//!   injection and failover.
 //! - [`workload`], [`baselines`], [`exper`] support the evaluation: load
-//!   generators, comparison policies and one driver per paper table/figure.
+//!   generators (with per-replica stream helpers), comparison policies
+//!   (all implementing the same [`coordinator::RecoveryPolicy`] trait
+//!   CONTINUER uses, so they run inside the identical engine) and one
+//!   driver per paper table/figure.
 
 pub mod baselines;
 pub mod cluster;

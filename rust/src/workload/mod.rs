@@ -69,6 +69,27 @@ pub fn generate(n: usize, arrival: Arrival, pool_size: usize, seed: u64) -> Vec<
     out
 }
 
+/// Split one stream into `replicas` interleaved per-replica streams
+/// (round-robin by position), preserving arrival order within each — the
+/// offline counterpart of the engine's round-robin router, useful for
+/// driving replicas with pre-partitioned workloads.
+pub fn split_round_robin(reqs: &[Request], replicas: usize) -> Vec<Vec<Request>> {
+    assert!(replicas > 0, "need >= 1 replica stream");
+    let mut out: Vec<Vec<Request>> = vec![Vec::with_capacity(reqs.len() / replicas + 1); replicas];
+    for (i, r) in reqs.iter().enumerate() {
+        out[i % replicas].push(*r);
+    }
+    out
+}
+
+/// Merge per-replica streams back into one stream ordered by arrival time
+/// (stable: equal timestamps keep lower-replica-first order).
+pub fn merge_streams(streams: &[Vec<Request>]) -> Vec<Request> {
+    let mut out: Vec<Request> = streams.iter().flatten().copied().collect();
+    out.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    out
+}
+
 /// Save/replay traces as a simple CSV (id,arrival_ms,input_idx).
 pub fn to_trace(reqs: &[Request]) -> String {
     let mut s = String::from("id,arrival_ms,input_idx\n");
@@ -145,5 +166,26 @@ mod tests {
     fn input_indices_within_pool() {
         let reqs = generate(100, Arrival::Poisson { rate_rps: 10.0 }, 5, 5);
         assert!(reqs.iter().all(|r| r.input_idx < 5));
+    }
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let reqs = generate(31, Arrival::Poisson { rate_rps: 50.0 }, 16, 6);
+        let streams = split_round_robin(&reqs, 4);
+        assert_eq!(streams.len(), 4);
+        assert_eq!(streams.iter().map(Vec::len).sum::<usize>(), 31);
+        // round-robin: stream r holds requests r, r+4, r+8, ...
+        assert_eq!(streams[1][0].id, reqs[1].id);
+        assert_eq!(streams[1][1].id, reqs[5].id);
+        // each stream stays arrival-ordered
+        for s in &streams {
+            assert!(s.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        }
+        let merged = merge_streams(&streams);
+        assert_eq!(merged.len(), reqs.len());
+        assert!(merged.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        let mut ids: Vec<usize> = merged.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..31).collect::<Vec<_>>());
     }
 }

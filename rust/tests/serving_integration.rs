@@ -1,6 +1,7 @@
-//! Integration: the full serving loop with failure injection — a short
-//! end-to-end run asserting service continuity across a failover
-//! (skipped when artifacts/ is absent).
+//! Integration: the full serving engine with failure injection — short
+//! end-to-end runs asserting service continuity across a failover, in the
+//! seed-equivalent single-pipeline configuration and in a pipelined
+//! multi-replica one (skipped when artifacts/ is absent).
 
 use std::path::PathBuf;
 
@@ -26,24 +27,22 @@ fn service_survives_node_failure() {
     let ctx = ExpContext::open(cfg).unwrap();
     let meta = ctx.store.model("resnet32").unwrap();
     let fail_node = meta.skippable_nodes[meta.skippable_nodes.len() / 2];
-    let p = E2eParams {
-        model: "resnet32".into(),
-        n_requests: 16,
-        rate_rps: 8.0,
-        fail_node,
-        fail_at_ms: 700.0,
-    };
+    let p = E2eParams::single("resnet32".into(), 16, 8.0, fail_node, 700.0);
     let report = run_e2e(&ctx, &p).unwrap();
 
     // every request completed despite the mid-run failure
-    assert_eq!(report.completed.len(), 16, "dropped={}", report.dropped);
-    assert_eq!(report.dropped, 0);
+    assert_eq!(report.completed.len(), 16, "dropped={}", report.dropped.len());
+    assert!(report.dropped.is_empty());
+
+    // the non-pipelined configuration reproduces the seed's one-batch-
+    // in-flight serving regime
+    assert_eq!(report.max_in_flight, 1);
 
     // exactly one failover happened and it picked a real technique
     assert_eq!(report.failovers.len(), 1);
-    let (start, end, tech) = report.failovers[0];
-    assert!(start >= 700.0, "detection at {start} >= failure time");
-    assert!(end - start < 200.0, "downtime {} ms", end - start);
+    let w = report.failovers[0];
+    assert!(w.start_ms >= 700.0, "detection at {} >= failure time", w.start_ms);
+    assert!(w.downtime_ms() < 200.0, "downtime {} ms", w.downtime_ms());
     // requests served after the failover carry the chosen technique
     let after: Vec<_> = report
         .completed
@@ -51,7 +50,7 @@ fn service_survives_node_failure() {
         .filter(|c| c.technique.is_some())
         .collect();
     assert!(!after.is_empty(), "some requests must be served degraded");
-    assert!(after.iter().all(|c| c.technique.unwrap() == tech));
+    assert!(after.iter().all(|c| c.technique.unwrap() == w.technique));
 
     // latency is finite and sane
     assert!(report.latency.mean > 0.0);
@@ -65,13 +64,7 @@ fn service_healthy_run_no_failovers() {
     let mut cfg = Config::default();
     cfg.artifacts_dir = dir;
     let ctx = ExpContext::open(cfg).unwrap();
-    let p = E2eParams {
-        model: "mobilenetv2".into(),
-        n_requests: 8,
-        rate_rps: 10.0,
-        fail_node: 3,
-        fail_at_ms: 1e12, // never
-    };
+    let p = E2eParams::single("mobilenetv2".into(), 8, 10.0, 3, 1e12 /* never */);
     let report = run_e2e(&ctx, &p).unwrap();
     assert_eq!(report.completed.len(), 8);
     assert!(report.failovers.is_empty());
@@ -79,4 +72,40 @@ fn service_healthy_run_no_failovers() {
         .completed
         .iter()
         .all(|c| c.technique.is_none()), "all healthy");
+}
+
+#[test]
+fn multi_replica_pipelined_serving_isolates_failure() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = dir;
+    let ctx = ExpContext::open(cfg).unwrap();
+    let meta = ctx.store.model("resnet32").unwrap();
+    let fail_node = meta.skippable_nodes[meta.skippable_nodes.len() / 2];
+    // Saturating arrivals so join-shortest-queue spreads traffic over both
+    // replicas; the failure lands mid-stream on replica 0.
+    let p = E2eParams {
+        model: "resnet32".into(),
+        n_requests: 12,
+        rate_rps: 200.0,
+        fail_node,
+        fail_at_ms: 30.0,
+        replicas: 2,
+        pipeline_depth: 2,
+    };
+    let report = run_e2e(&ctx, &p).unwrap();
+
+    assert_eq!(report.completed.len(), 12, "dropped={}", report.dropped.len());
+    // the failure hits replica 0 only
+    assert_eq!(report.failovers.len(), 1);
+    assert_eq!(report.failovers[0].replica, 0);
+    // replica 1 keeps serving the healthy full pipeline throughout
+    assert!(report
+        .completed
+        .iter()
+        .filter(|c| c.replica == 1)
+        .all(|c| c.technique.is_none()));
+    // both replicas took traffic
+    assert!(report.completed.iter().any(|c| c.replica == 0));
+    assert!(report.completed.iter().any(|c| c.replica == 1));
 }
