@@ -7,7 +7,11 @@
 //!
 //! Run: `cargo run --release --example failover_serving -- [--model m]
 //!       [--requests n] [--rate rps] [--fail-node k] [--fail-at ms]
-//!       [--replicas r] [--depth d]`
+//!       [--replicas r] [--depth d] [--monitored]`
+//!
+//! `--monitored` detects failures through the simulated heartbeat
+//! monitor (phi-accrual, false positives, quarantine) instead of the
+//! oracle detector.
 
 use anyhow::Result;
 
@@ -38,6 +42,7 @@ fn main() -> Result<()> {
         fail_at_ms: args.get_f64("fail-at", 4000.0)?,
         replicas: args.get_usize("replicas", 1)?,
         pipeline_depth: args.get_usize("depth", 1)?,
+        monitored: args.flag("monitored") || args.get("monitored") == Some("true"),
     };
     let report = run_e2e(&ctx, &p)?;
     print_report(&p, &report);

@@ -1,0 +1,174 @@
+//! Bench: the health-monitoring hot paths (no artifacts needed).
+//!
+//! Part 1 — monitor simulation cost: wall time to simulate the heartbeat
+//! channel + detector + quarantine gate for an 8-node replica over a
+//! 60-second horizon under a churning MTBF/MTTR plan, for the fixed-
+//! timeout and phi-accrual detectors. This is the per-replica setup cost
+//! every monitored serving run pays.
+//!
+//! Part 2 — serving under monitored health: engine throughput on the
+//! synthetic 4-node pipeline with a mid-run crash + recovery, comparing
+//! oracle detection against monitored fixed-timeout and phi-accrual
+//! detection over a noisy channel (1 ms jitter, 5% loss).
+//!
+//! Emits machine-readable `BENCH_health.json` for the perf trajectory.
+
+use continuer::cluster::failure::{Detector, FailurePlan};
+use continuer::config::Objectives;
+use continuer::coordinator::batcher::BatcherConfig;
+use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::estimator::StaticMetrics;
+use continuer::coordinator::router::RoutePolicy;
+use continuer::coordinator::Failover;
+use continuer::health::{simulate, DetectorKind, HealthConfig, HeartbeatConfig};
+use continuer::runtime::HostTensor;
+use continuer::util::bench::{bench, f, Table};
+use continuer::util::json::{obj, Json};
+use continuer::util::rng::Rng;
+use continuer::workload::{generate, Arrival};
+
+fn health_cfg(detector: DetectorKind) -> HealthConfig {
+    HealthConfig {
+        heartbeat: HeartbeatConfig {
+            interval_ms: 10.0,
+            jitter_ms: 1.0,
+            loss_prob: 0.05,
+            blackout: None,
+        },
+        detector,
+        failover_slowdown: 3.0,
+        quarantine_ms: 100.0,
+        slowdown_window: 8,
+        seed: 42,
+    }
+}
+
+fn monitor_bench() -> Vec<Json> {
+    const NODES: usize = 8;
+    const HORIZON_MS: f64 = 60_000.0;
+    let mut rng = Rng::new(17);
+    let eligible: Vec<usize> = (1..=NODES).collect();
+    let plan = FailurePlan::random_mtbf(&eligible, HORIZON_MS, 5_000.0, 500.0, &mut rng);
+
+    let mut t = Table::new(
+        "bench: monitor simulation — 8 nodes, 60 s horizon, mtbf 5 s / mttr 0.5 s",
+        &["detector", "mean us", "p95 us", "events"],
+    );
+    let mut out = Vec::new();
+    let cases = [
+        ("fixed/25ms", DetectorKind::FixedTimeout { timeout_ms: 25.0 }),
+        (
+            "phi/8",
+            DetectorKind::PhiAccrual { threshold: 8.0, window: 64, min_std_ms: 0.5 },
+        ),
+    ];
+    for (label, kind) in cases {
+        let cfg = health_cfg(kind);
+        let events = simulate(&cfg, &plan, NODES, HORIZON_MS).len();
+        let s = bench(2, 10, || {
+            std::hint::black_box(simulate(&cfg, &plan, NODES, HORIZON_MS));
+        });
+        t.row(&[
+            label.to_string(),
+            f(s.mean, 1),
+            f(s.p95, 1),
+            events.to_string(),
+        ]);
+        out.push(obj(&[
+            ("detector", label.into()),
+            ("mean_us", s.mean.into()),
+            ("p95_us", s.p95.into()),
+            ("events", events.into()),
+        ]));
+    }
+    t.print();
+    out
+}
+
+fn serving_case(health: HealthMode) -> (f64, usize, usize) {
+    let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+    let mut failovers = vec![Failover::new(Objectives::default())];
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1], 2.0, 1),
+        health,
+        deadline_ms: None,
+        pipeline_depth: 4,
+        route: RoutePolicy::RoundRobin,
+        decision_ms_override: Some(1.5),
+    };
+    let requests = generate(400, Arrival::Poisson { rate_rps: 500.0 }, 16, 42);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let report = serve(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        &cfg,
+        &requests,
+        &inputs,
+        &[FailurePlan::crash_recover(3, 200.0, 300.0)],
+    )
+    .unwrap();
+    assert_eq!(
+        report.completed.len() + report.dropped.len(),
+        400,
+        "bench must conserve requests"
+    );
+    (
+        report.throughput_rps,
+        report.failovers.len(),
+        report.false_failovers(),
+    )
+}
+
+fn serving_bench() -> Vec<Json> {
+    let mut t = Table::new(
+        "bench: serving under monitored health — 4-node pipeline, crash @200ms + recovery",
+        &["health mode", "throughput rps", "failovers", "false fo"],
+    );
+    let cases: Vec<(&str, HealthMode)> = vec![
+        ("oracle", HealthMode::Oracle(Detector::default())),
+        (
+            "monitored fixed/25ms",
+            HealthMode::Monitored(health_cfg(DetectorKind::FixedTimeout { timeout_ms: 25.0 })),
+        ),
+        (
+            "monitored phi/8",
+            HealthMode::Monitored(health_cfg(DetectorKind::PhiAccrual {
+                threshold: 8.0,
+                window: 64,
+                min_std_ms: 0.5,
+            })),
+        ),
+    ];
+    let mut out = Vec::new();
+    for (label, health) in cases {
+        let (rps, fo, false_fo) = serving_case(health);
+        t.row(&[
+            label.to_string(),
+            f(rps, 1),
+            fo.to_string(),
+            false_fo.to_string(),
+        ]);
+        out.push(obj(&[
+            ("mode", label.into()),
+            ("throughput_rps", rps.into()),
+            ("failovers", fo.into()),
+            ("false_failovers", false_fo.into()),
+        ]));
+    }
+    t.print();
+    out
+}
+
+fn main() {
+    let monitor = monitor_bench();
+    let serving = serving_bench();
+    let out = obj(&[
+        ("bench", "health".into()),
+        ("monitor_sim", Json::Arr(monitor)),
+        ("serving", Json::Arr(serving)),
+    ]);
+    let path = "BENCH_health.json";
+    std::fs::write(path, out.to_string()).unwrap();
+    println!("wrote {path}");
+}

@@ -16,7 +16,7 @@ use continuer::cluster::failure::Detector;
 use continuer::cluster::sim::EdgeCluster;
 use continuer::config::{Config, Objectives};
 use continuer::coordinator::batcher::BatcherConfig;
-use continuer::coordinator::engine::{serve, EngineConfig, SyntheticBackend};
+use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
 use continuer::coordinator::estimator::MetricsSource;
 use continuer::coordinator::router::RoutePolicy;
 use continuer::coordinator::scheduler::CandidateMetrics;
@@ -58,7 +58,7 @@ fn serving_case(replicas: usize, depth: usize) -> (f64, usize) {
         .collect();
     let cfg = EngineConfig {
         batcher: BatcherConfig::new(vec![1], 2.0, 1),
-        detector: Detector::default(),
+        health: HealthMode::Oracle(Detector::default()),
         deadline_ms: None,
         pipeline_depth: depth,
         route: RoutePolicy::JoinShortestQueue,

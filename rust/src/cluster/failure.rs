@@ -1,43 +1,126 @@
-//! Failure injection and detection for the simulated edge cluster.
+//! Failure injection for the simulated edge cluster: the *ground truth*
+//! side of node health.
 //!
-//! The injector produces a schedule of crash / recovery events (one-shot
-//! crashes, intermittent flaps); the detector models heartbeat-based
-//! detection latency, which contributes to the measured downtime of a
-//! failover (the paper's downtime metric starts at detection).
+//! Failures are no longer binary fail-stop. Each node carries a
+//! [`NodeCondition`]:
+//!
+//! - `Up` — serving normally;
+//! - `Degraded(slowdown)` — a *gray failure*: the node is alive (it
+//!   heartbeats, it answers) but its stage runs `slowdown`× slower, and
+//!   its heartbeats stretch by the same factor. Whether a degradation is
+//!   worth failing over is the monitor's call, not the injector's;
+//! - `Down` — crashed / partitioned; the node is silent and its stages
+//!   cannot run.
+//!
+//! A [`FailurePlan`] is a time-sorted schedule of condition changes.
+//! Constructors cover one-shot crashes, crash + recovery, intermittent
+//! flaps, gray-failure windows, and random schedules (per-node crash
+//! probability with an optional MTTR, or a full MTBF/MTTR renewal
+//! process), and plans compose with [`FailurePlan::merge`].
+//!
+//! *Detection* of these conditions lives in [`crate::health`]: a
+//! simulated heartbeat channel feeds a [`crate::health::HealthDetector`],
+//! which — unlike the ground truth here — can be wrong in both
+//! directions (late detections and false positives). The legacy
+//! [`Detector`] below is the oracle model (exact detection one heartbeat
+//! quantum plus a timeout after a crash) kept for seed-compatible runs.
 
 use crate::util::rng::Rng;
 
-/// Node liveness.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum NodeStatus {
+/// Ground-truth node condition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeCondition {
+    /// Serving normally.
     Up,
+    /// Gray failure: alive but running this many times slower (> 1).
+    Degraded(f64),
+    /// Crashed or partitioned; silent, cannot serve.
     Down,
 }
 
-/// A scheduled failure event.
+impl NodeCondition {
+    /// Whether the node can serve at all (possibly slowly).
+    pub fn is_up(&self) -> bool {
+        !matches!(self, NodeCondition::Down)
+    }
+
+    /// Service-time stretch factor (1.0 when healthy; infinite when down).
+    pub fn slowdown(&self) -> f64 {
+        match self {
+            NodeCondition::Up => 1.0,
+            NodeCondition::Degraded(s) => *s,
+            NodeCondition::Down => f64::INFINITY,
+        }
+    }
+}
+
+/// A scheduled condition change.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FailureEvent {
     /// Simulation time, milliseconds.
     pub at_ms: f64,
     pub node: usize,
-    pub status: NodeStatus,
+    pub condition: NodeCondition,
 }
 
-/// Failure schedule generator.
-#[derive(Debug, Clone)]
+/// Failure schedule generator: a time-sorted list of condition changes.
+#[derive(Debug, Clone, Default)]
 pub struct FailurePlan {
     pub events: Vec<FailureEvent>,
 }
 
 impl FailurePlan {
+    /// No failures at all.
+    pub fn none() -> FailurePlan {
+        FailurePlan { events: Vec::new() }
+    }
+
     /// A single crash of `node` at `at_ms` (never recovers).
     pub fn crash(node: usize, at_ms: f64) -> FailurePlan {
         FailurePlan {
             events: vec![FailureEvent {
                 at_ms,
                 node,
-                status: NodeStatus::Down,
+                condition: NodeCondition::Down,
             }],
+        }
+    }
+
+    /// A crash at `at_ms` followed by recovery `down_ms` later.
+    pub fn crash_recover(node: usize, at_ms: f64, down_ms: f64) -> FailurePlan {
+        FailurePlan {
+            events: vec![
+                FailureEvent {
+                    at_ms,
+                    node,
+                    condition: NodeCondition::Down,
+                },
+                FailureEvent {
+                    at_ms: at_ms + down_ms,
+                    node,
+                    condition: NodeCondition::Up,
+                },
+            ],
+        }
+    }
+
+    /// A gray-failure window: `node` runs `slowdown`× slower during
+    /// `[at_ms, at_ms + duration_ms)`, then returns to normal.
+    pub fn degraded(node: usize, at_ms: f64, slowdown: f64, duration_ms: f64) -> FailurePlan {
+        assert!(slowdown > 1.0, "degraded slowdown must be > 1");
+        FailurePlan {
+            events: vec![
+                FailureEvent {
+                    at_ms,
+                    node,
+                    condition: NodeCondition::Degraded(slowdown),
+                },
+                FailureEvent {
+                    at_ms: at_ms + duration_ms,
+                    node,
+                    condition: NodeCondition::Up,
+                },
+            ],
         }
     }
 
@@ -49,13 +132,13 @@ impl FailurePlan {
             events.push(FailureEvent {
                 at_ms: t,
                 node,
-                status: NodeStatus::Down,
+                condition: NodeCondition::Down,
             });
             t += down_ms;
             events.push(FailureEvent {
                 at_ms: t,
                 node,
-                status: NodeStatus::Up,
+                condition: NodeCondition::Up,
             });
             t += up_ms;
         }
@@ -63,24 +146,77 @@ impl FailurePlan {
     }
 
     /// Random crashes over a horizon: each eligible node crashes at most
-    /// once, with probability `p_crash`, at a uniform time.
+    /// once, with probability `p_crash`, at a uniform time. With
+    /// `mttr_ms = Some(m)` each crash recovers after an Exp(1/m) repair,
+    /// so random plans exercise the recovery path too; `None` reproduces
+    /// crash-and-stay-down.
     pub fn random(
         eligible: &[usize],
         horizon_ms: f64,
         p_crash: f64,
+        mttr_ms: Option<f64>,
         rng: &mut Rng,
     ) -> FailurePlan {
         let mut events = Vec::new();
         for &node in eligible {
             if rng.bool(p_crash) {
+                let at_ms = rng.range(0.0, horizon_ms);
                 events.push(FailureEvent {
-                    at_ms: rng.range(0.0, horizon_ms),
+                    at_ms,
                     node,
-                    status: NodeStatus::Down,
+                    condition: NodeCondition::Down,
                 });
+                if let Some(m) = mttr_ms {
+                    events.push(FailureEvent {
+                        at_ms: at_ms + rng.exp(1.0 / m.max(1e-9)),
+                        node,
+                        condition: NodeCondition::Up,
+                    });
+                }
             }
         }
-        events.sort_by(|a, b| a.at_ms.partial_cmp(&b.at_ms).unwrap());
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        FailurePlan { events }
+    }
+
+    /// A full renewal process per node: time-to-failure ~ Exp(1/mtbf),
+    /// time-to-repair ~ Exp(1/mttr), repeating until `horizon_ms`. Every
+    /// crash inside the horizon gets its recovery event (possibly past
+    /// the horizon), so the plan always closes its outages.
+    pub fn random_mtbf(
+        eligible: &[usize],
+        horizon_ms: f64,
+        mtbf_ms: f64,
+        mttr_ms: f64,
+        rng: &mut Rng,
+    ) -> FailurePlan {
+        assert!(mtbf_ms > 0.0 && mttr_ms > 0.0, "mtbf/mttr must be positive");
+        let mut events = Vec::new();
+        for &node in eligible {
+            let mut t = rng.exp(1.0 / mtbf_ms);
+            while t < horizon_ms {
+                events.push(FailureEvent {
+                    at_ms: t,
+                    node,
+                    condition: NodeCondition::Down,
+                });
+                let up = t + rng.exp(1.0 / mttr_ms);
+                events.push(FailureEvent {
+                    at_ms: up,
+                    node,
+                    condition: NodeCondition::Up,
+                });
+                t = up + rng.exp(1.0 / mtbf_ms);
+            }
+        }
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        FailurePlan { events }
+    }
+
+    /// Combine several plans into one time-sorted schedule.
+    pub fn merge<I: IntoIterator<Item = FailurePlan>>(plans: I) -> FailurePlan {
+        let mut events: Vec<FailureEvent> = plans.into_iter().flat_map(|p| p.events).collect();
+        events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
         FailurePlan { events }
     }
 
@@ -93,10 +229,17 @@ impl FailurePlan {
         }
         &self.events[cursor..end]
     }
+
+    /// Time of the last scheduled event (0 when empty).
+    pub fn last_event_ms(&self) -> f64 {
+        self.events.last().map(|e| e.at_ms).unwrap_or(0.0)
+    }
 }
 
-/// Heartbeat-based failure detector model: a crash at time t is *detected*
-/// at the next heartbeat boundary plus a timeout.
+/// Oracle failure-detector model: a crash at time t is *detected* at the
+/// next heartbeat boundary plus a timeout — exact, never wrong, used by
+/// seed-compatible runs. The imperfect detectors (late, and wrong in both
+/// directions) live in [`crate::health`].
 #[derive(Debug, Clone)]
 pub struct Detector {
     pub heartbeat_ms: f64,
@@ -129,15 +272,33 @@ mod tests {
         let p = FailurePlan::crash(3, 100.0);
         assert_eq!(p.events.len(), 1);
         assert_eq!(p.events[0].node, 3);
-        assert_eq!(p.events[0].status, NodeStatus::Down);
+        assert_eq!(p.events[0].condition, NodeCondition::Down);
+    }
+
+    #[test]
+    fn crash_recover_closes_outage() {
+        let p = FailurePlan::crash_recover(2, 50.0, 30.0);
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.events[1].condition, NodeCondition::Up);
+        assert!((p.events[1].at_ms - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degraded_window() {
+        let p = FailurePlan::degraded(4, 10.0, 3.0, 100.0);
+        assert_eq!(p.events[0].condition, NodeCondition::Degraded(3.0));
+        assert!(p.events[0].condition.is_up());
+        assert!((p.events[0].condition.slowdown() - 3.0).abs() < 1e-12);
+        assert_eq!(p.events[1].condition, NodeCondition::Up);
+        assert!((p.events[1].at_ms - 110.0).abs() < 1e-9);
     }
 
     #[test]
     fn intermittent_alternates() {
         let p = FailurePlan::intermittent(2, 10.0, 5.0, 20.0, 3);
         assert_eq!(p.events.len(), 6);
-        assert_eq!(p.events[0].status, NodeStatus::Down);
-        assert_eq!(p.events[1].status, NodeStatus::Up);
+        assert_eq!(p.events[0].condition, NodeCondition::Down);
+        assert_eq!(p.events[1].condition, NodeCondition::Up);
         assert!((p.events[1].at_ms - 15.0).abs() < 1e-9);
         // strictly increasing times
         for w in p.events.windows(2) {
@@ -148,13 +309,58 @@ mod tests {
     #[test]
     fn random_is_sorted_and_bounded() {
         let mut rng = Rng::new(4);
-        let p = FailurePlan::random(&[2, 3, 4, 5, 6], 1000.0, 0.8, &mut rng);
+        let p = FailurePlan::random(&[2, 3, 4, 5, 6], 1000.0, 0.8, None, &mut rng);
         for w in p.events.windows(2) {
             assert!(w[0].at_ms <= w[1].at_ms);
         }
         for e in &p.events {
             assert!((0.0..=1000.0).contains(&e.at_ms));
         }
+    }
+
+    #[test]
+    fn random_with_mttr_recovers_every_crash() {
+        let mut rng = Rng::new(9);
+        let p = FailurePlan::random(&[1, 2, 3, 4, 5], 1000.0, 1.0, Some(50.0), &mut rng);
+        let downs = p.events.iter().filter(|e| e.condition == NodeCondition::Down).count();
+        let ups = p.events.iter().filter(|e| e.condition == NodeCondition::Up).count();
+        assert_eq!(downs, 5);
+        assert_eq!(ups, 5, "every crash must schedule its recovery");
+    }
+
+    #[test]
+    fn mtbf_plan_alternates_per_node() {
+        let mut rng = Rng::new(7);
+        let p = FailurePlan::random_mtbf(&[1, 2, 3], 5000.0, 400.0, 60.0, &mut rng);
+        assert!(!p.events.is_empty(), "5000 ms at mtbf 400 must produce crashes");
+        for node in 1..=3 {
+            let seq: Vec<NodeCondition> = p
+                .events
+                .iter()
+                .filter(|e| e.node == node)
+                .map(|e| e.condition)
+                .collect();
+            // per node: Down, Up, Down, Up, ... and balanced
+            for (i, c) in seq.iter().enumerate() {
+                let want = if i % 2 == 0 { NodeCondition::Down } else { NodeCondition::Up };
+                assert_eq!(*c, want, "node {node} event {i}");
+            }
+            assert_eq!(seq.len() % 2, 0, "node {node}: outages must close");
+        }
+    }
+
+    #[test]
+    fn merge_sorts_across_plans() {
+        let p = FailurePlan::merge([
+            FailurePlan::crash(2, 100.0),
+            FailurePlan::degraded(3, 20.0, 2.0, 30.0),
+            FailurePlan::none(),
+        ]);
+        assert_eq!(p.events.len(), 3);
+        for w in p.events.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms);
+        }
+        assert!((p.last_event_ms() - 100.0).abs() < 1e-9);
     }
 
     #[test]

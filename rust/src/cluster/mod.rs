@@ -5,7 +5,7 @@ pub mod failure;
 pub mod link;
 pub mod sim;
 
-pub use failure::{Detector, FailureEvent, FailurePlan, NodeStatus};
+pub use failure::{Detector, FailureEvent, FailurePlan, NodeCondition};
 pub use link::LinkModel;
 pub use sim::{
     expected_network_ms, healthy_path, steps_for, steps_for_chain, EdgeCluster, PathTiming, Step,

@@ -1,7 +1,9 @@
 //! The simulated edge cluster: N nodes, each hosting its block of the
 //! distributed DNN as a compiled PJRT executable. Block compute is *real*
 //! (executed and wall-clock timed); inter-node links use the LinkModel;
-//! failures flip node status.
+//! failure injection flips per-node [`NodeCondition`]s — a `Degraded`
+//! node stretches its measured stage time by its slowdown factor, a
+//! `Down` node cannot run stages at all.
 //!
 //! A technique's execution is a sequence of [`Step`]s: which *unit* (block
 //! or exit head) runs and which physical *host* runs it. Repartitioning
@@ -22,7 +24,7 @@ use crate::dnn::variants::Technique;
 use crate::runtime::{ArtifactStore, Engine, HostTensor, UnitKind};
 use crate::util::rng::Rng;
 
-use super::failure::NodeStatus;
+use super::failure::NodeCondition;
 use super::link::LinkModel;
 
 /// One pipeline step: a unit executed on a physical host node.
@@ -115,7 +117,7 @@ pub struct EdgeCluster<'a> {
     store: &'a ArtifactStore,
     pub meta: &'a ModelMeta,
     link: LinkModel,
-    status: Vec<NodeStatus>, // index 0 unused; 1-based node ids
+    conditions: Vec<NodeCondition>, // index 0 unused; 1-based node ids
     units: RefCell<HashMap<(UnitKind, usize), Rc<crate::runtime::UnitExecutable>>>,
     rng: RefCell<Rng>,
 }
@@ -133,7 +135,7 @@ impl<'a> EdgeCluster<'a> {
             store,
             meta,
             link: LinkModel::new(link_cfg),
-            status: vec![NodeStatus::Up; meta.num_nodes + 1],
+            conditions: vec![NodeCondition::Up; meta.num_nodes + 1],
             units: RefCell::new(HashMap::new()),
             rng: RefCell::new(Rng::new(seed)),
         }
@@ -146,15 +148,28 @@ impl<'a> EdgeCluster<'a> {
     // ----- liveness -------------------------------------------------------
 
     pub fn fail(&mut self, node: usize) {
-        self.status[node] = NodeStatus::Down;
+        self.conditions[node] = NodeCondition::Down;
     }
 
     pub fn restore(&mut self, node: usize) {
-        self.status[node] = NodeStatus::Up;
+        self.conditions[node] = NodeCondition::Up;
+    }
+
+    /// Gray failure: `node` keeps serving but `slowdown`× slower.
+    pub fn degrade(&mut self, node: usize, slowdown: f64) {
+        self.conditions[node] = NodeCondition::Degraded(slowdown);
+    }
+
+    pub fn set_condition(&mut self, node: usize, condition: NodeCondition) {
+        self.conditions[node] = condition;
+    }
+
+    pub fn condition(&self, node: usize) -> NodeCondition {
+        self.conditions[node]
     }
 
     pub fn is_up(&self, node: usize) -> bool {
-        self.status[node] == NodeStatus::Up
+        self.conditions[node].is_up()
     }
 
     pub fn alive_nodes(&self) -> Vec<usize> {
@@ -199,17 +214,20 @@ impl<'a> EdgeCluster<'a> {
     // ----- execution --------------------------------------------------------
 
     /// Execute one step's unit on a batch (liveness-checked), returning
-    /// the output activation and the measured compute time, ms. This is
-    /// the engine's per-stage primitive: the serving engine schedules
-    /// stage occupancy around it instead of executing whole paths.
+    /// the output activation and the occupancy time, ms: the *measured*
+    /// wall-clock compute stretched by the host's condition slowdown (1×
+    /// when healthy). This is the engine's per-stage primitive: the
+    /// serving engine schedules stage occupancy around it instead of
+    /// executing whole paths.
     pub fn execute_stage(&self, step: Step, x: &HostTensor) -> Result<(HostTensor, f64)> {
         if !self.is_up(step.host) {
             bail!("step {:?} hosted on failed node {}", step.unit, step.host);
         }
+        let slowdown = self.conditions[step.host].slowdown();
         let unit = self.unit(step.unit, x.shape[0])?;
         let t0 = Instant::now();
         let y = unit.run(self.engine, x)?;
-        Ok((y, t0.elapsed().as_secs_f64() * 1e3))
+        Ok((y, t0.elapsed().as_secs_f64() * 1e3 * slowdown))
     }
 
     /// Modeled transfer time of `bytes` moving from host `from` to host

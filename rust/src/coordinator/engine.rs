@@ -26,9 +26,10 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use anyhow::Result;
 
-use crate::cluster::failure::{Detector, FailurePlan, NodeStatus};
+use crate::cluster::failure::{Detector, FailurePlan, NodeCondition};
 use crate::cluster::sim::{steps_for, steps_for_chain, EdgeCluster, Step};
 use crate::dnn::variants::Technique;
+use crate::health::monitor::{simulate as simulate_monitor, HealthConfig, HealthEventKind};
 use crate::runtime::{HostTensor, UnitKind};
 use crate::util::stats::Summary;
 use crate::workload::Request;
@@ -50,8 +51,12 @@ pub trait StageBackend {
     fn run_stage(&mut self, step: Step, x: &HostTensor) -> Result<(HostTensor, f64)>;
     /// Modeled transfer time between hosts for an activation of `bytes`.
     fn transfer_ms(&mut self, from: usize, to: usize, bytes: usize) -> f64;
-    fn is_up(&self, node: usize) -> bool;
-    fn set_status(&mut self, node: usize, status: NodeStatus);
+    /// Ground-truth condition of a node (degraded stages run slower).
+    fn condition(&self, node: usize) -> NodeCondition;
+    fn set_condition(&mut self, node: usize, condition: NodeCondition);
+    fn is_up(&self, node: usize) -> bool {
+        self.condition(node).is_up()
+    }
 }
 
 impl StageBackend for EdgeCluster<'_> {
@@ -71,15 +76,12 @@ impl StageBackend for EdgeCluster<'_> {
         EdgeCluster::stage_transfer_ms(self, from, to, bytes)
     }
 
-    fn is_up(&self, node: usize) -> bool {
-        EdgeCluster::is_up(self, node)
+    fn condition(&self, node: usize) -> NodeCondition {
+        EdgeCluster::condition(self, node)
     }
 
-    fn set_status(&mut self, node: usize, status: NodeStatus) {
-        match status {
-            NodeStatus::Up => self.restore(node),
-            NodeStatus::Down => self.fail(node),
-        }
+    fn set_condition(&mut self, node: usize, condition: NodeCondition) {
+        EdgeCluster::set_condition(self, node, condition);
     }
 }
 
@@ -95,7 +97,7 @@ pub struct SyntheticBackend {
     pub exit_ms: f64,
     /// Per-hop transfer time, ms (a skip reroute pays two).
     pub hop_ms: f64,
-    status: Vec<NodeStatus>,
+    conditions: Vec<NodeCondition>,
 }
 
 impl SyntheticBackend {
@@ -106,7 +108,7 @@ impl SyntheticBackend {
             node_ms,
             exit_ms,
             hop_ms,
-            status: vec![NodeStatus::Up; n],
+            conditions: vec![NodeCondition::Up; n],
         }
     }
 
@@ -118,7 +120,7 @@ impl SyntheticBackend {
 
 impl StageBackend for SyntheticBackend {
     fn num_nodes(&self) -> usize {
-        self.status.len() - 1
+        self.conditions.len() - 1
     }
 
     fn steps(&self, tech: Technique, failed: Option<usize>) -> Vec<Step> {
@@ -133,7 +135,8 @@ impl StageBackend for SyntheticBackend {
             UnitKind::Node(n) => self.node_ms[n],
             UnitKind::Exit(_) => self.exit_ms,
         };
-        Ok((x.clone(), ms))
+        // A degraded host stretches its stage's service time in place.
+        Ok((x.clone(), ms * self.conditions[step.host].slowdown()))
     }
 
     fn transfer_ms(&mut self, from: usize, to: usize, _bytes: usize) -> f64 {
@@ -146,20 +149,38 @@ impl StageBackend for SyntheticBackend {
         }
     }
 
-    fn is_up(&self, node: usize) -> bool {
-        self.status[node] == NodeStatus::Up
+    fn condition(&self, node: usize) -> NodeCondition {
+        self.conditions[node]
     }
 
-    fn set_status(&mut self, node: usize, status: NodeStatus) {
-        self.status[node] = status;
+    fn set_condition(&mut self, node: usize, condition: NodeCondition) {
+        self.conditions[node] = condition;
     }
+}
+
+/// How the engine learns about node failures.
+#[derive(Debug, Clone)]
+pub enum HealthMode {
+    /// Oracle detection (the seed's model): every crash is detected at
+    /// exactly the next heartbeat quantum plus a timeout, recoveries are
+    /// seen instantly, degradations slow stages in place but never
+    /// trigger a failover, and nothing is ever detected that didn't
+    /// happen.
+    Oracle(Detector),
+    /// Detection through the [`crate::health`] monitor: heartbeats with
+    /// jitter/loss/blackouts feed a fixed-timeout or phi-accrual
+    /// detector, so detections are late, gray failures are failed over
+    /// only past the slowdown threshold, false positives happen (and
+    /// roll back), and recovered nodes wait out a quarantine before the
+    /// path repartitions back onto them.
+    Monitored(HealthConfig),
 }
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub batcher: BatcherConfig,
-    pub detector: Detector,
+    pub health: HealthMode,
     /// Drop requests that queue longer than this (None = never drop).
     pub deadline_ms: Option<f64>,
     /// Max batches concurrently in flight per replica. 1 reproduces the
@@ -179,7 +200,7 @@ impl EngineConfig {
     pub fn sequential(batcher: BatcherConfig, detector: Detector, deadline_ms: Option<f64>) -> EngineConfig {
         EngineConfig {
             batcher,
-            detector,
+            health: HealthMode::Oracle(detector),
             deadline_ms,
             pipeline_depth: 1,
             route: RoutePolicy::RoundRobin,
@@ -195,8 +216,13 @@ impl EngineConfig {
 #[derive(Debug)]
 enum EventKind {
     Arrival(Request),
-    RawFailure { replica: usize, node: usize, status: NodeStatus },
-    Detection { replica: usize, node: usize, status: NodeStatus },
+    /// Ground truth: the node's condition flips (the backend feels it
+    /// immediately; the controller only reacts to Detect* events).
+    RawCondition { replica: usize, node: usize, condition: NodeCondition },
+    /// The monitor (or oracle) concluded the node must be failed over.
+    DetectFailover { replica: usize, node: usize, false_positive: bool },
+    /// The monitor (or oracle) cleared the node for reintegration.
+    DetectRecovery { replica: usize, node: usize },
     BatcherTimeout { replica: usize },
     StageStart { replica: usize, batch: usize },
     StageDone { replica: usize, batch: usize },
@@ -375,30 +401,71 @@ pub fn serve<B: StageBackend>(
     for req in requests {
         eng.push(req.arrival_ms, EventKind::Arrival(*req));
     }
-    for (r, plan) in plans.iter().enumerate() {
+    let last_arrival = requests.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+    let empty_plan = FailurePlan::none();
+    let n_replicas = eng.backends.len();
+    for r in 0..n_replicas {
+        // A replica without a plan has no ground-truth failures, but a
+        // monitored channel can still produce false positives for it.
+        let plan = plans.get(r).unwrap_or(&empty_plan);
+        // Ground truth: the node flips at at_ms regardless of how (or
+        // whether) the controller finds out.
         for e in &plan.events {
-            // The node actually flips at at_ms; the controller only reacts
-            // at detection time (heartbeat quantised for crashes).
             eng.push(
                 e.at_ms,
-                EventKind::RawFailure {
+                EventKind::RawCondition {
                     replica: r,
                     node: e.node,
-                    status: e.status,
+                    condition: e.condition,
                 },
             );
-            let det = match e.status {
-                NodeStatus::Down => cfg.detector.detection_time(e.at_ms),
-                NodeStatus::Up => e.at_ms,
-            };
-            eng.push(
-                det,
-                EventKind::Detection {
-                    replica: r,
-                    node: e.node,
-                    status: e.status,
-                },
-            );
+        }
+        match &cfg.health {
+            HealthMode::Oracle(det) => {
+                // Seed behaviour: crashes detected at the quantised
+                // detection time, recoveries seen instantly, gray
+                // failures slow stages in place without a failover.
+                for e in &plan.events {
+                    match e.condition {
+                        NodeCondition::Down => eng.push(
+                            det.detection_time(e.at_ms),
+                            EventKind::DetectFailover {
+                                replica: r,
+                                node: e.node,
+                                false_positive: false,
+                            },
+                        ),
+                        NodeCondition::Up => eng.push(
+                            e.at_ms,
+                            EventKind::DetectRecovery { replica: r, node: e.node },
+                        ),
+                        NodeCondition::Degraded(_) => {}
+                    }
+                }
+            }
+            HealthMode::Monitored(health) => {
+                // Per-replica monitor with an independent seeded channel.
+                let mut hcfg = health.clone();
+                hcfg.seed = health.seed.wrapping_add(r as u64);
+                let horizon = hcfg.horizon_for(plan, last_arrival);
+                let num_nodes = eng.backends[r].num_nodes();
+                for ev in simulate_monitor(&hcfg, plan, num_nodes, horizon) {
+                    match ev.kind {
+                        HealthEventKind::Failover { false_positive } => eng.push(
+                            ev.at_ms,
+                            EventKind::DetectFailover {
+                                replica: r,
+                                node: ev.node,
+                                false_positive,
+                            },
+                        ),
+                        HealthEventKind::Recovery => eng.push(
+                            ev.at_ms,
+                            EventKind::DetectRecovery { replica: r, node: ev.node },
+                        ),
+                    }
+                }
+            }
         }
     }
     eng.run()
@@ -442,31 +509,32 @@ impl<B: StageBackend> Engine<'_, B> {
                     self.states[r].queue.push_back(req);
                     self.try_dispatch(r, t)?;
                 }
-                EventKind::RawFailure { replica, node, status } => {
+                EventKind::RawCondition { replica, node, condition } => {
                     // Only flip the node: a recovery is dispatched by its
-                    // Detection event (same timestamp, later seq), which
-                    // first clears the degraded mode — dispatching here
-                    // would serve the recovery-instant batch on the stale
-                    // degraded path.
-                    self.backends[replica].set_status(node, status);
+                    // DetectRecovery event (same timestamp, later seq in
+                    // oracle mode), which first clears the degraded mode —
+                    // dispatching here would serve the recovery-instant
+                    // batch on the stale degraded path.
+                    self.backends[replica].set_condition(node, condition);
                 }
-                EventKind::Detection { replica, node, status } => {
-                    match status {
-                        NodeStatus::Down => {
-                            let report = self.failovers[replica].on_failure(self.est, node)?;
-                            let downtime = self
-                                .cfg
-                                .decision_ms_override
-                                .unwrap_or_else(|| report.downtime_ms());
-                            self.windows.push(FailoverWindow {
-                                replica,
-                                start_ms: t,
-                                end_ms: t + downtime,
-                                technique: report.decision.chosen,
-                            });
-                        }
-                        NodeStatus::Up => self.failovers[replica].on_recovery(node),
-                    }
+                EventKind::DetectFailover { replica, node, false_positive } => {
+                    let report = self.failovers[replica].on_failure(self.est, node)?;
+                    let downtime = self
+                        .cfg
+                        .decision_ms_override
+                        .unwrap_or_else(|| report.downtime_ms());
+                    self.windows.push(FailoverWindow {
+                        replica,
+                        node,
+                        start_ms: t,
+                        end_ms: t + downtime,
+                        technique: report.decision.chosen,
+                        false_positive,
+                    });
+                    self.try_dispatch(replica, t)?;
+                }
+                EventKind::DetectRecovery { replica, node } => {
+                    self.failovers[replica].on_recovery(node);
                     self.try_dispatch(replica, t)?;
                 }
                 EventKind::BatcherTimeout { replica } => {
@@ -700,42 +768,45 @@ impl<B: StageBackend> Engine<'_, B> {
 mod tests {
     use super::*;
     use crate::config::Objectives;
-    use crate::coordinator::scheduler::CandidateMetrics;
+    use crate::coordinator::estimator::StaticMetrics;
     use crate::workload::{generate, Arrival};
-
-    struct StubMetrics;
-
-    impl MetricsSource for StubMetrics {
-        fn candidate_metrics(&self, failed: usize) -> Result<Vec<CandidateMetrics>> {
-            Ok(vec![
-                CandidateMetrics {
-                    technique: Technique::Repartition,
-                    accuracy: 90.0,
-                    latency_ms: 30.0,
-                    downtime_ms: 4.0,
-                },
-                CandidateMetrics {
-                    technique: Technique::SkipConnection(failed),
-                    accuracy: 85.0,
-                    latency_ms: 25.0,
-                    downtime_ms: 3.0,
-                },
-            ])
-        }
-
-        fn reinstate_ms(&self) -> f64 {
-            1.0
-        }
-    }
 
     fn cfg(depth: usize, route: RoutePolicy) -> EngineConfig {
         EngineConfig {
             batcher: BatcherConfig::new(vec![1], 2.0, 1),
-            detector: Detector::default(),
+            health: HealthMode::Oracle(Detector::default()),
             deadline_ms: None,
             pipeline_depth: depth,
             route,
             decision_ms_override: Some(1.5),
+        }
+    }
+
+    /// Monitored health over a deterministic channel (no jitter/loss).
+    fn monitored(depth: usize, health: HealthConfig) -> EngineConfig {
+        EngineConfig {
+            batcher: BatcherConfig::new(vec![1], 2.0, 1),
+            health: HealthMode::Monitored(health),
+            deadline_ms: None,
+            pipeline_depth: depth,
+            route: RoutePolicy::RoundRobin,
+            decision_ms_override: Some(1.5),
+        }
+    }
+
+    fn clean_channel(detector: crate::health::DetectorKind, quarantine_ms: f64) -> HealthConfig {
+        HealthConfig {
+            heartbeat: crate::health::HeartbeatConfig {
+                interval_ms: 10.0,
+                jitter_ms: 0.0,
+                loss_prob: 0.0,
+                blackout: None,
+            },
+            detector,
+            failover_slowdown: 3.0,
+            quarantine_ms,
+            slowdown_window: 8,
+            seed: 7,
         }
     }
 
@@ -756,7 +827,7 @@ mod tests {
         let plans = vec![FailurePlan::crash(2, 20.0), FailurePlan::crash(3, 30.0)];
         serve(
             &mut backends,
-            &StubMetrics,
+            &StaticMetrics,
             &mut failovers,
             &cfg(2, RoutePolicy::RoundRobin),
             &reqs,
@@ -808,7 +879,7 @@ mod tests {
         let reqs = generate(50, Arrival::Uniform { gap_ms: 1.0 }, 8, 11);
         serve(
             &mut backends,
-            &StubMetrics,
+            &StaticMetrics,
             &mut failovers,
             &cfg(depth, RoutePolicy::RoundRobin),
             &reqs,
@@ -854,7 +925,7 @@ mod tests {
             let reqs = generate(60, Arrival::Uniform { gap_ms: 1.0 }, 8, 3);
             serve(
                 &mut backends,
-                &StubMetrics,
+                &StaticMetrics,
                 &mut failovers,
                 &cfg(1, RoutePolicy::JoinShortestQueue),
                 &reqs,
@@ -883,7 +954,7 @@ mod tests {
         let reqs = generate(30, Arrival::Uniform { gap_ms: 1.0 }, 8, 5);
         let report = serve(
             &mut backends,
-            &StubMetrics,
+            &StaticMetrics,
             &mut failovers,
             &EngineConfig {
                 deadline_ms: Some(40.0),
@@ -912,7 +983,7 @@ mod tests {
         let reqs = generate(20, Arrival::Uniform { gap_ms: 2.0 }, 8, 9);
         let report = serve(
             &mut backends,
-            &StubMetrics,
+            &StaticMetrics,
             &mut failovers,
             &cfg(3, RoutePolicy::RoundRobin),
             &reqs,
@@ -931,5 +1002,178 @@ mod tests {
                 .all(|c| c.technique == Some(tech)),
             "degraded completions carry the chosen technique"
         );
+    }
+
+    // --- monitored-health scenarios (all deterministic: clean channel) ---
+
+    use crate::health::DetectorKind;
+
+    /// 12 requests every 40 ms on an idle pipeline: dispatch happens at
+    /// arrival, so each completion's serving mode cleanly reflects the
+    /// controller state at its arrival time.
+    fn sparse_requests() -> Vec<Request> {
+        generate(12, Arrival::Uniform { gap_ms: 40.0 }, 8, 21)
+    }
+
+    #[test]
+    fn false_positive_failover_rolls_back() {
+        // A monitoring-path blackout over [100, 160): the nodes keep
+        // serving, but their heartbeats stop arriving — the detector
+        // fails over healthy nodes (false positives) and the quarantine
+        // gate rolls the path back once beats resume.
+        let mut health = clean_channel(DetectorKind::FixedTimeout { timeout_ms: 25.0 }, 40.0);
+        health.heartbeat.blackout = Some((100.0, 160.0));
+        let mut backends = vec![SyntheticBackend::uniform(2, 5.0, 1.0)];
+        let mut failovers = vec![Failover::new(Objectives::default())];
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &monitored(1, health),
+            &sparse_requests(),
+            &pool(),
+            &[], // no ground-truth failures at all
+        )
+        .unwrap();
+
+        // Both (healthy!) nodes got failed over at the 120 ms check.
+        assert_eq!(report.failovers.len(), 2, "{:?}", report.failovers);
+        assert_eq!(report.false_failovers(), 2);
+        for w in &report.failovers {
+            assert!(w.false_positive);
+            assert!((w.start_ms - 120.0).abs() < 1e-9);
+        }
+        // Nothing was actually broken, so nothing is lost...
+        assert_eq!(report.completed.len(), 12, "dropped={}", report.dropped.len());
+        assert!(report.dropped.is_empty());
+        for c in &report.completed {
+            let arrival = 40.0 * (c.id + 1) as f64;
+            // ...but traffic during the episode pays the degraded path,
+            if (130.0..190.0).contains(&arrival) {
+                assert!(c.technique.is_some(), "req {} must serve degraded", c.id);
+            }
+            // and the rollback (recovery at 200 ms) restores the full
+            // pipeline.
+            if arrival >= 240.0 {
+                assert!(c.technique.is_none(), "req {} must be healthy again", c.id);
+            }
+        }
+        assert!(
+            report.completed.iter().any(|c| c.technique.is_some()),
+            "the false positive must actually degrade some traffic"
+        );
+    }
+
+    #[test]
+    fn degraded_node_slows_stage_in_place_below_threshold() {
+        // Node 2 runs 2x slower over [100, 400) — beats stretch to 20 ms
+        // (under the 35 ms timeout) and the estimated slowdown stays
+        // below the 3x failover threshold: no failover, just a slower
+        // stage.
+        let health = clean_channel(DetectorKind::FixedTimeout { timeout_ms: 35.0 }, 50.0);
+        let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+        let mut failovers = vec![Failover::new(Objectives::default())];
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &monitored(1, health),
+            &sparse_requests(),
+            &pool(),
+            &[FailurePlan::degraded(2, 100.0, 2.0, 300.0)],
+        )
+        .unwrap();
+
+        assert!(report.failovers.is_empty(), "{:?}", report.failovers);
+        assert_eq!(report.completed.len(), 12);
+        for c in &report.completed {
+            let arrival = 40.0 * (c.id + 1) as f64;
+            assert!(c.technique.is_none(), "never failed over");
+            // Healthy path: 4x5 compute + 3x1 hops = 23 ms; with node 2
+            // at 2x: 28 ms.
+            if (110.0..360.0).contains(&arrival) {
+                assert!(c.latency_ms > 26.0, "req {} slowed in place: {}", c.id, c.latency_ms);
+            } else if !(100.0..420.0).contains(&arrival) {
+                assert!(c.latency_ms < 25.0, "req {} full speed: {}", c.id, c.latency_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn flapping_node_quarantined_until_stable() {
+        // Node 3 flaps: down 50-90, up 90-190, down 190-230, up after.
+        // One failover at the 70 ms check; the mid-quarantine second
+        // outage resets the stability clock silently; reintegration only
+        // at 390 ms (beats resume at 240 + 150 ms quarantine).
+        let health = clean_channel(DetectorKind::FixedTimeout { timeout_ms: 25.0 }, 150.0);
+        let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+        let mut failovers = vec![Failover::new(Objectives::default())];
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &monitored(2, health),
+            &sparse_requests(),
+            &pool(),
+            &[FailurePlan::intermittent(3, 50.0, 40.0, 100.0, 2)],
+        )
+        .unwrap();
+
+        assert_eq!(report.failovers.len(), 1, "flaps must not re-fail-over");
+        let w = &report.failovers[0];
+        assert!(!w.false_positive);
+        assert!((w.start_ms - 70.0).abs() < 1e-9);
+        assert_eq!(report.completed.len(), 12, "dropped={}", report.dropped.len());
+        for c in &report.completed {
+            let arrival = 40.0 * (c.id + 1) as f64;
+            // The node is up over 90-190, but quarantine keeps the path
+            // off it the whole time.
+            if (100.0..360.0).contains(&arrival) {
+                assert!(
+                    c.technique.is_some(),
+                    "req {} (t={arrival}) must stay on the degraded path through quarantine",
+                    c.id
+                );
+            }
+            if arrival >= 400.0 {
+                assert!(c.technique.is_none(), "req {} healthy after reintegration", c.id);
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_channel_runs_are_reproducible() {
+        let phi = DetectorKind::PhiAccrual {
+            threshold: 5.0,
+            window: 32,
+            min_std_ms: 0.5,
+        };
+        let mut health = clean_channel(phi, 60.0);
+        health.heartbeat.jitter_ms = 2.0;
+        health.heartbeat.loss_prob = 0.2;
+        let run = || {
+            let mut backends = vec![
+                SyntheticBackend::uniform(4, 5.0, 1.0),
+                SyntheticBackend::uniform(4, 5.0, 1.0),
+            ];
+            let mut failovers = vec![
+                Failover::new(Objectives::default()),
+                Failover::new(Objectives::default()),
+            ];
+            let reqs = generate(30, Arrival::Poisson { rate_rps: 100.0 }, 8, 5);
+            serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &monitored(2, health.clone()),
+                &reqs,
+                &pool(),
+                &[FailurePlan::crash_recover(2, 80.0, 120.0)],
+            )
+            .unwrap()
+        };
+        let a = format!("{:?}", run());
+        let b = format!("{:?}", run());
+        assert_eq!(a, b, "same-seed monitored runs must be byte-identical");
     }
 }

@@ -39,6 +39,35 @@ impl MetricsSource for Estimator<'_> {
     }
 }
 
+/// Fixed two-candidate metrics (repartition vs skip the failed node) for
+/// tests, benches and synthetic experiment drivers that run the serving
+/// engine without fitted predictors or artifacts.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticMetrics;
+
+impl MetricsSource for StaticMetrics {
+    fn candidate_metrics(&self, failed: usize) -> Result<Vec<CandidateMetrics>> {
+        Ok(vec![
+            CandidateMetrics {
+                technique: Technique::Repartition,
+                accuracy: 90.0,
+                latency_ms: 30.0,
+                downtime_ms: 4.0,
+            },
+            CandidateMetrics {
+                technique: Technique::SkipConnection(failed),
+                accuracy: 85.0,
+                latency_ms: 25.0,
+                downtime_ms: 3.0,
+            },
+        ])
+    }
+
+    fn reinstate_ms(&self) -> f64 {
+        1.0
+    }
+}
+
 /// Bundles the two prediction models + the link/downtime constants for one
 /// deployed model on one platform.
 pub struct Estimator<'a> {

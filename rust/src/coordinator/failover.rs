@@ -53,6 +53,9 @@ pub struct Failover {
     pub policy: Box<dyn RecoveryPolicy>,
     pub mode: Mode,
     pub history: Vec<FailoverReport>,
+    /// How many times the path was repartitioned back onto a cleared
+    /// node (rollbacks of false positives included).
+    pub reintegrations: usize,
 }
 
 impl Failover {
@@ -67,6 +70,7 @@ impl Failover {
             policy,
             mode: Mode::Healthy,
             history: Vec::new(),
+            reintegrations: 0,
         }
     }
 
@@ -101,13 +105,20 @@ impl Failover {
         Ok(report)
     }
 
-    /// Node recovered: back to the healthy pipeline.
-    pub fn on_recovery(&mut self, node: usize) {
+    /// The node was cleared for reintegration (by the oracle instantly,
+    /// or by the health monitor only after its quarantine window — so a
+    /// flapping node never bounces the mode here). For a false-positive
+    /// failover this is the rollback. Returns whether the mode actually
+    /// switched back to healthy.
+    pub fn on_recovery(&mut self, node: usize) -> bool {
         if let Mode::Degraded { failed, .. } = self.mode {
             if failed == node {
                 self.mode = Mode::Healthy;
+                self.reintegrations += 1;
+                return true;
             }
         }
+        false
     }
 
     pub fn technique(&self) -> Option<Technique> {
@@ -137,13 +148,15 @@ mod tests {
             failed: 3,
             technique: Technique::Repartition,
         };
-        f.on_recovery(5);
+        assert!(!f.on_recovery(5), "non-matching node must not clear");
         assert!(matches!(f.mode, Mode::Degraded { failed: 3, .. }));
         assert_eq!(f.failed_node(), Some(3));
-        f.on_recovery(3);
+        assert_eq!(f.reintegrations, 0);
+        assert!(f.on_recovery(3));
         assert_eq!(f.mode, Mode::Healthy);
         assert_eq!(f.technique(), None);
         assert_eq!(f.failed_node(), None);
+        assert_eq!(f.reintegrations, 1);
     }
 
     #[test]

@@ -12,6 +12,9 @@
 //!   [`crate::baselines`] — all policies run inside the identical engine.
 //! - [`failover`] is the per-replica state machine that reacts to a
 //!   detected failure by consulting its policy and switching the path.
+//!   Detections come from [`crate::health`] in monitored runs, so they
+//!   can be false positives the controller later rolls back when the
+//!   quarantine gate clears the node.
 //! - [`batcher`] picks compiled batch sizes under queue pressure.
 //! - [`router`] spreads arrivals over pipeline replicas (round-robin or
 //!   join-shortest-queue).
@@ -33,8 +36,8 @@ pub mod router;
 pub mod scheduler;
 pub mod service;
 
-pub use engine::{serve, EngineConfig, StageBackend, SyntheticBackend};
-pub use estimator::{Estimator, MetricsSource};
+pub use engine::{serve, EngineConfig, HealthMode, StageBackend, SyntheticBackend};
+pub use estimator::{Estimator, MetricsSource, StaticMetrics};
 pub use failover::{Failover, FailoverReport, Mode};
 pub use policy::{Continuer, RecoveryPolicy};
 pub use profiler::{fit_platform, platform_transform, DowntimeTable, LayerProfiler, PlatformLatencyModel};

@@ -59,9 +59,15 @@ pub struct DroppedRequest {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FailoverWindow {
     pub replica: usize,
+    /// The node the controller failed over away from.
+    pub node: usize,
     pub start_ms: f64,
     pub end_ms: f64,
     pub technique: Technique,
+    /// Ground truth at detection time: true when the suspected node was
+    /// in fact healthy (an unnecessary failover the monitor later rolls
+    /// back). Always false under oracle detection.
+    pub false_positive: bool,
 }
 
 impl FailoverWindow {
@@ -94,6 +100,17 @@ impl ServiceReport {
     /// Drops that happened while the owning replica served degraded.
     pub fn degraded_drops(&self) -> usize {
         self.dropped.iter().filter(|d| d.degraded).count()
+    }
+
+    /// Failovers triggered on nodes that were in fact healthy (the
+    /// monitor's false positives; always 0 under oracle detection).
+    pub fn false_failovers(&self) -> usize {
+        self.failovers.iter().filter(|w| w.false_positive).count()
+    }
+
+    /// Total decision downtime across all failover windows, ms.
+    pub fn total_downtime_ms(&self) -> f64 {
+        self.failovers.iter().map(|w| w.downtime_ms()).sum()
     }
 }
 

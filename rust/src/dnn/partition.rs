@@ -96,7 +96,7 @@ pub fn plan(
     // Prefer using all k nodes only if it helps; any j <= k is allowed.
     let (best_j, best) = (1..=k)
         .map(|j| (j, dp[j][n_blocks]))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
         .unwrap();
     if best == INF {
         bail!("plan: infeasible under capacity constraint");

@@ -1,0 +1,265 @@
+//! Detection-aggressiveness sweep: the downtime-vs-false-failover
+//! frontier.
+//!
+//! A detector threshold buys exactly one thing with exactly one
+//! currency: react to real crashes sooner (shorter detection latency,
+//! fewer stranded requests) at the price of failing over healthy nodes
+//! on heartbeat noise (false positives, each a pointless downtime window
+//! plus a rollback). This driver sweeps both detector families over the
+//! same noisy channel and workload — a mid-run crash with recovery plus
+//! a heavy gray-failure window — and reports, per configuration, the
+//! true-crash detection latency, the number of false failovers, the
+//! total decision downtime and the drop count. Fully synthetic (no
+//! artifacts needed) and deterministic for a given seed.
+
+use anyhow::Result;
+
+use crate::cluster::failure::FailurePlan;
+use crate::config::Objectives;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use crate::coordinator::estimator::StaticMetrics;
+use crate::coordinator::failover::Failover;
+use crate::coordinator::router::RoutePolicy;
+use crate::coordinator::service::ServiceReport;
+use crate::health::{DetectorKind, HealthConfig, HeartbeatConfig};
+use crate::runtime::HostTensor;
+use crate::util::bench::{f, Table};
+use crate::util::json::{obj, Json};
+use crate::workload::{generate, Arrival};
+
+use super::ExpContext;
+
+/// Ground truth every swept configuration faces: a real crash with
+/// recovery and a heavy gray-failure window, on a 4-stage pipeline.
+const CRASH_NODE: usize = 3;
+const CRASH_AT_MS: f64 = 400.0;
+const CRASH_DOWN_MS: f64 = 300.0;
+
+fn scenario_plan() -> FailurePlan {
+    FailurePlan::merge([
+        FailurePlan::crash_recover(CRASH_NODE, CRASH_AT_MS, CRASH_DOWN_MS),
+        FailurePlan::degraded(2, 1200.0, 4.0, 400.0),
+    ])
+}
+
+/// One swept configuration's outcome.
+pub struct SweepPoint {
+    pub label: String,
+    pub detection_ms: Option<f64>,
+    pub false_failovers: usize,
+    pub failovers: usize,
+    pub downtime_ms: f64,
+    pub dropped: usize,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+}
+
+fn run_point(label: &str, detector: DetectorKind, seed: u64) -> Result<SweepPoint> {
+    run_point_with(label, detector, seed, 1.0, 0.05)
+}
+
+fn run_point_with(
+    label: &str,
+    detector: DetectorKind,
+    seed: u64,
+    jitter_ms: f64,
+    loss_prob: f64,
+) -> Result<SweepPoint> {
+    let health = HealthConfig {
+        heartbeat: HeartbeatConfig {
+            interval_ms: 10.0,
+            jitter_ms,
+            loss_prob,
+            blackout: None,
+        },
+        detector,
+        failover_slowdown: 3.0,
+        quarantine_ms: 100.0,
+        slowdown_window: 8,
+        seed,
+    };
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1], 2.0, 1),
+        health: HealthMode::Monitored(health),
+        deadline_ms: Some(250.0),
+        pipeline_depth: 2,
+        route: RoutePolicy::RoundRobin,
+        decision_ms_override: Some(2.0),
+    };
+    let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+    let mut failovers = vec![Failover::new(Objectives::default())];
+    let requests = generate(600, Arrival::Poisson { rate_rps: 150.0 }, 16, seed);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let report = serve(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        &cfg,
+        &requests,
+        &inputs,
+        &[scenario_plan()],
+    )?;
+    Ok(SweepPoint {
+        label: label.to_string(),
+        detection_ms: true_detection_latency(&report),
+        false_failovers: report.false_failovers(),
+        failovers: report.failovers.len(),
+        downtime_ms: report.total_downtime_ms(),
+        dropped: report.dropped.len(),
+        p99_ms: report.latency.p99,
+        throughput_rps: report.throughput_rps,
+    })
+}
+
+/// Latency from the scenario's real crash to its first honest detection
+/// of the crashed node (None when the detector never attributed a
+/// failover to it — e.g. a false positive left the node suspected when
+/// the real crash silenced it).
+fn true_detection_latency(report: &ServiceReport) -> Option<f64> {
+    report
+        .failovers
+        .iter()
+        .filter(|w| w.node == CRASH_NODE && !w.false_positive && w.start_ms >= CRASH_AT_MS)
+        .map(|w| w.start_ms - CRASH_AT_MS)
+        .min_by(|a, b| a.total_cmp(b))
+}
+
+/// Run the sweep; prints the frontier table and returns the JSON record.
+pub fn sweep(seed: u64) -> Result<Json> {
+    let mut cases: Vec<(String, DetectorKind)> = Vec::new();
+    for timeout_ms in [15.0, 25.0, 50.0, 100.0] {
+        cases.push((
+            format!("fixed/{timeout_ms}ms"),
+            DetectorKind::FixedTimeout { timeout_ms },
+        ));
+    }
+    for threshold in [1.0, 3.0, 5.0, 8.0, 12.0] {
+        cases.push((
+            format!("phi/{threshold}"),
+            DetectorKind::PhiAccrual {
+                threshold,
+                window: 48,
+                min_std_ms: 0.5,
+            },
+        ));
+    }
+
+    let mut t = Table::new(
+        "detection sweep — downtime vs false failovers (crash @400ms + 4x gray @1200ms, 5% loss)",
+        &[
+            "detector",
+            "detect ms",
+            "false fo",
+            "failovers",
+            "downtime ms",
+            "dropped",
+            "p99 ms",
+            "rps",
+        ],
+    );
+    let mut rows = Vec::new();
+    for (label, kind) in &cases {
+        let p = run_point(label, *kind, seed)?;
+        t.row(&[
+            p.label.clone(),
+            p.detection_ms.map(|d| f(d, 1)).unwrap_or_else(|| "-".into()),
+            p.false_failovers.to_string(),
+            p.failovers.to_string(),
+            f(p.downtime_ms, 2),
+            p.dropped.to_string(),
+            f(p.p99_ms, 1),
+            f(p.throughput_rps, 1),
+        ]);
+        rows.push(obj(&[
+            ("detector", p.label.clone().into()),
+            (
+                "detection_ms",
+                p.detection_ms.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("false_failovers", p.false_failovers.into()),
+            ("failovers", p.failovers.into()),
+            ("downtime_ms", p.downtime_ms.into()),
+            ("dropped", p.dropped.into()),
+            ("p99_ms", p.p99_ms.into()),
+            ("throughput_rps", p.throughput_rps.into()),
+        ]));
+    }
+    t.print();
+    println!(
+        "frontier reading: aggressive detectors (low timeout / phi threshold) cut detection \
+         latency but pay in false failovers; conservative ones strand traffic longer.\n"
+    );
+    Ok(obj(&[
+        ("experiment", "detection_eval".into()),
+        ("seed", (seed as usize).into()),
+        ("crash_at_ms", CRASH_AT_MS.into()),
+        ("crash_down_ms", CRASH_DOWN_MS.into()),
+        ("requests", 600usize.into()),
+        ("arrival", "poisson 150 rps".into()),
+        ("deadline_ms", 250.0.into()),
+        ("loss_prob", 0.05.into()),
+        ("points", Json::Arr(rows)),
+    ]))
+}
+
+/// Registry entry point: run and persist under the artifacts results dir.
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let out = sweep(ctx.config.seed)?;
+    let path = ctx.save_result("detection_eval", &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Artifact-free entry point (`continuer detection-eval`): write the
+/// JSON next to the working directory.
+pub fn run_standalone(seed: u64) -> Result<()> {
+    let out = sweep(seed)?;
+    let path = "detection_eval.json";
+    std::fs::write(path, out.to_string())?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_point_detects_the_real_crash() {
+        // Clean channel: detection timing is analytic (last beat at 390,
+        // checks every 10 ms, timeout 25 → failover at 420).
+        let p = run_point_with(
+            "fixed/25ms",
+            DetectorKind::FixedTimeout { timeout_ms: 25.0 },
+            3,
+            0.0,
+            0.0,
+        )
+        .unwrap();
+        let d = p.detection_ms.expect("the real crash must be detected");
+        assert!(d > 0.0 && d < 200.0, "detection latency {d}");
+        assert_eq!(p.false_failovers, 0, "clean channel cannot false-positive");
+        assert!(p.failovers >= 2, "crash + gray failure both fail over");
+        assert!(p.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn conservative_fixed_timeout_detects_later() {
+        let fixed = |ms| DetectorKind::FixedTimeout { timeout_ms: ms };
+        let fast = run_point_with("fixed/15ms", fixed(15.0), 3, 0.0, 0.0).unwrap();
+        let slow = run_point_with("fixed/100ms", fixed(100.0), 3, 0.0, 0.0).unwrap();
+        let df = fast.detection_ms.unwrap();
+        let ds = slow.detection_ms.unwrap();
+        assert!(df < ds, "aggressive timeout must detect sooner: {df} vs {ds}");
+    }
+
+    #[test]
+    fn sweep_emits_every_point() {
+        let out = sweep(3).unwrap();
+        match out.get("points") {
+            Some(Json::Arr(points)) => assert_eq!(points.len(), 9),
+            other => panic!("points array missing: {other:?}"),
+        }
+    }
+}

@@ -11,12 +11,13 @@ use anyhow::Result;
 use crate::cluster::failure::{Detector, FailurePlan};
 use crate::cluster::sim::EdgeCluster;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::engine::{serve, EngineConfig};
+use crate::coordinator::engine::{serve, EngineConfig, HealthMode};
 use crate::coordinator::estimator::Estimator;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::profiler::DowntimeTable;
 use crate::coordinator::router::RoutePolicy;
 use crate::coordinator::service::{ServiceConfig, ServiceReport};
+use crate::health::HealthConfig;
 use crate::predict::{AccuracyModel, GbdtParams};
 use crate::util::bench::{f, Table};
 use crate::util::stats::Summary;
@@ -36,6 +37,9 @@ pub struct E2eParams {
     pub replicas: usize,
     /// Max batches in flight per replica (1 = no pipelining).
     pub pipeline_depth: usize,
+    /// Detect through the simulated heartbeat monitor (phi-accrual,
+    /// false positives, quarantine) instead of the oracle detector.
+    pub monitored: bool,
 }
 
 impl E2eParams {
@@ -49,6 +53,7 @@ impl E2eParams {
             fail_at_ms,
             replicas: 1,
             pipeline_depth: 1,
+            monitored: false,
         }
     }
 }
@@ -103,7 +108,7 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
     );
     // The failure hits replica 0; the remaining replicas stay healthy.
     let mut plans = vec![FailurePlan::crash(p.fail_node, p.fail_at_ms)];
-    plans.extend((1..p.replicas).map(|_| FailurePlan { events: Vec::new() }));
+    plans.extend((1..p.replicas).map(|_| FailurePlan::none()));
     let batcher = BatcherConfig::new(
         ctx.store.batch_sizes.clone(),
         ctx.config.batch_timeout_ms,
@@ -113,7 +118,7 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         "[e2e] serving {} requests at {} rps over {} replica(s) (depth {}); node {} fails at t={} ms",
         p.n_requests, p.rate_rps, p.replicas, p.pipeline_depth, p.fail_node, p.fail_at_ms
     );
-    if p.replicas == 1 && p.pipeline_depth == 1 {
+    if p.replicas == 1 && p.pipeline_depth == 1 && !p.monitored {
         // The paper's deployment goes through the seed-compatible
         // single-pipeline entry point (same engine underneath).
         let scfg = ServiceConfig {
@@ -131,9 +136,17 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
             &plans[0],
         );
     }
+    let health = if p.monitored {
+        HealthMode::Monitored(HealthConfig {
+            seed: ctx.config.seed,
+            ..HealthConfig::default()
+        })
+    } else {
+        HealthMode::Oracle(Detector::default())
+    };
     let cfg = EngineConfig {
         batcher,
-        detector: Detector::default(),
+        health,
         deadline_ms: None,
         pipeline_depth: p.pipeline_depth,
         route: RoutePolicy::JoinShortestQueue,
@@ -176,12 +189,20 @@ pub fn print_report(p: &E2eParams, report: &ServiceReport) {
         t.row(&[
             "failover".into(),
             format!(
-                "replica {} t={:.1}ms downtime={:.2}ms -> {}",
+                "replica {} node {} t={:.1}ms downtime={:.2}ms -> {}{}",
                 w.replica,
+                w.node,
                 w.start_ms,
                 w.downtime_ms(),
-                w.technique.label()
+                w.technique.label(),
+                if w.false_positive { " (false positive)" } else { "" }
             ),
+        ]);
+    }
+    if report.false_failovers() > 0 {
+        t.row(&[
+            "false failovers".into(),
+            report.false_failovers().to_string(),
         ]);
     }
     for d in report.dropped.iter().take(5) {

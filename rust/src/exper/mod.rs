@@ -5,6 +5,8 @@
 //! reuse measured data instead of re-measuring.
 
 pub mod accuracy_eval;
+pub mod detection_eval;
+pub mod drop_attribution;
 pub mod e2e;
 pub mod figures;
 pub mod latency_eval;
@@ -78,6 +80,10 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
         "table7" => table7::run(ctx),
         "table8" => table8::run(ctx),
         "e2e" => e2e::run_default(ctx),
+        // Synthetic (artifact-free) drivers; also runnable without any
+        // artifacts via `continuer detection-eval` / `drop-attribution`.
+        "detection" => detection_eval::run(ctx),
+        "drops" => drop_attribution::run(ctx),
         "all" => {
             for id in [
                 "fig2", "fig3", "fig4", "fig6", "table2", "table5", "fig7", "table6", "fig8",
@@ -89,7 +95,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
             Ok(())
         }
         other => Err(anyhow!(
-            "unknown experiment '{other}' (try fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8 table7 table8 e2e all)"
+            "unknown experiment '{other}' (try fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8 table7 table8 e2e detection drops all)"
         )),
     }
 }

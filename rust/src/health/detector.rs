@@ -1,0 +1,296 @@
+//! Failure detectors over a heartbeat arrival stream.
+//!
+//! A [`HealthDetector`] turns "when did I last hear from this node" into
+//! a scalar *suspicion level*; the node is suspected once the level
+//! crosses the detector's threshold. Two implementations:
+//!
+//! - [`FixedTimeoutDetector`] — the classic model the seed shipped:
+//!   suspicion is elapsed-since-last-beat over a fixed timeout. Cheap and
+//!   predictable, but one timeout must fit both a jittery WAN link and a
+//!   quiet LAN.
+//! - [`PhiAccrualDetector`] — the phi-accrual detector (Hayashibara et
+//!   al.): suspicion is `phi = -log10(P(a beat would arrive this late))`
+//!   under a normal model fitted to the recent inter-arrival history, so
+//!   the threshold adapts to the observed channel. Implemented with the
+//!   standard logistic approximation of the normal tail, no `erf` needed.
+//!
+//! Detectors are *per node* and fed by the monitor; they never see ground
+//! truth, which is precisely why they can be late or flat-out wrong
+//! (false positives under loss/jitter bursts).
+
+use std::collections::VecDeque;
+
+/// Suspicion source for one monitored node.
+pub trait HealthDetector {
+    /// A heartbeat from the node arrived at `at_ms` (monotone times).
+    fn observe(&mut self, at_ms: f64);
+    /// Suspicion level at `now_ms` (unitless; compare to `threshold`).
+    fn suspicion(&self, now_ms: f64) -> f64;
+    /// Level at or above which the node is suspected failed.
+    fn threshold(&self) -> f64;
+    /// Whether the node is suspected at `now_ms`.
+    fn is_suspect(&self, now_ms: f64) -> bool {
+        self.suspicion(now_ms) >= self.threshold()
+    }
+}
+
+/// Detector choice + parameters (config-level, buildable per node).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DetectorKind {
+    /// Suspect after `timeout_ms` of silence.
+    FixedTimeout { timeout_ms: f64 },
+    /// Suspect once phi (see [`PhiAccrualDetector`]) reaches `threshold`,
+    /// estimated over a sliding `window` of inter-arrival samples with a
+    /// `min_std_ms` floor on the fitted deviation.
+    PhiAccrual {
+        threshold: f64,
+        window: usize,
+        min_std_ms: f64,
+    },
+}
+
+impl DetectorKind {
+    /// Instantiate one detector for a node; `nominal_interval_ms` seeds
+    /// the phi detector's bootstrap estimate before history accumulates.
+    pub fn build(&self, nominal_interval_ms: f64) -> Box<dyn HealthDetector> {
+        match *self {
+            DetectorKind::FixedTimeout { timeout_ms } => {
+                Box::new(FixedTimeoutDetector::new(timeout_ms))
+            }
+            DetectorKind::PhiAccrual {
+                threshold,
+                window,
+                min_std_ms,
+            } => Box::new(PhiAccrualDetector::new(
+                threshold,
+                window,
+                min_std_ms,
+                nominal_interval_ms,
+            )),
+        }
+    }
+}
+
+/// Suspicion = elapsed / timeout; threshold 1.
+#[derive(Debug, Clone)]
+pub struct FixedTimeoutDetector {
+    timeout_ms: f64,
+    last_ms: f64,
+}
+
+impl FixedTimeoutDetector {
+    /// The node is assumed to have announced itself at t = 0.
+    pub fn new(timeout_ms: f64) -> FixedTimeoutDetector {
+        assert!(timeout_ms > 0.0, "timeout must be positive");
+        FixedTimeoutDetector {
+            timeout_ms,
+            last_ms: 0.0,
+        }
+    }
+}
+
+impl HealthDetector for FixedTimeoutDetector {
+    fn observe(&mut self, at_ms: f64) {
+        self.last_ms = self.last_ms.max(at_ms);
+    }
+
+    fn suspicion(&self, now_ms: f64) -> f64 {
+        (now_ms - self.last_ms).max(0.0) / self.timeout_ms
+    }
+
+    fn threshold(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Phi-accrual detector over a sliding inter-arrival window.
+#[derive(Debug, Clone)]
+pub struct PhiAccrualDetector {
+    threshold: f64,
+    window: usize,
+    min_std_ms: f64,
+    /// Prior mean used until two real samples exist.
+    bootstrap_ms: f64,
+    intervals: VecDeque<f64>,
+    last_ms: f64,
+}
+
+impl PhiAccrualDetector {
+    pub fn new(
+        threshold: f64,
+        window: usize,
+        min_std_ms: f64,
+        bootstrap_ms: f64,
+    ) -> PhiAccrualDetector {
+        assert!(window >= 2, "phi window must hold >= 2 samples");
+        PhiAccrualDetector {
+            threshold,
+            window,
+            min_std_ms: min_std_ms.max(1e-6),
+            bootstrap_ms,
+            intervals: VecDeque::with_capacity(window),
+            last_ms: 0.0,
+        }
+    }
+
+    /// Fitted (mean, std) of the inter-arrival distribution.
+    fn fit(&self) -> (f64, f64) {
+        if self.intervals.len() < 2 {
+            return (self.bootstrap_ms, (self.bootstrap_ms / 4.0).max(self.min_std_ms));
+        }
+        let n = self.intervals.len() as f64;
+        let mean = self.intervals.iter().sum::<f64>() / n;
+        let var = self
+            .intervals
+            .iter()
+            .map(|x| (x - mean) * (x - mean))
+            .sum::<f64>()
+            / n;
+        (mean, var.sqrt().max(self.min_std_ms))
+    }
+}
+
+impl HealthDetector for PhiAccrualDetector {
+    fn observe(&mut self, at_ms: f64) {
+        let dt = at_ms - self.last_ms;
+        if dt > 0.0 {
+            self.intervals.push_back(dt);
+            while self.intervals.len() > self.window {
+                self.intervals.pop_front();
+            }
+            self.last_ms = at_ms;
+        }
+    }
+
+    fn suspicion(&self, now_ms: f64) -> f64 {
+        let elapsed = (now_ms - self.last_ms).max(0.0);
+        let (mean, std) = self.fit();
+        // P(beat arrives later than `elapsed`) under N(mean, std), via the
+        // logistic approximation of the normal tail (as in Akka's
+        // PhiAccrualFailureDetector); phi = -log10 of that.
+        let y = (elapsed - mean) / std;
+        let e = (-y * (1.5976 + 0.070566 * y * y)).exp();
+        let p_later = (e / (1.0 + e)).max(1e-300);
+        -p_later.log10()
+    }
+
+    fn threshold(&self) -> f64 {
+        self.threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(det: &mut dyn HealthDetector, interval: f64, n: usize) -> f64 {
+        let mut t = 0.0;
+        for _ in 0..n {
+            t += interval;
+            det.observe(t);
+        }
+        t
+    }
+
+    /// First suspicion time after silence begins at `from`, probing on a
+    /// fine grid (None if never within the probe horizon).
+    fn detection_time(det: &dyn HealthDetector, from: f64, horizon: f64) -> Option<f64> {
+        let mut t = from;
+        while t < from + horizon {
+            if det.is_suspect(t) {
+                return Some(t);
+            }
+            t += 0.5;
+        }
+        None
+    }
+
+    #[test]
+    fn fixed_timeout_trips_exactly() {
+        let mut d = FixedTimeoutDetector::new(25.0);
+        let last = feed(&mut d, 10.0, 5);
+        assert!(!d.is_suspect(last + 24.0));
+        assert!(d.is_suspect(last + 25.0));
+        assert!(d.suspicion(last + 50.0) > d.suspicion(last + 30.0), "monotone");
+    }
+
+    #[test]
+    fn fixed_timeout_recovers_on_beat() {
+        let mut d = FixedTimeoutDetector::new(20.0);
+        feed(&mut d, 10.0, 3);
+        assert!(d.is_suspect(70.0));
+        d.observe(71.0);
+        assert!(!d.is_suspect(72.0));
+    }
+
+    #[test]
+    fn phi_grows_with_silence() {
+        // A generous std floor keeps phi in a comparable range over the
+        // probed silences (a tiny floor saturates the tail to the same
+        // clamped value for every long elapsed time).
+        let mut d = PhiAccrualDetector::new(3.0, 32, 5.0, 10.0);
+        let last = feed(&mut d, 10.0, 20);
+        let p1 = d.suspicion(last + 10.0);
+        let p2 = d.suspicion(last + 20.0);
+        let p3 = d.suspicion(last + 35.0);
+        assert!(p1 < p2 && p2 < p3, "phi monotone in silence: {p1} {p2} {p3}");
+        assert!(d.is_suspect(last + 200.0), "long silence must cross any sane threshold");
+    }
+
+    #[test]
+    fn phi_on_time_beat_is_not_suspect() {
+        let mut d = PhiAccrualDetector::new(2.0, 32, 0.5, 10.0);
+        let last = feed(&mut d, 10.0, 20);
+        // Right around the expected next beat, phi ~ 0.3 (p ~ 0.5).
+        assert!(d.suspicion(last + 10.0) < 1.0);
+        assert!(!d.is_suspect(last + 10.0));
+    }
+
+    #[test]
+    fn lower_threshold_detects_no_later() {
+        let mut fast = PhiAccrualDetector::new(1.0, 32, 0.5, 10.0);
+        let mut slow = PhiAccrualDetector::new(8.0, 32, 0.5, 10.0);
+        let last_f = feed(&mut fast, 10.0, 20);
+        let last_s = feed(&mut slow, 10.0, 20);
+        let t_fast = detection_time(&fast, last_f, 10_000.0).unwrap();
+        let t_slow = detection_time(&slow, last_s, 10_000.0).unwrap();
+        assert!(
+            t_fast <= t_slow,
+            "aggressive threshold must not detect later ({t_fast} vs {t_slow})"
+        );
+    }
+
+    #[test]
+    fn phi_adapts_to_slow_channels() {
+        // Same silence, but one detector learned a 30 ms cadence: at
+        // t_last + 35 the 10 ms-cadence detector is far more suspicious.
+        let mut d10 = PhiAccrualDetector::new(3.0, 32, 0.5, 10.0);
+        let mut d30 = PhiAccrualDetector::new(3.0, 32, 0.5, 10.0);
+        let l10 = feed(&mut d10, 10.0, 20);
+        let l30 = feed(&mut d30, 30.0, 20);
+        assert!(d10.suspicion(l10 + 35.0) > d30.suspicion(l30 + 35.0));
+    }
+
+    #[test]
+    fn bootstrap_before_history() {
+        let d = PhiAccrualDetector::new(3.0, 32, 0.5, 10.0);
+        // No beats yet: near the nominal interval nothing is suspect.
+        assert!(!d.is_suspect(10.0));
+        // An hour of silence is, even with only the bootstrap estimate.
+        assert!(d.is_suspect(3_600_000.0));
+    }
+
+    #[test]
+    fn kind_builds_both() {
+        let f = DetectorKind::FixedTimeout { timeout_ms: 25.0 }.build(10.0);
+        assert!((f.threshold() - 1.0).abs() < 1e-12);
+        let p = DetectorKind::PhiAccrual {
+            threshold: 8.0,
+            window: 16,
+            min_std_ms: 0.5,
+        }
+        .build(10.0);
+        assert!((p.threshold() - 8.0).abs() < 1e-12);
+        assert!(!p.is_suspect(5.0));
+    }
+}

@@ -1,0 +1,237 @@
+//! Simulated heartbeat channel: when do a node's heartbeats *arrive* at
+//! the monitor, given the node's ground-truth condition timeline?
+//!
+//! The channel is imperfect on purpose — arrival jitter, independent
+//! per-beat loss, and an optional blackout window (a partition of the
+//! monitoring path while the node itself keeps serving) are exactly the
+//! mechanisms that make detectors fire false positives. A `Degraded`
+//! node emits beats stretched by its slowdown factor, which is how the
+//! monitor can *estimate* gray failures it cannot observe directly; a
+//! `Down` node is silent until it recovers. Everything is seeded via
+//! [`crate::util::rng::Rng`], so a (plan, config, seed) triple always
+//! produces the same arrival sequence.
+
+use crate::cluster::failure::{FailurePlan, NodeCondition};
+use crate::util::rng::Rng;
+
+/// Heartbeat channel parameters.
+#[derive(Debug, Clone)]
+pub struct HeartbeatConfig {
+    /// Nominal emission interval of a healthy node, ms.
+    pub interval_ms: f64,
+    /// Arrival jitter: each beat lands uniformly in `[0, jitter_ms)` late.
+    pub jitter_ms: f64,
+    /// Independent probability that a beat is lost in transit.
+    pub loss_prob: f64,
+    /// Optional monitoring-path blackout `[start_ms, end_ms)`: every beat
+    /// arriving inside it is dropped while the node keeps serving — the
+    /// canonical false-positive generator.
+    pub blackout: Option<(f64, f64)>,
+}
+
+impl Default for HeartbeatConfig {
+    fn default() -> Self {
+        HeartbeatConfig {
+            interval_ms: 10.0,
+            jitter_ms: 1.0,
+            loss_prob: 0.0,
+            blackout: None,
+        }
+    }
+}
+
+/// One node's ground-truth condition over time (starts `Up` at t = 0).
+#[derive(Debug, Clone)]
+pub struct ConditionTimeline {
+    /// Time-sorted condition changes.
+    changes: Vec<(f64, NodeCondition)>,
+}
+
+impl ConditionTimeline {
+    /// Extract `node`'s timeline from a failure plan.
+    pub fn from_plan(plan: &FailurePlan, node: usize) -> ConditionTimeline {
+        let mut changes: Vec<(f64, NodeCondition)> = plan
+            .events
+            .iter()
+            .filter(|e| e.node == node)
+            .map(|e| (e.at_ms, e.condition))
+            .collect();
+        changes.sort_by(|a, b| a.0.total_cmp(&b.0));
+        ConditionTimeline { changes }
+    }
+
+    /// Condition in effect at `t_ms`.
+    pub fn at(&self, t_ms: f64) -> NodeCondition {
+        let mut cond = NodeCondition::Up;
+        for (at, c) in &self.changes {
+            if *at <= t_ms {
+                cond = *c;
+            } else {
+                break;
+            }
+        }
+        cond
+    }
+
+    /// Earliest change time strictly after `t_ms` at which the node can
+    /// serve (and thus heartbeat) again, if any.
+    pub fn next_serving_after(&self, t_ms: f64) -> Option<f64> {
+        self.changes
+            .iter()
+            .find(|(at, c)| *at > t_ms && c.is_up())
+            .map(|(at, _)| *at)
+    }
+}
+
+/// Simulate the arrival times (at the monitor) of one node's heartbeats
+/// over `[0, horizon_ms)`. The node is assumed to have announced itself
+/// at t = 0, so the first beat is due one (condition-stretched) interval
+/// in.
+pub fn arrivals(
+    cfg: &HeartbeatConfig,
+    timeline: &ConditionTimeline,
+    horizon_ms: f64,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    assert!(cfg.interval_ms > 0.0, "heartbeat interval must be positive");
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    while t < horizon_ms {
+        let cond = timeline.at(t);
+        if !cond.is_up() {
+            // Silent while down; resume after the next recovery.
+            match timeline.next_serving_after(t) {
+                Some(r) => {
+                    t = r;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        t += cfg.interval_ms * cond.slowdown();
+        if t >= horizon_ms {
+            break;
+        }
+        if !timeline.at(t).is_up() {
+            // Crashed before this beat was due; the loop top jumps ahead.
+            continue;
+        }
+        let lost = rng.bool(cfg.loss_prob);
+        let jitter = if cfg.jitter_ms > 0.0 {
+            rng.range(0.0, cfg.jitter_ms)
+        } else {
+            0.0
+        };
+        let arrive = t + jitter;
+        let blacked = cfg
+            .blackout
+            .is_some_and(|(s, e)| arrive >= s && arrive < e);
+        if !lost && !blacked {
+            out.push(arrive);
+        }
+    }
+    // Jitter larger than the interval can reorder adjacent beats; the
+    // detectors assume monotone observation times.
+    out.sort_by(|a, b| a.total_cmp(b));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(jitter: f64, loss: f64) -> HeartbeatConfig {
+        HeartbeatConfig {
+            interval_ms: 10.0,
+            jitter_ms: jitter,
+            loss_prob: loss,
+            blackout: None,
+        }
+    }
+
+    #[test]
+    fn healthy_node_beats_every_interval() {
+        let tl = ConditionTimeline::from_plan(&FailurePlan::none(), 1);
+        let mut rng = Rng::new(1);
+        let beats = arrivals(&cfg(0.0, 0.0), &tl, 100.0, &mut rng);
+        assert_eq!(beats.len(), 9, "beats at 10..=90");
+        for (i, b) in beats.iter().enumerate() {
+            assert!((b - 10.0 * (i + 1) as f64).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn down_node_is_silent_until_recovery() {
+        let plan = FailurePlan::crash_recover(2, 35.0, 40.0);
+        let tl = ConditionTimeline::from_plan(&plan, 2);
+        let mut rng = Rng::new(2);
+        let beats = arrivals(&cfg(0.0, 0.0), &tl, 120.0, &mut rng);
+        // beats at 10, 20, 30, then silence until recovery at 75 →
+        // beats resume at 85, ..., 115.
+        assert!(beats.iter().all(|&b| b < 35.0 || b >= 85.0), "{beats:?}");
+        assert!(beats.contains(&30.0));
+        assert!(beats.contains(&85.0));
+    }
+
+    #[test]
+    fn crashed_forever_stops_beating() {
+        let tl = ConditionTimeline::from_plan(&FailurePlan::crash(1, 25.0), 1);
+        let mut rng = Rng::new(3);
+        let beats = arrivals(&cfg(0.0, 0.0), &tl, 1000.0, &mut rng);
+        assert_eq!(beats, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn degraded_node_stretches_intervals() {
+        let plan = FailurePlan::degraded(1, 0.0, 3.0, 1e9);
+        let tl = ConditionTimeline::from_plan(&plan, 1);
+        let mut rng = Rng::new(4);
+        let beats = arrivals(&cfg(0.0, 0.0), &tl, 100.0, &mut rng);
+        assert_eq!(beats, vec![30.0, 60.0, 90.0]);
+    }
+
+    #[test]
+    fn loss_drops_beats_deterministically() {
+        let tl = ConditionTimeline::from_plan(&FailurePlan::none(), 1);
+        let a = arrivals(&cfg(0.0, 0.4), &tl, 2000.0, &mut Rng::new(7));
+        let b = arrivals(&cfg(0.0, 0.4), &tl, 2000.0, &mut Rng::new(7));
+        assert_eq!(a, b, "same seed, same losses");
+        let full = arrivals(&cfg(0.0, 0.0), &tl, 2000.0, &mut Rng::new(7));
+        assert!(a.len() < full.len(), "40% loss must drop something");
+        assert!(!a.is_empty(), "and keep something");
+    }
+
+    #[test]
+    fn blackout_swallows_a_window() {
+        let tl = ConditionTimeline::from_plan(&FailurePlan::none(), 1);
+        let mut c = cfg(0.0, 0.0);
+        c.blackout = Some((35.0, 65.0));
+        let beats = arrivals(&c, &tl, 100.0, &mut Rng::new(5));
+        assert!(beats.iter().all(|&b| !(35.0..65.0).contains(&b)), "{beats:?}");
+        assert!(beats.contains(&30.0));
+        assert!(beats.contains(&70.0));
+    }
+
+    #[test]
+    fn jittered_arrivals_are_sorted() {
+        let tl = ConditionTimeline::from_plan(&FailurePlan::none(), 1);
+        let beats = arrivals(&cfg(25.0, 0.0), &tl, 500.0, &mut Rng::new(6));
+        assert!(beats.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn timeline_lookup() {
+        let plan = FailurePlan::merge([
+            FailurePlan::degraded(3, 10.0, 2.0, 20.0),
+            FailurePlan::crash_recover(3, 50.0, 25.0),
+        ]);
+        let tl = ConditionTimeline::from_plan(&plan, 3);
+        assert_eq!(tl.at(0.0), NodeCondition::Up);
+        assert_eq!(tl.at(15.0), NodeCondition::Degraded(2.0));
+        assert_eq!(tl.at(40.0), NodeCondition::Up);
+        assert_eq!(tl.at(60.0), NodeCondition::Down);
+        assert_eq!(tl.at(80.0), NodeCondition::Up);
+        assert_eq!(tl.next_serving_after(55.0), Some(75.0));
+        assert_eq!(tl.next_serving_after(100.0), None);
+    }
+}

@@ -1,0 +1,38 @@
+//! Node-health subsystem: imperfect failure detection for the serving
+//! engine.
+//!
+//! The paper's downtime metric starts at *detection*, but a perfect
+//! oracle detector hides the hard part of edge resilience: real
+//! monitors watch a lossy heartbeat channel and must trade detection
+//! latency against false failovers, gray failures degrade a node
+//! without killing it, and a recovered node is only worth
+//! repartitioning back onto once it stops flapping. This module models
+//! that whole loop:
+//!
+//! - [`heartbeat`] — the simulated channel: per-node beat emission
+//!   driven by the ground-truth [`crate::cluster::NodeCondition`]
+//!   timeline, with seeded jitter, loss and optional blackout windows.
+//! - [`detector`] — the [`HealthDetector`] trait with the classic
+//!   fixed-timeout detector and a phi-accrual detector whose suspicion
+//!   adapts to the observed inter-arrival history.
+//! - [`reintegrate`] — the quarantine hysteresis gate: one failover per
+//!   suspicion episode, one reintegration per sustained stability
+//!   window, flaps reset the clock silently.
+//! - [`monitor`] — ties them together per node and emits the
+//!   [`HealthEvent`] stream (failovers, false positives included, and
+//!   quarantine-gated recoveries) that
+//!   [`crate::coordinator::engine::serve`] consumes in
+//!   [`crate::coordinator::engine::HealthMode::Monitored`] runs.
+//!
+//! Everything is virtual-time and seeded; no wall clocks, no threads —
+//! a (plan, config) pair always produces the same event stream.
+
+pub mod detector;
+pub mod heartbeat;
+pub mod monitor;
+pub mod reintegrate;
+
+pub use detector::{DetectorKind, FixedTimeoutDetector, HealthDetector, PhiAccrualDetector};
+pub use heartbeat::{arrivals, ConditionTimeline, HeartbeatConfig};
+pub use monitor::{simulate, HealthConfig, HealthEvent, HealthEventKind};
+pub use reintegrate::{ReAction, ReintegrationController};

@@ -1,0 +1,339 @@
+//! The health monitor: per-node heartbeat observation, suspicion
+//! checks, gray-failure estimation and quarantine gating, producing the
+//! stream of [`HealthEvent`]s the serving engine reacts to.
+//!
+//! The monitor never sees ground truth. It sees heartbeat *arrivals*
+//! (jittered, lossy, possibly blacked out) and periodically asks its
+//! [`HealthDetector`](super::HealthDetector) how suspicious the silence
+//! is, so its output can be late, can miss short flaps between checks,
+//! and — crucially — can be wrong: a loss burst or a monitoring-path
+//! blackout produces a [`HealthEventKind::Failover`] for a perfectly
+//! healthy node (`false_positive = true`), which the engine later rolls
+//! back when the [`ReintegrationController`] clears it.
+//!
+//! Gray failures are *estimated*, not observed: a degraded node's beats
+//! stretch by its slowdown, so the monitor compares the mean of its
+//! recent inter-arrival window to the nominal interval and fails over
+//! once the estimate crosses [`HealthConfig::failover_slowdown`]. Below
+//! the threshold the node is left in the path, slowing its stage in
+//! place — failing over a mildly degraded node would trade a small
+//! latency stretch for a full downtime window.
+//!
+//! Everything is virtual-time and seeded, so a (plan, config) pair
+//! always yields the same event stream — the serving experiments stay
+//! reproducible down to the byte.
+
+use std::collections::VecDeque;
+
+use crate::cluster::failure::{FailurePlan, NodeCondition};
+use crate::util::rng::Rng;
+
+use super::detector::DetectorKind;
+use super::heartbeat::{arrivals, ConditionTimeline, HeartbeatConfig};
+use super::reintegrate::{ReAction, ReintegrationController};
+
+/// Monitored-health configuration.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    pub heartbeat: HeartbeatConfig,
+    pub detector: DetectorKind,
+    /// Estimated slowdown at or above which a degraded node is failed
+    /// over (`f64::INFINITY` never fails over on degradation alone).
+    pub failover_slowdown: f64,
+    /// How long a cleared node must stay clean before reintegration.
+    pub quarantine_ms: f64,
+    /// Sliding window (beats) for the slowdown estimate.
+    pub slowdown_window: usize,
+    /// Seed of the heartbeat channel randomness (jitter/loss draws).
+    pub seed: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            heartbeat: HeartbeatConfig::default(),
+            detector: DetectorKind::PhiAccrual {
+                threshold: 8.0,
+                window: 64,
+                min_std_ms: 0.5,
+            },
+            failover_slowdown: 3.0,
+            quarantine_ms: 100.0,
+            slowdown_window: 8,
+            seed: 0x4845_414c,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// A fixed-timeout configuration (the classic detector, but now over
+    /// the imperfect channel).
+    pub fn fixed_timeout(timeout_ms: f64) -> HealthConfig {
+        HealthConfig {
+            detector: DetectorKind::FixedTimeout { timeout_ms },
+            ..HealthConfig::default()
+        }
+    }
+
+    /// How far the monitor must simulate so that everything scheduled in
+    /// `plan` (plus a trailing detection + quarantine) is observed.
+    pub fn horizon_for(&self, plan: &FailurePlan, last_arrival_ms: f64) -> f64 {
+        let blackout_end = self.heartbeat.blackout.map(|(_, e)| e).unwrap_or(0.0);
+        plan.last_event_ms()
+            .max(last_arrival_ms)
+            .max(blackout_end)
+            + self.quarantine_ms
+            + 50.0 * self.heartbeat.interval_ms
+    }
+}
+
+/// What the monitor concluded.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HealthEventKind {
+    /// The node should be failed over away from. `false_positive` is the
+    /// ground-truth verdict (node was `Up` at detection time), recorded
+    /// for evaluation — the controller of course cannot see it.
+    Failover { false_positive: bool },
+    /// The node was stable through quarantine: repartition back onto it
+    /// (for a false positive this is the rollback).
+    Recovery,
+}
+
+/// One monitor conclusion about one node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthEvent {
+    pub at_ms: f64,
+    pub node: usize,
+    pub kind: HealthEventKind,
+}
+
+/// Simulate the monitor over `[0, horizon_ms)` for nodes `1..=num_nodes`
+/// of one replica, returning the time-sorted health events.
+pub fn simulate(
+    cfg: &HealthConfig,
+    plan: &FailurePlan,
+    num_nodes: usize,
+    horizon_ms: f64,
+) -> Vec<HealthEvent> {
+    let mut root = Rng::new(cfg.seed);
+    let mut events = Vec::new();
+    let interval = cfg.heartbeat.interval_ms;
+    for node in 1..=num_nodes {
+        let mut rng = root.fork(node as u64);
+        let timeline = ConditionTimeline::from_plan(plan, node);
+        let beats = arrivals(&cfg.heartbeat, &timeline, horizon_ms, &mut rng);
+        let mut detector = cfg.detector.build(interval);
+        let mut gate = ReintegrationController::new(cfg.quarantine_ms);
+        let mut recent: VecDeque<f64> = VecDeque::with_capacity(cfg.slowdown_window + 1);
+        let mut last_beat = 0.0;
+        let mut next = 0usize;
+        let mut det_suspected = false;
+        // Check suspicion on the heartbeat grid (the natural cadence of a
+        // monitor that wakes per expected beat).
+        let mut t = interval;
+        while t <= horizon_ms {
+            while next < beats.len() && beats[next] <= t {
+                let b = beats[next];
+                detector.observe(b);
+                // A gap spanning detector-flagged silence measures the
+                // outage, not the node's serving cadence — feeding it
+                // into the slowdown estimate would make a freshly
+                // recovered node look degraded and stall its quarantine
+                // clock. Gray-failure stretches are NOT detector-flagged
+                // at push time (beats keep flowing), so they still
+                // accumulate here.
+                if det_suspected {
+                    det_suspected = false;
+                } else {
+                    recent.push_back(b - last_beat);
+                    while recent.len() > cfg.slowdown_window {
+                        recent.pop_front();
+                    }
+                }
+                last_beat = b;
+                next += 1;
+            }
+            let est_slowdown = if recent.len() >= 3 {
+                recent.iter().sum::<f64>() / recent.len() as f64 / interval
+            } else {
+                1.0
+            };
+            let det_suspect = detector.is_suspect(t);
+            det_suspected = det_suspected || det_suspect;
+            let suspect = det_suspect || est_slowdown >= cfg.failover_slowdown;
+            match gate.observe(t, suspect) {
+                ReAction::Failover => events.push(HealthEvent {
+                    at_ms: t,
+                    node,
+                    kind: HealthEventKind::Failover {
+                        false_positive: timeline.at(t) == NodeCondition::Up,
+                    },
+                }),
+                ReAction::Reintegrate => events.push(HealthEvent {
+                    at_ms: t,
+                    node,
+                    kind: HealthEventKind::Recovery,
+                }),
+                ReAction::None => {}
+            }
+            t += interval;
+        }
+    }
+    events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms).then(a.node.cmp(&b.node)));
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic channel: no jitter, no loss.
+    fn clean(detector: DetectorKind, quarantine_ms: f64) -> HealthConfig {
+        HealthConfig {
+            heartbeat: HeartbeatConfig {
+                interval_ms: 10.0,
+                jitter_ms: 0.0,
+                loss_prob: 0.0,
+                blackout: None,
+            },
+            detector,
+            failover_slowdown: 3.0,
+            quarantine_ms,
+            slowdown_window: 8,
+            seed: 1,
+        }
+    }
+
+    fn fixed(timeout_ms: f64, quarantine_ms: f64) -> HealthConfig {
+        clean(DetectorKind::FixedTimeout { timeout_ms }, quarantine_ms)
+    }
+
+    #[test]
+    fn healthy_cluster_is_quiet() {
+        let ev = simulate(&fixed(25.0, 50.0), &FailurePlan::none(), 4, 1000.0);
+        assert!(ev.is_empty(), "{ev:?}");
+    }
+
+    #[test]
+    fn crash_is_detected_then_reintegrated_after_quarantine() {
+        // Down @50, up @130. Beats 10..40, then 140, 150, ...
+        let plan = FailurePlan::crash_recover(3, 50.0, 80.0);
+        let ev = simulate(&fixed(25.0, 100.0), &plan, 4, 1000.0);
+        assert_eq!(ev.len(), 2, "{ev:?}");
+        assert_eq!(ev[0].node, 3);
+        assert_eq!(ev[0].kind, HealthEventKind::Failover { false_positive: false });
+        // last beat 40, timeout 25 → first suspect check at 70.
+        assert!((ev[0].at_ms - 70.0).abs() < 1e-9, "{ev:?}");
+        // beats resume at 140 → cleared at the 140 check → quarantine
+        // until 240.
+        assert_eq!(ev[1].kind, HealthEventKind::Recovery);
+        assert!((ev[1].at_ms - 240.0).abs() < 1e-9, "{ev:?}");
+    }
+
+    #[test]
+    fn blackout_produces_false_positive_and_rollback() {
+        let mut cfg = fixed(25.0, 40.0);
+        cfg.heartbeat.blackout = Some((100.0, 160.0));
+        let ev = simulate(&cfg, &FailurePlan::none(), 2, 1000.0);
+        // Both nodes: FP failover at 120 (last beat 90), recovery at
+        // 160-beat check + 40 ms quarantine = 200.
+        assert_eq!(ev.len(), 4, "{ev:?}");
+        for e in &ev[..2] {
+            assert_eq!(e.kind, HealthEventKind::Failover { false_positive: true });
+            assert!((e.at_ms - 120.0).abs() < 1e-9, "{ev:?}");
+        }
+        for e in &ev[2..] {
+            assert_eq!(e.kind, HealthEventKind::Recovery);
+            assert!((e.at_ms - 200.0).abs() < 1e-9, "{ev:?}");
+        }
+    }
+
+    #[test]
+    fn flapping_node_stays_quarantined_until_stable() {
+        // Down 50–90, up 90–190, down 190–230, up from 230 on.
+        let plan = FailurePlan::intermittent(3, 50.0, 40.0, 100.0, 2);
+        let ev = simulate(&fixed(25.0, 150.0), &plan, 4, 1000.0);
+        let node3: Vec<&HealthEvent> = ev.iter().filter(|e| e.node == 3).collect();
+        // One failover (the second outage lands inside quarantine and
+        // resets it silently), one reintegration once genuinely stable.
+        assert_eq!(node3.len(), 2, "{ev:?}");
+        assert_eq!(node3[0].kind, HealthEventKind::Failover { false_positive: false });
+        assert!((node3[0].at_ms - 70.0).abs() < 1e-9);
+        assert_eq!(node3[1].kind, HealthEventKind::Recovery);
+        // Beats resume at 240 after the second outage; stable 150 ms → 390.
+        assert!((node3[1].at_ms - 390.0).abs() < 1e-9, "{ev:?}");
+    }
+
+    #[test]
+    fn heavy_degradation_crosses_the_failover_threshold() {
+        // 5× slowdown: beats every 50 ms, est slowdown → 5 ≥ 3.
+        let plan = FailurePlan::degraded(2, 100.0, 5.0, 600.0);
+        let ev = simulate(&fixed(1e6, 50.0), &plan, 4, 2000.0);
+        let node2: Vec<&HealthEvent> = ev.iter().filter(|e| e.node == 2).collect();
+        assert!(!node2.is_empty(), "5x degradation must fail over: {ev:?}");
+        assert_eq!(
+            node2[0].kind,
+            HealthEventKind::Failover { false_positive: false },
+            "degraded ground truth is not a false positive"
+        );
+        assert!(node2[0].at_ms > 100.0);
+        // After the window ends (t = 700) the estimate drains and the
+        // node reintegrates.
+        assert!(
+            node2.iter().any(|e| e.kind == HealthEventKind::Recovery && e.at_ms > 700.0),
+            "{ev:?}"
+        );
+    }
+
+    #[test]
+    fn mild_degradation_stays_in_the_path() {
+        // 1.5× slowdown: beats every 15 ms < timeout 35, est 1.5 < 3.
+        let plan = FailurePlan::degraded(2, 100.0, 1.5, 600.0);
+        let ev = simulate(&fixed(35.0, 50.0), &plan, 4, 2000.0);
+        assert!(ev.is_empty(), "mild degradation must not fail over: {ev:?}");
+    }
+
+    #[test]
+    fn phi_detects_crash_and_lower_threshold_is_no_slower() {
+        let plan = FailurePlan::crash(3, 200.0);
+        let slow = clean(
+            DetectorKind::PhiAccrual { threshold: 8.0, window: 32, min_std_ms: 0.5 },
+            50.0,
+        );
+        let fast = clean(
+            DetectorKind::PhiAccrual { threshold: 1.0, window: 32, min_std_ms: 0.5 },
+            50.0,
+        );
+        let ev_slow = simulate(&slow, &plan, 4, 2000.0);
+        let ev_fast = simulate(&fast, &plan, 4, 2000.0);
+        assert_eq!(ev_slow.len(), 1, "{ev_slow:?}");
+        assert_eq!(ev_fast.len(), 1, "{ev_fast:?}");
+        assert!(ev_slow[0].at_ms > 200.0);
+        assert!(ev_fast[0].at_ms <= ev_slow[0].at_ms);
+    }
+
+    #[test]
+    fn same_seed_same_events_under_noise() {
+        let mut cfg = fixed(25.0, 50.0);
+        cfg.heartbeat.jitter_ms = 3.0;
+        cfg.heartbeat.loss_prob = 0.15;
+        cfg.seed = 99;
+        let plan = FailurePlan::crash_recover(2, 300.0, 200.0);
+        let a = simulate(&cfg, &plan, 4, 3000.0);
+        let b = simulate(&cfg, &plan, 4, 3000.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn horizon_covers_plan_and_quarantine() {
+        let cfg = fixed(25.0, 100.0);
+        let plan = FailurePlan::crash_recover(1, 400.0, 50.0);
+        let h = cfg.horizon_for(&plan, 600.0);
+        assert!(h >= 600.0 + 100.0, "h = {h}");
+        let ev = simulate(&cfg, &plan, 2, h);
+        assert!(
+            ev.iter().any(|e| e.kind == HealthEventKind::Recovery),
+            "recovery must land inside the default horizon: {ev:?}"
+        );
+    }
+}

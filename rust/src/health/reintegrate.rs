@@ -1,0 +1,157 @@
+//! Stability-aware reintegration: when is a recovered node safe to serve
+//! on again?
+//!
+//! Repartitioning back onto a node is itself a downtime event, so doing
+//! it eagerly on the first clean heartbeat is exactly wrong for flapping
+//! nodes — every flap would pay a failover *and* a reintegration. The
+//! [`ReintegrationController`] is a per-node hysteresis state machine:
+//!
+//! ```text
+//!   Trusted --suspect--> Suspected --clear--> Quarantine --stable for
+//!      ^                     ^                    |        quarantine_ms
+//!      |                     +-----suspect--------+            |
+//!      +------------------- reintegrate <---------------------+
+//! ```
+//!
+//! The `Trusted → Suspected` edge is the (single) failover trigger; the
+//! `Quarantine → Trusted` edge is the (single) reintegration trigger. A
+//! flap during quarantine silently resets the clock — the node is
+//! already failed over, so there is nothing new to react to.
+
+/// Reintegration state of one monitored node.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ReState {
+    /// In the serving path.
+    Trusted,
+    /// Failed over away from; suspicion still active.
+    Suspected,
+    /// Suspicion cleared at `since_ms`; waiting out the stability window.
+    Quarantine { since_ms: f64 },
+}
+
+/// What the controller wants done after an observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReAction {
+    /// Nothing changed.
+    None,
+    /// Node newly suspected: fail over away from it.
+    Failover,
+    /// Node stable for the full quarantine window: repartition back on.
+    Reintegrate,
+}
+
+/// Per-node hysteresis gate between the detector and the failover
+/// controller.
+#[derive(Debug, Clone)]
+pub struct ReintegrationController {
+    quarantine_ms: f64,
+    state: ReState,
+}
+
+impl ReintegrationController {
+    pub fn new(quarantine_ms: f64) -> ReintegrationController {
+        ReintegrationController {
+            quarantine_ms: quarantine_ms.max(0.0),
+            state: ReState::Trusted,
+        }
+    }
+
+    /// Whether the node is currently in the serving path.
+    pub fn is_trusted(&self) -> bool {
+        self.state == ReState::Trusted
+    }
+
+    /// Feed one suspicion observation at `now_ms` (monotone times).
+    pub fn observe(&mut self, now_ms: f64, suspect: bool) -> ReAction {
+        match (self.state, suspect) {
+            (ReState::Trusted, true) => {
+                self.state = ReState::Suspected;
+                ReAction::Failover
+            }
+            (ReState::Suspected, false) => {
+                self.state = ReState::Quarantine { since_ms: now_ms };
+                // quarantine_ms == 0 means "reintegrate on first clear".
+                if self.quarantine_ms <= 0.0 {
+                    self.state = ReState::Trusted;
+                    ReAction::Reintegrate
+                } else {
+                    ReAction::None
+                }
+            }
+            (ReState::Quarantine { .. }, true) => {
+                // Flap: stay failed over, restart the stability clock on
+                // the next clear observation.
+                self.state = ReState::Suspected;
+                ReAction::None
+            }
+            (ReState::Quarantine { since_ms }, false) => {
+                if now_ms - since_ms >= self.quarantine_ms {
+                    self.state = ReState::Trusted;
+                    ReAction::Reintegrate
+                } else {
+                    ReAction::None
+                }
+            }
+            _ => ReAction::None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failover_once_then_reintegrate_after_stability() {
+        let mut c = ReintegrationController::new(50.0);
+        assert!(c.is_trusted());
+        assert_eq!(c.observe(10.0, true), ReAction::Failover);
+        assert_eq!(c.observe(20.0, true), ReAction::None, "no duplicate failover");
+        assert!(!c.is_trusted());
+        assert_eq!(c.observe(30.0, false), ReAction::None, "quarantine starts");
+        assert_eq!(c.observe(60.0, false), ReAction::None, "30 ms stable < 50");
+        assert_eq!(c.observe(80.0, false), ReAction::Reintegrate, "50 ms stable");
+        assert!(c.is_trusted());
+    }
+
+    #[test]
+    fn flap_resets_the_stability_clock() {
+        let mut c = ReintegrationController::new(50.0);
+        assert_eq!(c.observe(0.0, true), ReAction::Failover);
+        assert_eq!(c.observe(10.0, false), ReAction::None); // quarantine @10
+        assert_eq!(c.observe(40.0, true), ReAction::None); // flap, no 2nd failover
+        assert_eq!(c.observe(70.0, false), ReAction::None); // quarantine @70
+        assert_eq!(
+            c.observe(110.0, false),
+            ReAction::None,
+            "old window must not count: only 40 ms since the flap cleared"
+        );
+        assert_eq!(c.observe(120.0, false), ReAction::Reintegrate);
+    }
+
+    #[test]
+    fn zero_quarantine_reintegrates_immediately() {
+        let mut c = ReintegrationController::new(0.0);
+        assert_eq!(c.observe(5.0, true), ReAction::Failover);
+        assert_eq!(c.observe(6.0, false), ReAction::Reintegrate);
+        assert!(c.is_trusted());
+    }
+
+    #[test]
+    fn trusted_stays_quiet_while_healthy() {
+        let mut c = ReintegrationController::new(50.0);
+        for t in 0..100 {
+            assert_eq!(c.observe(t as f64, false), ReAction::None);
+        }
+        assert!(c.is_trusted());
+    }
+
+    #[test]
+    fn can_fail_over_again_after_reintegration() {
+        let mut c = ReintegrationController::new(10.0);
+        assert_eq!(c.observe(0.0, true), ReAction::Failover);
+        assert_eq!(c.observe(5.0, false), ReAction::None);
+        assert_eq!(c.observe(15.0, false), ReAction::Reintegrate);
+        assert_eq!(c.observe(20.0, true), ReAction::Failover, "second cycle");
+    }
+}

@@ -12,9 +12,16 @@
 //!   the python/JAX/Pallas build path) via the PJRT C API and executes
 //!   them; python never runs at request time.
 //! - [`cluster`] simulates the edge cluster: nodes hosting per-block
-//!   executables, links with a latency/bandwidth model, failure
-//!   injection, and per-stage execution primitives the serving engine
-//!   schedules around.
+//!   executables, links with a latency/bandwidth model, ground-truth
+//!   failure injection (crashes, recoveries, gray-failure slowdowns),
+//!   and per-stage execution primitives the serving engine schedules
+//!   around.
+//! - [`health`] is the node-health subsystem: a simulated heartbeat
+//!   channel (jitter/loss/blackouts), fixed-timeout and phi-accrual
+//!   failure detectors that can be late or wrong (false positives
+//!   trigger unnecessary failovers the engine later rolls back), and a
+//!   quarantine gate that holds flapping nodes out of the path until
+//!   they stay stable.
 //! - [`dnn`] holds model/layer metadata mirroring the python definitions.
 //! - [`predict`] is a from-scratch gradient-boosted-tree library providing
 //!   the paper's Latency Prediction Model and Accuracy Prediction Model.
@@ -38,6 +45,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dnn;
 pub mod exper;
+pub mod health;
 pub mod predict;
 pub mod runtime;
 pub mod util;

@@ -4,9 +4,14 @@
 //!   info                         artifact/manifest summary
 //!   exp <id>                     regenerate a paper table/figure
 //!                                (fig2 fig3 fig4 fig6 table2 table5 fig7
-//!                                 table6 fig8 table7 table8 e2e all)
+//!                                 table6 fig8 table7 table8 e2e detection
+//!                                 drops all)
 //!   serve                        e2e serving demo with failure injection
 //!   profile                      run the layer profiler sweep
+//!   detection-eval               detector-aggressiveness sweep (synthetic,
+//!                                no artifacts needed)
+//!   drop-attribution             deadline sweep classifying drops inside
+//!                                vs outside failure windows (synthetic)
 //!   clean-results                drop cached experiment results
 //!
 //! Common options:
@@ -90,6 +95,15 @@ fn main() -> Result<()> {
             let ctx = ExpContext::open(cfg)?;
             exper::table2::run(&ctx)
         }
+        // Synthetic health experiments: no artifacts required.
+        "detection-eval" => {
+            let seed = args.get_usize("seed", 0)? as u64;
+            continuer::exper::detection_eval::run_standalone(seed)
+        }
+        "drop-attribution" => {
+            let seed = args.get_usize("seed", 0)? as u64;
+            continuer::exper::drop_attribution::run_standalone(seed)
+        }
         "clean-results" => {
             let cfg = build_config(&args)?;
             let dir = cfg.artifacts_dir.join("results");
@@ -109,13 +123,15 @@ CONTINUER — maintaining distributed DNN services during edge failures
 USAGE: continuer <subcommand> [options]
 
 SUBCOMMANDS
-  info            summarize the artifact manifest
-  exp <id>        regenerate a paper table/figure:
-                  fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8
-                  table7 table8 e2e all
-  serve           end-to-end serving demo with failure injection
-  profile         layer-latency profiling sweep (= exp table2)
-  clean-results   drop cached experiment results
+  info              summarize the artifact manifest
+  exp <id>          regenerate a paper table/figure:
+                    fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8
+                    table7 table8 e2e detection drops all
+  serve             end-to-end serving demo with failure injection
+  profile           layer-latency profiling sweep (= exp table2)
+  detection-eval    detector sweep: downtime vs false failovers (synthetic)
+  drop-attribution  deadline sweep: drops inside vs outside outages (synthetic)
+  clean-results     drop cached experiment results
 
 OPTIONS
   --artifacts <dir>  artifacts directory (default ./artifacts)

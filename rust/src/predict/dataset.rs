@@ -105,7 +105,7 @@ mod tests {
         assert_eq!(te.len(), 20);
         // disjoint and exhaustive
         let mut all: Vec<f64> = tr.targets.iter().chain(te.targets.iter()).cloned().collect();
-        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all.sort_by(|a, b| a.total_cmp(b));
         assert_eq!(all, (0..100).map(|i| (i * 2) as f64).collect::<Vec<_>>());
     }
 
@@ -123,7 +123,7 @@ mod tests {
         let folds = d.kfold(5, 3);
         assert_eq!(folds.len(), 5);
         let mut seen: Vec<f64> = folds.iter().flat_map(|(_, v)| v.targets.clone()).collect();
-        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        seen.sort_by(|a, b| a.total_cmp(b));
         assert_eq!(seen.len(), 25);
         for (tr, va) in &folds {
             assert_eq!(tr.len() + va.len(), 25);

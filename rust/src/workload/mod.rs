@@ -86,7 +86,7 @@ pub fn split_round_robin(reqs: &[Request], replicas: usize) -> Vec<Vec<Request>>
 /// (stable: equal timestamps keep lower-replica-first order).
 pub fn merge_streams(streams: &[Vec<Request>]) -> Vec<Request> {
     let mut out: Vec<Request> = streams.iter().flatten().copied().collect();
-    out.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+    out.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
     out
 }
 

@@ -1,0 +1,194 @@
+//! Property: for ANY seeded heartbeat/failure schedule — crashes with
+//! recovery, gray failures, lossy/jittery monitoring channels, false
+//! positives and all — the serving engine conserves requests
+//! (completed + dropped == offered, with no duplicates) and terminates.
+//!
+//! This is the safety net under the whole health subsystem: however
+//! wrong the monitor is about the world, no request may vanish or be
+//! served twice, and the event loop must drain.
+
+use continuer::cluster::failure::FailurePlan;
+use continuer::config::Objectives;
+use continuer::coordinator::batcher::BatcherConfig;
+use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::estimator::StaticMetrics;
+use continuer::coordinator::router::RoutePolicy;
+use continuer::coordinator::Failover;
+use continuer::health::{DetectorKind, HealthConfig, HeartbeatConfig};
+use continuer::runtime::HostTensor;
+use continuer::util::proptest::{check, prop_assert, prop_assert_eq, Gen};
+use continuer::workload::{generate, Arrival};
+
+fn random_health(g: &mut Gen) -> HealthConfig {
+    let detector = if g.bool() {
+        DetectorKind::FixedTimeout {
+            timeout_ms: g.f64(12.0, 120.0),
+        }
+    } else {
+        DetectorKind::PhiAccrual {
+            threshold: g.f64(0.5, 12.0),
+            window: g.usize(4, 64),
+            min_std_ms: g.f64(0.1, 2.0),
+        }
+    };
+    HealthConfig {
+        heartbeat: HeartbeatConfig {
+            interval_ms: g.f64(5.0, 20.0),
+            jitter_ms: g.f64(0.0, 4.0),
+            loss_prob: g.f64(0.0, 0.3),
+            blackout: if g.bool() {
+                let start = g.f64(50.0, 400.0);
+                Some((start, start + g.f64(20.0, 150.0)))
+            } else {
+                None
+            },
+        },
+        detector,
+        failover_slowdown: g.f64(1.5, 6.0),
+        quarantine_ms: g.f64(0.0, 200.0),
+        slowdown_window: g.usize(3, 12),
+        seed: g.rng().next_u64(),
+    }
+}
+
+fn random_plan(g: &mut Gen, nodes: usize, horizon_ms: f64) -> FailurePlan {
+    let eligible: Vec<usize> = (1..=nodes).collect();
+    let mut parts = Vec::new();
+    // A churning crash/recovery renewal process...
+    parts.push(FailurePlan::random_mtbf(
+        &eligible,
+        horizon_ms,
+        g.f64(200.0, 2000.0),
+        g.f64(30.0, 300.0),
+        g.rng(),
+    ));
+    // ...plus an optional gray-failure window on a random node.
+    if g.bool() {
+        parts.push(FailurePlan::degraded(
+            g.usize(1, nodes),
+            g.f64(0.0, horizon_ms / 2.0),
+            g.f64(1.2, 6.0),
+            g.f64(20.0, horizon_ms / 2.0),
+        ));
+    }
+    FailurePlan::merge(parts)
+}
+
+#[test]
+fn engine_conserves_requests_under_arbitrary_health_schedules() {
+    check(60, 0xC0A5E7, |g| {
+        let replicas = g.usize(1, 2);
+        let nodes = g.usize(3, 5);
+        let n_requests = g.usize(5, 40);
+        let horizon_ms = 600.0;
+
+        let mut backends: Vec<SyntheticBackend> = (0..replicas)
+            .map(|_| SyntheticBackend::uniform(nodes, g.f64(1.0, 8.0), 1.0))
+            .collect();
+        let mut failovers: Vec<Failover> = (0..replicas)
+            .map(|_| Failover::new(Objectives::default()))
+            .collect();
+        let plans: Vec<FailurePlan> = (0..replicas)
+            .map(|_| random_plan(g, nodes, horizon_ms))
+            .collect();
+        let cfg = EngineConfig {
+            batcher: BatcherConfig::new(vec![1], 2.0, 1),
+            health: HealthMode::Monitored(random_health(g)),
+            deadline_ms: if g.bool() { Some(g.f64(20.0, 300.0)) } else { None },
+            pipeline_depth: g.usize(1, 3),
+            route: if g.bool() {
+                RoutePolicy::RoundRobin
+            } else {
+                RoutePolicy::JoinShortestQueue
+            },
+            decision_ms_override: Some(1.5),
+        };
+        let requests = generate(
+            n_requests,
+            Arrival::Poisson {
+                rate_rps: g.f64(50.0, 600.0),
+            },
+            8,
+            g.rng().next_u64(),
+        );
+        let inputs = HostTensor::zeros(vec![8, 4]);
+
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &cfg,
+            &requests,
+            &inputs,
+            &plans,
+        )
+        .map_err(|e| format!("engine errored: {e}"))?;
+
+        // Conservation: every offered request is either completed or
+        // dropped, exactly once.
+        prop_assert_eq(
+            report.completed.len() + report.dropped.len(),
+            n_requests,
+        )?;
+        let mut ids: Vec<usize> = report
+            .completed
+            .iter()
+            .map(|c| c.id)
+            .chain(report.dropped.iter().map(|d| d.id))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        prop_assert(ids.len() == n_requests, "duplicate or missing request ids")?;
+
+        // Sanity: windows are well-formed and latencies are finite.
+        for w in &report.failovers {
+            prop_assert(w.end_ms >= w.start_ms, "negative downtime window")?;
+        }
+        prop_assert(
+            report.completed.iter().all(|c| c.latency_ms.is_finite() && c.latency_ms >= 0.0),
+            "non-finite completion latency",
+        )?;
+        Ok(())
+    });
+}
+
+/// The oracle path must satisfy the same conservation law (regression
+/// guard for the seed-compatible configuration).
+#[test]
+fn oracle_mode_conserves_requests_too() {
+    use continuer::cluster::Detector;
+    check(30, 0x0AC1E, |g| {
+        let nodes = g.usize(3, 5);
+        let n_requests = g.usize(5, 30);
+        let mut backends = vec![SyntheticBackend::uniform(nodes, g.f64(1.0, 8.0), 1.0)];
+        let mut failovers = vec![Failover::new(Objectives::default())];
+        let plan = random_plan(g, nodes, 600.0);
+        let cfg = EngineConfig {
+            batcher: BatcherConfig::new(vec![1], 2.0, 1),
+            health: HealthMode::Oracle(Detector::default()),
+            deadline_ms: if g.bool() { Some(g.f64(20.0, 300.0)) } else { None },
+            pipeline_depth: g.usize(1, 3),
+            route: RoutePolicy::RoundRobin,
+            decision_ms_override: Some(1.5),
+        };
+        let requests = generate(
+            n_requests,
+            Arrival::Poisson { rate_rps: g.f64(50.0, 600.0) },
+            8,
+            g.rng().next_u64(),
+        );
+        let inputs = HostTensor::zeros(vec![8, 4]);
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &cfg,
+            &requests,
+            &inputs,
+            std::slice::from_ref(&plan),
+        )
+        .map_err(|e| format!("engine errored: {e}"))?;
+        prop_assert_eq(report.completed.len() + report.dropped.len(), n_requests)?;
+        Ok(())
+    });
+}

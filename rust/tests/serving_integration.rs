@@ -92,6 +92,7 @@ fn multi_replica_pipelined_serving_isolates_failure() {
         fail_at_ms: 30.0,
         replicas: 2,
         pipeline_depth: 2,
+        monitored: false,
     };
     let report = run_e2e(&ctx, &p).unwrap();
 
