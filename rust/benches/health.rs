@@ -95,6 +95,7 @@ fn serving_case(health: HealthMode) -> (f64, usize, usize) {
         pipeline_depth: 4,
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(1.5),
+        record_completions: false,
     };
     let requests = generate(400, Arrival::Poisson { rate_rps: 500.0 }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -109,7 +110,7 @@ fn serving_case(health: HealthMode) -> (f64, usize, usize) {
     )
     .unwrap();
     assert_eq!(
-        report.completed.len() + report.dropped.len(),
+        report.completed_count + report.dropped.len(),
         400,
         "bench must conserve requests"
     );

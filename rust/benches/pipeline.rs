@@ -5,8 +5,11 @@
 //! saturating Poisson load — requests/sec for replica counts 1/2/4, each
 //! with pipelining off (`depth 1`, the seed's one-batch-in-flight regime)
 //! and on (`depth 4`). Emits machine-readable `BENCH_serving.json` for the
-//! perf trajectory; the acceptance floor is pipelined >= 2x sequential on
-//! the same single-replica workload.
+//! perf trajectory — including the allocations-per-event proxy (batches
+//! dispatched vs step plans actually allocated, which stays at the
+//! distinct-plan count thanks to the engine's PlanCache); the acceptance
+//! floor is pipelined >= 2x sequential on the same single-replica
+//! workload.
 //!
 //! Part 2 (needs `make artifacts`): end-to-end pipeline execution per
 //! technique over the real PJRT block executables (regenerates the latency
@@ -46,7 +49,16 @@ impl MetricsSource for StubMetrics {
     }
 }
 
-fn serving_case(replicas: usize, depth: usize) -> (f64, usize) {
+struct ServingCase {
+    throughput_rps: f64,
+    max_in_flight: usize,
+    events_processed: usize,
+    batches_dispatched: usize,
+    plans_allocated: usize,
+    plan_cache_hits: usize,
+}
+
+fn serving_case(replicas: usize, depth: usize) -> ServingCase {
     const NODES: usize = 4;
     const STAGE_MS: f64 = 5.0;
     const HOP_MS: f64 = 1.0;
@@ -63,6 +75,7 @@ fn serving_case(replicas: usize, depth: usize) -> (f64, usize) {
         pipeline_depth: depth,
         route: RoutePolicy::JoinShortestQueue,
         decision_ms_override: Some(1.5),
+        record_completions: false,
     };
     // Saturating Poisson load: ~1 ms inter-arrival against a 23 ms path.
     let requests = generate(400, Arrival::Poisson { rate_rps: 1000.0 }, 16, 42);
@@ -77,38 +90,65 @@ fn serving_case(replicas: usize, depth: usize) -> (f64, usize) {
         &[],
     )
     .unwrap();
-    assert_eq!(report.completed.len(), 400, "bench must serve everything");
-    (report.throughput_rps, report.max_in_flight)
+    assert_eq!(report.completed_count, 400, "bench must serve everything");
+    ServingCase {
+        throughput_rps: report.throughput_rps,
+        max_in_flight: report.max_in_flight,
+        events_processed: report.events_processed,
+        batches_dispatched: report.batches_dispatched,
+        plans_allocated: report.plan_cache_misses,
+        plan_cache_hits: report.plan_cache_hits,
+    }
 }
 
 fn serving_bench() {
     let mut t = Table::new(
         "bench: serving throughput — synthetic 4-node pipeline, saturating poisson",
-        &["replicas", "depth", "throughput rps", "peak in flight"],
+        &[
+            "replicas",
+            "depth",
+            "throughput rps",
+            "peak in flight",
+            "batches",
+            "plans alloc'd",
+        ],
     );
     let mut cases = Vec::new();
     let mut seed_equivalent_rps = 0.0;
     let mut pipelined_1r_rps = 0.0;
     for replicas in [1usize, 2, 4] {
         for depth in [1usize, 4] {
-            let (rps, peak) = serving_case(replicas, depth);
+            let c = serving_case(replicas, depth);
             if replicas == 1 && depth == 1 {
-                seed_equivalent_rps = rps;
+                seed_equivalent_rps = c.throughput_rps;
             }
             if replicas == 1 && depth == 4 {
-                pipelined_1r_rps = rps;
+                pipelined_1r_rps = c.throughput_rps;
             }
             t.row(&[
                 replicas.to_string(),
                 depth.to_string(),
-                f(rps, 1),
-                peak.to_string(),
+                f(c.throughput_rps, 1),
+                c.max_in_flight.to_string(),
+                c.batches_dispatched.to_string(),
+                c.plans_allocated.to_string(),
             ]);
+            // batches_dispatched vs plans_allocated is the allocations-
+            // per-event proxy: plans allocated stays at the distinct-plan
+            // count (1 per replica here) however many batches dispatch.
             cases.push(obj(&[
                 ("replicas", replicas.into()),
                 ("pipeline_depth", depth.into()),
-                ("throughput_rps", rps.into()),
-                ("max_in_flight", peak.into()),
+                ("throughput_rps", c.throughput_rps.into()),
+                ("max_in_flight", c.max_in_flight.into()),
+                ("events_processed", c.events_processed.into()),
+                ("batches_dispatched", c.batches_dispatched.into()),
+                ("plans_allocated", c.plans_allocated.into()),
+                ("plan_cache_hits", c.plan_cache_hits.into()),
+                (
+                    "plan_allocs_per_batch",
+                    (c.plans_allocated as f64 / c.batches_dispatched.max(1) as f64).into(),
+                ),
             ]));
         }
     }

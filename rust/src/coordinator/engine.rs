@@ -20,9 +20,33 @@
 //! abstraction; the [`SyntheticBackend`] swaps in fixed service times so
 //! the engine's scheduling logic is testable and benchmarkable without
 //! compiled artifacts.
+//!
+//! The per-event hot path is allocation-free in steady state:
+//!
+//! - **Step plans are cached** — a per-replica
+//!   [`PlanCache`](super::plan_cache::PlanCache) memoizes
+//!   `backend.steps(technique, failed)` behind `Rc<[Step]>`, so after one
+//!   miss per distinct (technique, failed-node) pair every dispatch and
+//!   failover switches plans by pointer (the hit/miss counters surface in
+//!   [`ServiceReport`]).
+//! - **Synthetic activations are shape-only** — a non-materializing
+//!   backend receives [`Activation::Shape`] handles (two integers), so
+//!   batch building and per-stage "copies" move no row data; the real
+//!   PJRT path still materializes tensors, gathered + padded in a single
+//!   allocation.
+//! - **In-flight batches live in a generational slab**
+//!   ([`crate::util::slab::Slab`]) — free-list slot reuse, O(1) access,
+//!   no hashing on stage start/done events, and stale events for retired
+//!   batches miss by generation.
+//! - **Metrics stream** — latency flows into a log-bucketed histogram +
+//!   online moments ([`crate::util::histogram::Streaming`]), so run
+//!   memory is O(1) in request count unless
+//!   [`EngineConfig::record_completions`] asks for exact per-request
+//!   records.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, VecDeque};
+use std::rc::Rc;
 
 use anyhow::Result;
 
@@ -30,13 +54,15 @@ use crate::cluster::failure::{Detector, FailurePlan, NodeCondition};
 use crate::cluster::sim::{steps_for, steps_for_chain, EdgeCluster, Step};
 use crate::dnn::variants::Technique;
 use crate::health::monitor::{simulate as simulate_monitor, HealthConfig, HealthEventKind};
-use crate::runtime::{HostTensor, UnitKind};
-use crate::util::stats::Summary;
+use crate::runtime::{Activation, HostTensor, ShapeOnly, UnitKind};
+use crate::util::histogram::Streaming;
+use crate::util::slab::{Slab, SlabKey};
 use crate::workload::Request;
 
 use super::batcher::{decide, BatcherConfig, Dispatch};
 use super::estimator::MetricsSource;
 use super::failover::Failover;
+use super::plan_cache::PlanCache;
 use super::router::{ReplicaLoad, RoutePolicy, Router};
 use super::service::{Completion, DroppedRequest, FailoverWindow, ServiceReport};
 
@@ -45,12 +71,21 @@ use super::service::{Completion, DroppedRequest, FailoverWindow, ServiceReport};
 pub trait StageBackend {
     /// Number of chain nodes (1-based ids `1..=num_nodes`).
     fn num_nodes(&self) -> usize;
-    /// Step sequence of a technique under an optional failure.
+    /// Step sequence of a technique under an optional failure. Called
+    /// once per distinct (technique, failure) pair — the engine caches
+    /// plans behind `Rc<[Step]>` and dispatches by pointer.
     fn steps(&self, tech: Technique, failed: Option<usize>) -> Vec<Step>;
     /// Execute one step's unit on a batch; returns output + compute ms.
-    fn run_stage(&mut self, step: Step, x: &HostTensor) -> Result<(HostTensor, f64)>;
+    fn run_stage(&mut self, step: Step, x: &Activation) -> Result<(Activation, f64)>;
     /// Modeled transfer time between hosts for an activation of `bytes`.
     fn transfer_ms(&mut self, from: usize, to: usize, bytes: usize) -> f64;
+    /// Whether this backend consumes materialized tensor data. When
+    /// `true` (the real cluster) the engine gathers request rows into a
+    /// real padded batch; when `false` (synthetic) it dispatches
+    /// shape-only handles and no row data is ever copied.
+    fn materializes(&self) -> bool {
+        true
+    }
     /// Ground-truth condition of a node (degraded stages run slower).
     fn condition(&self, node: usize) -> NodeCondition;
     fn set_condition(&mut self, node: usize, condition: NodeCondition);
@@ -68,8 +103,9 @@ impl StageBackend for EdgeCluster<'_> {
         steps_for(self.meta, tech, failed)
     }
 
-    fn run_stage(&mut self, step: Step, x: &HostTensor) -> Result<(HostTensor, f64)> {
-        EdgeCluster::execute_stage(self, step, x)
+    fn run_stage(&mut self, step: Step, x: &Activation) -> Result<(Activation, f64)> {
+        let (y, ms) = EdgeCluster::execute_stage(self, step, x.tensor()?)?;
+        Ok((Activation::Full(y), ms))
     }
 
     fn transfer_ms(&mut self, from: usize, to: usize, bytes: usize) -> f64 {
@@ -127,7 +163,7 @@ impl StageBackend for SyntheticBackend {
         steps_for_chain(self.num_nodes(), tech, failed)
     }
 
-    fn run_stage(&mut self, step: Step, x: &HostTensor) -> Result<(HostTensor, f64)> {
+    fn run_stage(&mut self, step: Step, x: &Activation) -> Result<(Activation, f64)> {
         if !StageBackend::is_up(self, step.host) {
             anyhow::bail!("step {:?} hosted on failed node {}", step.unit, step.host);
         }
@@ -136,6 +172,9 @@ impl StageBackend for SyntheticBackend {
             UnitKind::Exit(_) => self.exit_ms,
         };
         // A degraded host stretches its stage's service time in place.
+        // Identity compute: the output keeps the input's geometry, and
+        // cloning the shape-only handle the engine feeds this backend
+        // copies two integers — no row data moves.
         Ok((x.clone(), ms * self.conditions[step.host].slowdown()))
     }
 
@@ -147,6 +186,10 @@ impl StageBackend for SyntheticBackend {
         } else {
             self.hop_ms
         }
+    }
+
+    fn materializes(&self) -> bool {
+        false
     }
 
     fn condition(&self, node: usize) -> NodeCondition {
@@ -192,6 +235,13 @@ pub struct EngineConfig {
     /// keeping same-seed reports byte-identical (used by the determinism
     /// tests and benches).
     pub decision_ms_override: Option<f64>,
+    /// Keep one exact [`Completion`] record per served request in
+    /// [`ServiceReport::completed`]. Latency metrics always stream into
+    /// an O(1) histogram/moments accumulator; with this off (the
+    /// million-request serving regime) no per-request state accumulates
+    /// at all. Tests and the accuracy experiments turn it on to inspect
+    /// individual completions.
+    pub record_completions: bool,
 }
 
 impl EngineConfig {
@@ -205,6 +255,7 @@ impl EngineConfig {
             pipeline_depth: 1,
             route: RoutePolicy::RoundRobin,
             decision_ms_override: None,
+            record_completions: true,
         }
     }
 }
@@ -224,8 +275,8 @@ enum EventKind {
     /// The monitor (or oracle) cleared the node for reintegration.
     DetectRecovery { replica: usize, node: usize },
     BatcherTimeout { replica: usize },
-    StageStart { replica: usize, batch: usize },
-    StageDone { replica: usize, batch: usize },
+    StageStart { replica: usize, batch: SlabKey },
+    StageDone { replica: usize, batch: SlabKey },
 }
 
 #[derive(Debug)]
@@ -315,8 +366,11 @@ impl ReplicaState {
 struct BatchInFlight {
     requests: Vec<Request>,
     /// Current activation (input at stage 0, transformed stage by stage).
-    x: HostTensor,
-    steps: Vec<Step>,
+    /// Shape-only on the synthetic path — see [`StageBackend::materializes`].
+    x: Activation,
+    /// Cached step plan, shared by pointer with the replica's
+    /// [`PlanCache`] — dispatching a batch allocates no plan.
+    steps: Rc<[Step]>,
     /// Index of the next stage to start (or the one currently running,
     /// between its StageStart and StageDone events).
     stage: usize,
@@ -334,12 +388,23 @@ struct Engine<'a, B: StageBackend> {
     heap: BinaryHeap<Event>,
     seq: u64,
     states: Vec<ReplicaState>,
-    batches: HashMap<usize, BatchInFlight>,
-    next_batch: usize,
+    /// In-flight batches in a generational slab: slot reuse, O(1) access,
+    /// and stale stage events for retired batches miss by generation.
+    batches: Slab<BatchInFlight>,
+    /// One step-plan memo per replica.
+    plan_caches: Vec<PlanCache>,
+    /// Scratch row-index buffer reused across materializing dispatches.
+    pad_idxs: Vec<usize>,
+    /// Streaming latency metrics (histogram + online moments): O(1)
+    /// memory however many requests complete.
+    latency: Streaming,
     completed: Vec<Completion>,
+    completed_count: usize,
     dropped: Vec<DroppedRequest>,
     windows: Vec<FailoverWindow>,
     max_in_flight: usize,
+    batches_dispatched: usize,
+    events_processed: usize,
     clock_ms: f64,
     /// Arrival events not yet processed; when this hits zero and no work
     /// remains, the run ends (later failure events never fire — the
@@ -379,6 +444,7 @@ pub fn serve<B: StageBackend>(
         .iter()
         .map(|b| ReplicaState::new(b.num_nodes()))
         .collect();
+    let plan_caches: Vec<PlanCache> = backends.iter().map(|_| PlanCache::new()).collect();
     let mut eng = Engine {
         backends,
         failovers,
@@ -389,12 +455,17 @@ pub fn serve<B: StageBackend>(
         heap: BinaryHeap::new(),
         seq: 0,
         states,
-        batches: HashMap::new(),
-        next_batch: 0,
+        batches: Slab::new(),
+        plan_caches,
+        pad_idxs: Vec::new(),
+        latency: Streaming::default(),
         completed: Vec::new(),
+        completed_count: 0,
         dropped: Vec::new(),
         windows: Vec::new(),
         max_in_flight: 0,
+        batches_dispatched: 0,
+        events_processed: 0,
         clock_ms: 0.0,
         remaining_arrivals: requests.len(),
     };
@@ -483,6 +554,7 @@ impl<B: StageBackend> Engine<'_, B> {
 
     fn run(mut self) -> Result<ServiceReport> {
         while let Some(ev) = self.heap.pop() {
+            self.events_processed += 1;
             self.clock_ms = self.clock_ms.max(ev.at_ms);
             let t = self.clock_ms;
             match ev.kind {
@@ -574,29 +646,37 @@ impl<B: StageBackend> Engine<'_, B> {
             }
         }
 
-        let latencies: Vec<f64> = self.completed.iter().map(|c| c.latency_ms).collect();
         let span = self.clock_ms.max(1e-9);
+        let (plan_hits, plan_misses) = self
+            .plan_caches
+            .iter()
+            .fold((0, 0), |(h, m), c| (h + c.hits(), m + c.misses()));
         Ok(ServiceReport {
-            throughput_rps: self.completed.len() as f64 / (span / 1e3),
-            latency: Summary::of(&latencies),
+            throughput_rps: self.completed_count as f64 / (span / 1e3),
+            latency: self.latency.summary(),
             completed: self.completed,
+            completed_count: self.completed_count,
             dropped: self.dropped,
             failovers: self.windows,
             sim_span_ms: span,
             max_in_flight: self.max_in_flight,
+            events_processed: self.events_processed,
+            batches_dispatched: self.batches_dispatched,
+            plan_cache_hits: plan_hits,
+            plan_cache_misses: plan_misses,
         })
     }
 
     /// A batch reaches stage `b.stage`: requeue it if the host died while
     /// it was in flight, wait if the host is busy with an earlier batch,
     /// else run the real unit and schedule the stage completion.
-    fn on_stage_start(&mut self, replica: usize, batch: usize, t: f64) -> Result<()> {
-        let step = match self.batches.get(&batch) {
+    fn on_stage_start(&mut self, replica: usize, batch: SlabKey, t: f64) -> Result<()> {
+        let step = match self.batches.get(batch) {
             Some(b) => b.steps[b.stage],
             None => return Ok(()),
         };
         if !self.backends[replica].is_up(step.host) {
-            let b = self.batches.remove(&batch).unwrap();
+            let b = self.batches.remove(batch).unwrap();
             let st = &mut self.states[replica];
             st.in_flight_batches -= 1;
             st.in_flight_reqs -= b.requests.len();
@@ -611,42 +691,52 @@ impl<B: StageBackend> Engine<'_, B> {
             self.push(free_at, EventKind::StageStart { replica, batch });
             return Ok(());
         }
-        let mut b = self.batches.remove(&batch).unwrap();
+        // Run the stage in place: the batch stays in its slab slot (the
+        // old HashMap path removed and reinserted it around every stage).
+        let b = self.batches.get_mut(batch).unwrap();
         let (y, ms) = self.backends[replica].run_stage(step, &b.x)?;
         b.x = y;
         self.states[replica].busy_until[step.host] = t + ms;
         self.push(t + ms, EventKind::StageDone { replica, batch });
-        self.batches.insert(batch, b);
         Ok(())
     }
 
     /// A batch's current stage finished: move to the next stage (after the
     /// modeled transfer) or complete every request in the batch.
-    fn on_stage_done(&mut self, replica: usize, batch: usize, t: f64) -> Result<()> {
-        let mut b = match self.batches.remove(&batch) {
-            Some(b) => b,
+    fn on_stage_done(&mut self, replica: usize, batch: SlabKey, t: f64) -> Result<()> {
+        let finished = match self.batches.get_mut(batch) {
+            Some(b) => {
+                b.stage += 1;
+                b.stage >= b.steps.len()
+            }
             None => return Ok(()),
         };
-        b.stage += 1;
-        if b.stage >= b.steps.len() {
+        if finished {
+            let b = self.batches.remove(batch).unwrap();
             let st = &mut self.states[replica];
             st.in_flight_batches -= 1;
             st.in_flight_reqs -= b.requests.len();
             for q in &b.requests {
-                self.completed.push(Completion {
-                    id: q.id,
-                    replica,
-                    latency_ms: t - q.arrival_ms,
-                    technique: b.technique,
-                    batch_size: b.target_batch,
-                });
+                let latency_ms = t - q.arrival_ms;
+                self.latency.record(latency_ms);
+                self.completed_count += 1;
+                if self.cfg.record_completions {
+                    self.completed.push(Completion {
+                        id: q.id,
+                        replica,
+                        latency_ms,
+                        technique: b.technique,
+                        batch_size: b.target_batch,
+                    });
+                }
             }
             self.try_dispatch(replica, t)
         } else {
+            let b = self.batches.get(batch).unwrap();
             let from = b.steps[b.stage - 1].host;
             let to = b.steps[b.stage].host;
-            let tr = self.backends[replica].transfer_ms(from, to, b.x.bytes());
-            self.batches.insert(batch, b);
+            let bytes = b.x.bytes();
+            let tr = self.backends[replica].transfer_ms(from, to, bytes);
             self.push(t + tr, EventKind::StageStart { replica, batch });
             Ok(())
         }
@@ -670,7 +760,9 @@ impl<B: StageBackend> Engine<'_, B> {
                 .technique()
                 .unwrap_or(Technique::Repartition);
             let failed = self.failovers[r].failed_node();
-            let steps = self.backends[r].steps(technique, failed);
+            // Cached: after warm-up this is a pointer copy, not a fresh
+            // Vec<Step> per batch.
+            let steps = self.plan_caches[r].plan(&self.backends[r], technique, failed);
             if steps.iter().any(|s| !self.backends[r].is_up(s.host)) {
                 // A raw failure the controller has not yet detected (or an
                 // overlapping failure the mode cannot route around): hold
@@ -685,9 +777,6 @@ impl<B: StageBackend> Engine<'_, B> {
                     for _ in 0..take {
                         reqs.push(self.states[r].queue.pop_front().unwrap());
                     }
-                    // Pad to the compiled batch size with copies of the
-                    // first row, built in ONE concat0 (the old loop paid a
-                    // full tensor copy per pad row).
                     let target = self
                         .cfg
                         .batcher
@@ -696,34 +785,38 @@ impl<B: StageBackend> Engine<'_, B> {
                         .copied()
                         .find(|&s| s >= take)
                         .unwrap_or(take);
-                    let mut rows: Vec<HostTensor> = Vec::with_capacity(target);
-                    for q in &reqs {
-                        rows.push(self.inputs.slice0(q.input_idx, q.input_idx + 1)?);
-                    }
-                    while rows.len() < target {
-                        rows.push(rows[0].clone());
-                    }
-                    let x = HostTensor::concat0(&rows)?;
+                    let x = if self.backends[r].materializes() {
+                        // Real path: gather the request rows, padded to
+                        // the compiled batch size by repeating the first,
+                        // in ONE output allocation (the old loop sliced a
+                        // tensor per row and padded with deep clones).
+                        self.pad_idxs.clear();
+                        self.pad_idxs.extend(reqs.iter().map(|q| q.input_idx));
+                        Activation::Full(self.inputs.gather_pad_rows0(&self.pad_idxs, target)?)
+                    } else {
+                        // Synthetic path: the scheduler only reads batch
+                        // geometry — no row data is copied, ever.
+                        Activation::Shape(ShapeOnly {
+                            rows: target,
+                            row_elems: self.inputs.row_elems(),
+                        })
+                    };
                     let technique_tag = self.failovers[r].technique();
-                    let id = self.next_batch;
-                    self.next_batch += 1;
                     self.states[r].in_flight_batches += 1;
                     self.states[r].in_flight_reqs += reqs.len();
                     if self.states[r].in_flight_batches > self.max_in_flight {
                         self.max_in_flight = self.states[r].in_flight_batches;
                     }
-                    self.batches.insert(
-                        id,
-                        BatchInFlight {
-                            requests: reqs,
-                            x,
-                            steps,
-                            stage: 0,
-                            technique: technique_tag,
-                            target_batch: target,
-                        },
-                    );
-                    self.push(t, EventKind::StageStart { replica: r, batch: id });
+                    self.batches_dispatched += 1;
+                    let key = self.batches.insert(BatchInFlight {
+                        requests: reqs,
+                        x,
+                        steps,
+                        stage: 0,
+                        technique: technique_tag,
+                        target_batch: target,
+                    });
+                    self.push(t, EventKind::StageStart { replica: r, batch: key });
                 }
                 Dispatch::Wait => {
                     // decide() only waits while the head is younger than
@@ -779,6 +872,7 @@ mod tests {
             pipeline_depth: depth,
             route,
             decision_ms_override: Some(1.5),
+            record_completions: true,
         }
     }
 
@@ -791,6 +885,7 @@ mod tests {
             pipeline_depth: depth,
             route: RoutePolicy::RoundRobin,
             decision_ms_override: Some(1.5),
+            record_completions: true,
         }
     }
 
@@ -971,6 +1066,96 @@ mod tests {
             assert!(d.dropped_at_ms - d.arrival_ms > 40.0);
             assert!(!d.degraded, "healthy run: drops attributed to healthy mode");
         }
+    }
+
+    #[test]
+    fn steady_state_dispatch_allocates_no_plans_after_warmup() {
+        // Healthy run: exactly one step-plan allocation total, however
+        // many batches dispatch — everything after warm-up is a cache hit.
+        let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+        let mut failovers = vec![Failover::new(Objectives::default())];
+        let reqs = generate(200, Arrival::Uniform { gap_ms: 1.0 }, 8, 17);
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &cfg(2, RoutePolicy::RoundRobin),
+            &reqs,
+            &pool(),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(report.completed_count, 200);
+        assert!(report.batches_dispatched >= 200, "batch size 1");
+        assert_eq!(report.plan_cache_misses, 1, "one allocation at warm-up");
+        assert_eq!(
+            report.plan_cache_hits,
+            report.batches_dispatched - 1,
+            "every post-warm-up dispatch reuses the cached plan"
+        );
+    }
+
+    #[test]
+    fn plan_allocations_scale_with_distinct_plans_not_load() {
+        // Crash + recovery touches exactly two plans (healthy, degraded);
+        // 8x the traffic must not add a single further allocation.
+        let run = |n: usize| {
+            let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+            let mut failovers = vec![Failover::new(Objectives::default())];
+            let reqs = generate(n, Arrival::Uniform { gap_ms: 1.0 }, 8, 23);
+            serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &cfg(2, RoutePolicy::RoundRobin),
+                &reqs,
+                &pool(),
+                &[FailurePlan::crash_recover(3, 20.0, 60.0)],
+            )
+            .unwrap()
+        };
+        let small = run(50);
+        let large = run(400);
+        assert_eq!(small.failovers.len(), 1);
+        assert_eq!(small.plan_cache_misses, 2, "healthy + degraded");
+        assert_eq!(
+            large.plan_cache_misses, small.plan_cache_misses,
+            "plan allocations are per distinct plan, not per batch"
+        );
+        assert!(large.plan_cache_hits > small.plan_cache_hits);
+    }
+
+    #[test]
+    fn streaming_mode_keeps_no_per_request_records() {
+        let run = |record: bool| {
+            let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+            let mut failovers = vec![Failover::new(Objectives::default())];
+            let reqs = generate(60, Arrival::Poisson { rate_rps: 300.0 }, 8, 31);
+            let mut c = cfg(2, RoutePolicy::RoundRobin);
+            c.record_completions = record;
+            serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &c,
+                &reqs,
+                &pool(),
+                &[FailurePlan::crash_recover(2, 30.0, 50.0)],
+            )
+            .unwrap()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert_eq!(on.completed.len(), on.completed_count);
+        assert!(off.completed.is_empty(), "streaming keeps no Completion records");
+        assert_eq!(off.completed_count, on.completed_count);
+        // The streamed summary and counters are byte-identical to the
+        // recording run's — recording only adds the per-request vector.
+        assert_eq!(format!("{:?}", on.latency), format!("{:?}", off.latency));
+        assert_eq!(on.throughput_rps, off.throughput_rps);
+        assert_eq!(on.batches_dispatched, off.batches_dispatched);
+        assert_eq!(on.events_processed, off.events_processed);
+        assert_eq!(format!("{:?}", on.failovers), format!("{:?}", off.failovers));
     }
 
     #[test]

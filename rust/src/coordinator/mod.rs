@@ -25,11 +25,22 @@
 //!   shards fail independently.
 //! - [`service`] holds the report types and the seed-compatible
 //!   single-pipeline entry point.
+//!
+//! The engine's steady-state hot path allocates nothing per event: step
+//! plans are memoized per replica in a [`plan_cache::PlanCache`]
+//! (`Rc<[Step]>`, one miss per distinct technique/failure pair),
+//! in-flight batches live in a generational slab whose slots are
+//! free-list reused, synthetic-path activations are shape-only handles
+//! (the real PJRT path materializes its batch in one gather), and
+//! latency metrics stream into a log-bucketed histogram + online moments
+//! instead of a grow-forever completion vector (exact records return
+//! behind `EngineConfig::record_completions`).
 
 pub mod batcher;
 pub mod engine;
 pub mod estimator;
 pub mod failover;
+pub mod plan_cache;
 pub mod policy;
 pub mod profiler;
 pub mod router;
@@ -37,6 +48,7 @@ pub mod scheduler;
 pub mod service;
 
 pub use engine::{serve, EngineConfig, HealthMode, StageBackend, SyntheticBackend};
+pub use plan_cache::PlanCache;
 pub use estimator::{Estimator, MetricsSource, StaticMetrics};
 pub use failover::{Failover, FailoverReport, Mode};
 pub use policy::{Continuer, RecoveryPolicy};

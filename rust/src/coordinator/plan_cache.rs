@@ -1,0 +1,111 @@
+//! Step-plan cache for the serving hot path.
+//!
+//! A replica's step plan depends only on `(technique, failed_node)` — the
+//! chain layout is fixed for the run — yet the engine used to re-derive
+//! and re-allocate a fresh `Vec<Step>` from the backend on *every* batch
+//! dispatch. [`PlanCache`] memoizes each plan behind an `Rc<[Step]>`, so
+//! steady-state dispatch and failover switch plans by pointer: after
+//! warm-up (one miss per distinct technique/failure pair) dispatch
+//! performs zero step-plan allocations, which the hit/miss counters let
+//! tests and benches assert directly.
+//!
+//! Lookup is a linear scan over the few plans a run ever sees (healthy
+//! plus one per failover decision) — deliberately no hashing on the
+//! per-batch path.
+
+use std::rc::Rc;
+
+use crate::cluster::sim::Step;
+use crate::dnn::variants::Technique;
+
+use super::engine::StageBackend;
+
+/// Per-replica memo of `backend.steps(technique, failed)` results.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    entries: Vec<((Technique, Option<usize>), Rc<[Step]>)>,
+    hits: usize,
+    misses: usize,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The step plan for `(tech, failed)`, deriving and caching it on
+    /// first sight. The returned `Rc` is a pointer copy on a hit.
+    pub fn plan<B: StageBackend + ?Sized>(
+        &mut self,
+        backend: &B,
+        tech: Technique,
+        failed: Option<usize>,
+    ) -> Rc<[Step]> {
+        let key = (tech, failed);
+        if let Some((_, steps)) = self.entries.iter().find(|(k, _)| *k == key) {
+            self.hits += 1;
+            return Rc::clone(steps);
+        }
+        self.misses += 1;
+        let steps: Rc<[Step]> = backend.steps(tech, failed).into();
+        self.entries.push((key, Rc::clone(&steps)));
+        steps
+    }
+
+    /// Lookups served from the cache (no allocation).
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Lookups that derived a fresh plan (one allocation each).
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Distinct plans held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::SyntheticBackend;
+
+    #[test]
+    fn repeated_lookups_hit_after_one_miss() {
+        let backend = SyntheticBackend::uniform(4, 5.0, 1.0);
+        let mut cache = PlanCache::new();
+        let first = cache.plan(&backend, Technique::Repartition, None);
+        for _ in 0..99 {
+            let again = cache.plan(&backend, Technique::Repartition, None);
+            assert!(Rc::ptr_eq(&first, &again), "hits must be pointer copies");
+        }
+        assert_eq!(cache.misses(), 1, "one allocation at warm-up");
+        assert_eq!(cache.hits(), 99, "every later dispatch reuses it");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_failure_keys_get_distinct_plans() {
+        let backend = SyntheticBackend::uniform(4, 5.0, 1.0);
+        let mut cache = PlanCache::new();
+        let healthy = cache.plan(&backend, Technique::Repartition, None);
+        let skip = cache.plan(&backend, Technique::SkipConnection(2), Some(2));
+        let repart = cache.plan(&backend, Technique::Repartition, Some(2));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 0);
+        assert_eq!(healthy.len(), 4);
+        assert_eq!(skip.len(), 3, "skip drops the failed node's stage");
+        assert!(repart.iter().all(|s| s.host != 2), "repartition re-hosts");
+        // Returning to a previously seen key is a hit, not a new plan.
+        cache.plan(&backend, Technique::Repartition, None);
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.hits(), 1);
+    }
+}

@@ -79,10 +79,20 @@ impl FailoverWindow {
 /// Aggregate report of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServiceReport {
+    /// Exact per-request records — populated only when
+    /// [`EngineConfig::record_completions`](super::engine::EngineConfig)
+    /// is on; empty in the default streaming-metrics regime, where
+    /// [`Self::completed_count`] and [`Self::latency`] carry the same
+    /// information in O(1) memory.
     pub completed: Vec<Completion>,
+    /// Requests served, counted whether or not records are kept.
+    pub completed_count: usize,
     /// Every dropped request with its arrival time and serving mode (the
     /// seed kept only a bare counter).
     pub dropped: Vec<DroppedRequest>,
+    /// Latency summary: mean/std/min/max exact (streamed online),
+    /// percentiles from the log-bucketed histogram (within one bucket's
+    /// relative error, 2%).
     pub latency: Summary,
     pub throughput_rps: f64,
     pub failovers: Vec<FailoverWindow>,
@@ -90,6 +100,17 @@ pub struct ServiceReport {
     /// Peak number of batches concurrently in flight on any one replica
     /// (1 in the seed-equivalent non-pipelined configuration).
     pub max_in_flight: usize,
+    /// Total events popped off the queue — the denominator for the
+    /// engine's events/sec and allocations-per-event numbers.
+    pub events_processed: usize,
+    /// Batches sent down a pipeline (each reused a cached step plan).
+    pub batches_dispatched: usize,
+    /// Step-plan lookups served from the per-replica caches without
+    /// allocating.
+    pub plan_cache_hits: usize,
+    /// Step plans actually derived and allocated (one per distinct
+    /// technique/failed-node pair per replica — the warm-up cost).
+    pub plan_cache_misses: usize,
 }
 
 impl ServiceReport {

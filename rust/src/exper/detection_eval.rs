@@ -86,6 +86,8 @@ fn run_point_with(
         pipeline_depth: 2,
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(2.0),
+        // The sweep reads only aggregates — stream, keep no records.
+        record_completions: false,
     };
     let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
     let mut failovers = vec![Failover::new(Objectives::default())];

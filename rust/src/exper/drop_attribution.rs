@@ -106,6 +106,9 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
         pipeline_depth: 2,
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(2.0),
+        // Drop classification reads `dropped` and counts — stream the
+        // completions instead of recording them.
+        record_completions: false,
     };
     let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
     let mut failovers = vec![Failover::new(Objectives::default())];
@@ -129,7 +132,7 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
         .count();
     let point = DeadlinePoint {
         deadline_ms,
-        completed: report.completed.len(),
+        completed: report.completed_count,
         dropped_inside: inside,
         dropped_outside: report.dropped.len() - inside,
         dropped_degraded: report.degraded_drops(),

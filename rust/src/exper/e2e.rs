@@ -151,6 +151,9 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         pipeline_depth: p.pipeline_depth,
         route: RoutePolicy::JoinShortestQueue,
         decision_ms_override: None,
+        // The report splits healthy vs degraded completions below, so
+        // keep exact per-request records.
+        record_completions: true,
     };
     serve(
         &mut clusters,
@@ -168,7 +171,7 @@ pub fn print_report(p: &E2eParams, report: &ServiceReport) {
         &format!("E2E serving report — {}", p.model),
         &["metric", "value"],
     );
-    t.row(&["requests completed".into(), report.completed.len().to_string()]);
+    t.row(&["requests completed".into(), report.completed_count.to_string()]);
     t.row(&[
         "requests dropped".into(),
         format!(
@@ -243,6 +246,16 @@ pub fn print_report(p: &E2eParams, report: &ServiceReport) {
 }
 
 pub fn run_default(ctx: &ExpContext) -> Result<()> {
+    run_n(ctx, 60)
+}
+
+/// Like [`run_default`] but with the request count taken from the CLI
+/// (`continuer serve --requests N`), so large request scales — up to the
+/// million-request configuration — are reproducible end to end. Note the
+/// e2e report keeps exact per-request records for its healthy/degraded
+/// split (`record_completions` on, memory linear in N); the O(1)-memory
+/// streaming regime at scale is exercised by `benches/engine_scale.rs`.
+pub fn run_n(ctx: &ExpContext, n_requests: usize) -> Result<()> {
     let model = ctx.config.model.clone();
     let meta = ctx.store.model(&model)?;
     // Fail a mid-pipeline skippable node so all three techniques compete.
@@ -251,7 +264,7 @@ pub fn run_default(ctx: &ExpContext) -> Result<()> {
         .get(meta.skippable_nodes.len() / 2)
         .copied()
         .unwrap_or(meta.num_nodes / 2);
-    let p = E2eParams::single(model, 60, 6.0, fail_node, 4000.0);
+    let p = E2eParams::single(model, n_requests, 6.0, fail_node, 4000.0);
     let report = run_e2e(ctx, &p)?;
     print_report(&p, &report);
     Ok(())

@@ -32,7 +32,14 @@
 //!   `pipeline_depth` batches in flight per replica, throughput set by
 //!   the bottleneck stage) across `R` pipeline replicas behind a
 //!   round-robin / join-shortest-queue router, with per-replica failure
-//!   injection and failover.
+//!   injection and failover. The engine's steady-state hot path is
+//!   allocation-free: step plans are cached (`PlanCache`, `Rc<[Step]>`),
+//!   in-flight batches live in a generational slab with free-list slot
+//!   reuse, synthetic activations are shape-only handles (the real PJRT
+//!   path materializes batches in one gather), and latency metrics
+//!   stream into a log-bucketed histogram + online moments so run memory
+//!   is O(1) in request count (exact per-request records return behind
+//!   `EngineConfig::record_completions`).
 //! - [`workload`], [`baselines`], [`exper`] support the evaluation: load
 //!   generators (with per-replica stream helpers), comparison policies
 //!   (all implementing the same [`coordinator::RecoveryPolicy`] trait

@@ -84,10 +84,11 @@ fn main() -> Result<()> {
             exper::run(&id, &ctx)
         }
         "serve" => {
+            let n_requests = args.get_usize("requests", 60)?;
             let cfg = build_config(&args)?;
             exper::require_artifacts(&cfg.artifacts_dir)?;
             let ctx = ExpContext::open(cfg)?;
-            exper::e2e::run_default(&ctx)
+            exper::e2e::run_n(&ctx, n_requests)
         }
         "profile" => {
             let cfg = build_config(&args)?;
@@ -137,5 +138,6 @@ OPTIONS
   --artifacts <dir>  artifacts directory (default ./artifacts)
   --config <file>    TOML config file
   --model <name>     resnet32 | mobilenetv2 (for serve)
+  --requests <n>     request count for serve (default 60)
   --seed <n>         simulation seed
   --reps <n>         profiling repetitions";

@@ -7,4 +7,4 @@ pub mod tensor;
 
 pub use artifact::{ArtifactStore, MicroEntry, UnitKind};
 pub use pjrt::{Engine, UnitExecutable};
-pub use tensor::HostTensor;
+pub use tensor::{Activation, HostTensor, ShapeOnly};

@@ -39,6 +39,11 @@ impl HostTensor {
         self.data.len() * 4
     }
 
+    /// Elements per leading-axis row (product of the trailing dims).
+    pub fn row_elems(&self) -> usize {
+        self.shape[1..].iter().product()
+    }
+
     /// Leading-axis slice [lo, hi): e.g. a batch sub-range.
     pub fn slice0(&self, lo: usize, hi: usize) -> Result<HostTensor> {
         if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
@@ -58,16 +63,48 @@ impl HostTensor {
         let first = parts.first().ok_or_else(|| anyhow!("concat0 of nothing"))?;
         let trailing = &first.shape[1..];
         let mut n0 = 0;
-        let mut data = Vec::new();
         for p in parts {
             if &p.shape[1..] != trailing {
                 bail!("concat0: trailing shape mismatch");
             }
             n0 += p.shape[0];
+        }
+        let mut data = Vec::with_capacity(parts.iter().map(|p| p.data.len()).sum());
+        for p in parts {
             data.extend_from_slice(&p.data);
         }
         let mut shape = first.shape.clone();
         shape[0] = n0;
+        HostTensor::new(shape, data)
+    }
+
+    /// Build a batch by gathering single leading-axis rows `idxs`, padded
+    /// to `target` rows by repeating the first gathered row — one output
+    /// allocation, no intermediate per-row tensors. This is the serving
+    /// engine's dispatch path: requests index rows of the input pool and
+    /// the compiled batch size may exceed the dispatched request count.
+    pub fn gather_pad_rows0(&self, idxs: &[usize], target: usize) -> Result<HostTensor> {
+        let first = *idxs.first().ok_or_else(|| anyhow!("gather of no rows"))?;
+        if target < idxs.len() {
+            bail!("target {} smaller than {} gathered rows", target, idxs.len());
+        }
+        let n0 = *self
+            .shape
+            .first()
+            .ok_or_else(|| anyhow!("gather from a rank-0 tensor"))?;
+        let row = self.row_elems();
+        let mut data = Vec::with_capacity(target * row);
+        for &i in idxs {
+            if i >= n0 {
+                bail!("row {i} out of range for shape {:?}", self.shape);
+            }
+            data.extend_from_slice(&self.data[i * row..(i + 1) * row]);
+        }
+        for _ in idxs.len()..target {
+            data.extend_from_slice(&self.data[first * row..(first + 1) * row]);
+        }
+        let mut shape = self.shape.clone();
+        shape[0] = target;
         HostTensor::new(shape, data)
     }
 
@@ -84,6 +121,81 @@ impl HostTensor {
                     .unwrap_or(0)
             })
             .collect()
+    }
+}
+
+/// Shape-only stand-in for an activation: what the serving scheduler
+/// actually consumes (row count for batching, byte size for transfer
+/// modeling). Cloning copies two integers — no heap traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeOnly {
+    /// Leading-axis (batch) size.
+    pub rows: usize,
+    /// Elements per row (product of the trailing dims).
+    pub row_elems: usize,
+}
+
+impl ShapeOnly {
+    pub fn elems(&self) -> usize {
+        self.rows * self.row_elems
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// An activation flowing between pipeline stages, as the serving engine
+/// tracks it: materialized f32 data on the real PJRT path, a [`ShapeOnly`]
+/// handle on the synthetic path (where stages are identity and the
+/// scheduler only ever reads the byte size). The handle variant makes a
+/// per-stage "copy" of the activation allocation-free.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Activation {
+    Full(HostTensor),
+    Shape(ShapeOnly),
+}
+
+impl Activation {
+    /// Shape-only view of `t`'s batch geometry.
+    pub fn shape_of(t: &HostTensor) -> Activation {
+        Activation::Shape(ShapeOnly {
+            rows: *t.shape.first().unwrap_or(&1),
+            row_elems: t.row_elems(),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Activation::Full(t) => *t.shape.first().unwrap_or(&1),
+            Activation::Shape(s) => s.rows,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            Activation::Full(t) => t.bytes(),
+            Activation::Shape(s) => s.bytes(),
+        }
+    }
+
+    /// The materialized tensor, or an error on a shape-only handle (a
+    /// materializing backend was handed a synthetic activation).
+    pub fn tensor(&self) -> Result<&HostTensor> {
+        match self {
+            Activation::Full(t) => Ok(t),
+            Activation::Shape(s) => bail!(
+                "shape-only activation ({} x {} elems) has no data to materialize",
+                s.rows,
+                s.row_elems
+            ),
+        }
+    }
+}
+
+impl From<HostTensor> for Activation {
+    fn from(t: HostTensor) -> Activation {
+        Activation::Full(t)
     }
 }
 
@@ -136,6 +248,42 @@ mod tests {
         let b = t.slice0(2, 4).unwrap();
         assert_eq!(a.shape, vec![2, 2]);
         assert_eq!(HostTensor::concat0(&[a, b]).unwrap(), t);
+    }
+
+    #[test]
+    fn gather_pad_matches_slice_concat() {
+        let pool = HostTensor::new(vec![4, 2], (0..8).map(|i| i as f32).collect()).unwrap();
+        // The old dispatch path: slice each request row, pad with clones
+        // of the first, concat once.
+        let rows = vec![
+            pool.slice0(2, 3).unwrap(),
+            pool.slice0(0, 1).unwrap(),
+            pool.slice0(2, 3).unwrap(),
+            pool.slice0(2, 3).unwrap(),
+        ];
+        let old = HostTensor::concat0(&rows).unwrap();
+        let new = pool.gather_pad_rows0(&[2, 0], 4).unwrap();
+        assert_eq!(new, old);
+        assert_eq!(new.shape, vec![4, 2]);
+        // No padding when target == gathered rows.
+        let exact = pool.gather_pad_rows0(&[1, 3], 2).unwrap();
+        assert_eq!(exact.data, vec![2.0, 3.0, 6.0, 7.0]);
+        // Bounds are enforced.
+        assert!(pool.gather_pad_rows0(&[4], 1).is_err());
+        assert!(pool.gather_pad_rows0(&[0, 1], 1).is_err());
+        assert!(pool.gather_pad_rows0(&[], 2).is_err());
+    }
+
+    #[test]
+    fn activation_bytes_and_rows_agree_across_variants() {
+        let t = HostTensor::zeros(vec![3, 5]);
+        let full = Activation::Full(t.clone());
+        let shape = Activation::shape_of(&t);
+        assert_eq!(full.rows(), 3);
+        assert_eq!(shape.rows(), 3);
+        assert_eq!(full.bytes(), shape.bytes());
+        assert!(full.tensor().is_ok());
+        assert!(shape.tensor().is_err(), "shape-only has no data");
     }
 
     #[test]

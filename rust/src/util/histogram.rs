@@ -1,0 +1,243 @@
+//! Streaming latency metrics: a log-bucketed histogram plus an online
+//! mean/variance accumulator, so a serving run's metric memory is O(1)
+//! in request count instead of one `Completion` per request.
+//!
+//! [`LogHistogram`] buckets values geometrically: bucket `i` covers
+//! `[min_value * growth^i, min_value * growth^(i+1))`, so any quantile
+//! read back is within one bucket's *relative* width (`growth - 1`,
+//! 2% at the default) of the exact order statistic — the right error
+//! model for latencies, where tail accuracy should scale with the value.
+//! [`Streaming`] combines the histogram with Welford's online mean and
+//! variance and exact min/max, and renders the same [`Summary`] shape the
+//! sorted-vector path produced.
+
+use super::stats::Summary;
+
+/// Log-bucketed histogram with a fixed relative error per bucket.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Values at or below this land in a dedicated low bucket and read
+    /// back as `min_value` (latencies below one microsecond are noise).
+    min_value: f64,
+    /// Geometric bucket width; `growth - 1` is the relative error bound.
+    growth: f64,
+    inv_ln_growth: f64,
+    /// Hard cap on bucket count; larger values saturate into the last
+    /// bucket instead of growing the vector without bound.
+    max_buckets: usize,
+    counts: Vec<u64>,
+    low: u64,
+    total: u64,
+}
+
+impl LogHistogram {
+    pub fn new(min_value: f64, growth: f64, max_buckets: usize) -> LogHistogram {
+        assert!(min_value > 0.0, "min_value must be positive");
+        assert!(growth > 1.0, "growth must exceed 1");
+        assert!(max_buckets >= 1, "need at least one bucket");
+        LogHistogram {
+            min_value,
+            growth,
+            inv_ln_growth: 1.0 / growth.ln(),
+            max_buckets,
+            counts: Vec::new(),
+            low: 0,
+            total: 0,
+        }
+    }
+
+    /// Defaults tuned for millisecond latencies: 1 µs floor, 2% relative
+    /// error, and enough buckets to span past 10^14 ms.
+    pub fn latency_default() -> LogHistogram {
+        LogHistogram::new(1e-3, 1.02, 2048)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.total += 1;
+        // NaN and values at or below the floor land in the low bucket.
+        if v.is_nan() || v <= self.min_value {
+            self.low += 1;
+            return;
+        }
+        // `as usize` truncates toward zero (a floor, v > min_value here)
+        // and saturates +inf into the top bucket.
+        let idx = ((v / self.min_value).ln() * self.inv_ln_growth) as usize;
+        let idx = idx.min(self.max_buckets - 1);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// One bucket's relative width — the quantile error bound.
+    pub fn relative_error(&self) -> f64 {
+        self.growth - 1.0
+    }
+
+    /// Approximate percentile, `q` in [0, 100]: the geometric midpoint of
+    /// the bucket holding the rank-`ceil(q/100 * n)` order statistic, so
+    /// the result is within one bucket's relative width of that exact
+    /// order statistic. Returns 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.total);
+        let mut cum = self.low;
+        if cum >= rank {
+            return self.min_value;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return self.min_value * self.growth.powi(i as i32) * self.growth.sqrt();
+            }
+        }
+        // Unreachable when counts are consistent; saturate at the top edge.
+        self.min_value * self.growth.powi(self.counts.len() as i32)
+    }
+}
+
+/// Online summary statistics: Welford mean/variance, exact min/max and a
+/// [`LogHistogram`] for percentiles. Fixed-size regardless of how many
+/// samples stream through.
+#[derive(Debug, Clone)]
+pub struct Streaming {
+    n: usize,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    hist: LogHistogram,
+}
+
+impl Default for Streaming {
+    fn default() -> Streaming {
+        Streaming::new(LogHistogram::latency_default())
+    }
+}
+
+impl Streaming {
+    pub fn new(hist: LogHistogram) -> Streaming {
+        Streaming {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            hist,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.n += 1;
+        let d = v - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (v - self.mean);
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        self.hist.record(v);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Render the accumulated stream as a [`Summary`]: mean/std/min/max
+    /// are exact (up to float accumulation order), percentiles are
+    /// histogram-derived within one bucket's relative error.
+    pub fn summary(&self) -> Summary {
+        if self.n == 0 {
+            return Summary::default();
+        }
+        Summary {
+            n: self.n,
+            mean: self.mean,
+            std: (self.m2 / self.n as f64).max(0.0).sqrt(),
+            min: self.min,
+            p50: self.hist.quantile(50.0),
+            p95: self.hist.quantile(95.0),
+            p99: self.hist.quantile(99.0),
+            max: self.max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, percentile, stddev};
+
+    #[test]
+    fn quantile_within_one_bucket_of_exact() {
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.5).collect();
+        let mut h = LogHistogram::latency_default();
+        for &x in &xs {
+            h.record(x);
+        }
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            let exact = percentile(&xs, q);
+            let approx = h.quantile(q);
+            assert!(
+                approx >= exact / 1.02 && approx <= exact * 1.02,
+                "q{q}: approx {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn low_values_saturate_at_floor() {
+        let mut h = LogHistogram::latency_default();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(1e-9);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(50.0), 1e-3);
+    }
+
+    #[test]
+    fn huge_values_clamp_to_last_bucket() {
+        let mut h = LogHistogram::new(1.0, 2.0, 4);
+        h.record(1e30);
+        let q = h.quantile(100.0);
+        assert!(q.is_finite() && q > 1.0, "clamped quantile {q}");
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = LogHistogram::latency_default();
+        assert_eq!(h.quantile(99.0), 0.0);
+    }
+
+    #[test]
+    fn streaming_matches_exact_moments() {
+        let xs = [3.0, 1.0, 4.0, 1.5, 9.25, 2.5];
+        let mut s = Streaming::default();
+        for &x in &xs {
+            s.record(x);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.n, xs.len());
+        assert!((sum.mean - mean(&xs)).abs() < 1e-12);
+        assert!((sum.std - stddev(&xs)).abs() < 1e-9);
+        assert_eq!(sum.min, 1.0);
+        assert_eq!(sum.max, 9.25);
+    }
+
+    #[test]
+    fn empty_streaming_is_default_summary() {
+        let s = Streaming::default();
+        let sum = s.summary();
+        assert_eq!(sum.n, 0);
+        assert_eq!(sum.mean, 0.0);
+    }
+}

@@ -4,8 +4,10 @@
 
 pub mod bench;
 pub mod cli;
+pub mod histogram;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod slab;
 pub mod stats;
 pub mod threadpool;

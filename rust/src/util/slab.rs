@@ -1,0 +1,158 @@
+//! Generational slab: O(1) keyed storage with free-list reuse, for
+//! hot-path collections whose keys are minted and retired millions of
+//! times per run (the engine's in-flight batches). Unlike a `HashMap`
+//! there is no hashing on access, no rehash-driven reallocation in
+//! steady state, and a retired key can never alias a later value: every
+//! removal bumps the slot's generation, so stale keys simply miss.
+
+/// Handle into a [`Slab`]: slot index plus the generation it was minted
+/// under. `Copy`, and safe to hold across removals — a key whose slot was
+/// recycled no longer resolves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlabKey {
+    index: u32,
+    generation: u32,
+}
+
+#[derive(Debug)]
+struct Slot<T> {
+    generation: u32,
+    value: Option<T>,
+}
+
+/// The slab itself. Capacity grows to the peak concurrent population and
+/// is reused thereafter (the free list hands back vacated slots).
+#[derive(Debug, Default)]
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of slots ever allocated (the peak concurrent population).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn insert(&mut self, value: T) -> SlabKey {
+        self.len += 1;
+        if let Some(index) = self.free.pop() {
+            let slot = &mut self.slots[index as usize];
+            debug_assert!(slot.value.is_none(), "free-listed slot still occupied");
+            slot.value = Some(value);
+            SlabKey {
+                index,
+                generation: slot.generation,
+            }
+        } else {
+            let index = u32::try_from(self.slots.len()).expect("slab index overflow");
+            self.slots.push(Slot {
+                generation: 0,
+                value: Some(value),
+            });
+            SlabKey {
+                index,
+                generation: 0,
+            }
+        }
+    }
+
+    pub fn get(&self, key: SlabKey) -> Option<&T> {
+        let slot = self.slots.get(key.index as usize)?;
+        if slot.generation != key.generation {
+            return None;
+        }
+        slot.value.as_ref()
+    }
+
+    pub fn get_mut(&mut self, key: SlabKey) -> Option<&mut T> {
+        let slot = self.slots.get_mut(key.index as usize)?;
+        if slot.generation != key.generation {
+            return None;
+        }
+        slot.value.as_mut()
+    }
+
+    /// Remove and return the value, retiring the key: the slot's
+    /// generation advances so the same `SlabKey` can never resolve again.
+    pub fn remove(&mut self, key: SlabKey) -> Option<T> {
+        let slot = self.slots.get_mut(key.index as usize)?;
+        if slot.generation != key.generation {
+            return None;
+        }
+        let value = slot.value.take()?;
+        slot.generation = slot.generation.wrapping_add(1);
+        self.free.push(key.index);
+        self.len -= 1;
+        Some(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<String> = Slab::new();
+        let a = s.insert("a".into());
+        let b = s.insert("b".into());
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a).unwrap(), "a");
+        assert_eq!(s.get(b).unwrap(), "b");
+        assert_eq!(s.remove(a).unwrap(), "a");
+        assert_eq!(s.len(), 1);
+        assert!(s.get(a).is_none());
+        assert!(s.remove(a).is_none(), "double remove misses");
+    }
+
+    #[test]
+    fn slots_are_reused_and_stale_keys_miss() {
+        let mut s: Slab<u32> = Slab::new();
+        let a = s.insert(1);
+        s.remove(a);
+        let b = s.insert(2);
+        // Same physical slot, new generation.
+        assert_eq!(s.capacity(), 1);
+        assert!(s.get(a).is_none(), "stale key must not alias the new value");
+        assert_eq!(*s.get(b).unwrap(), 2);
+    }
+
+    #[test]
+    fn capacity_tracks_peak_not_total() {
+        let mut s: Slab<usize> = Slab::new();
+        for round in 0..100 {
+            let k1 = s.insert(round);
+            let k2 = s.insert(round + 1);
+            s.remove(k1);
+            s.remove(k2);
+        }
+        assert_eq!(s.capacity(), 2, "steady state reuses two slots");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn get_mut_updates_in_place() {
+        let mut s: Slab<Vec<u32>> = Slab::new();
+        let k = s.insert(vec![1]);
+        s.get_mut(k).unwrap().push(2);
+        assert_eq!(s.remove(k).unwrap(), vec![1, 2]);
+    }
+}

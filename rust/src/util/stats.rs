@@ -24,17 +24,26 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, q in [0, 100]. Panics on empty input.
+/// Clones and sorts per call — when reading several percentiles from one
+/// sample set, sort once and use [`percentile_sorted`].
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.total_cmp(b));
-    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    percentile_sorted(&v, q)
+}
+
+/// Linear-interpolated percentile over an already ascending-sorted slice.
+/// Panics on empty input.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    let pos = (q / 100.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
     }
 }
 
@@ -126,14 +135,18 @@ impl Summary {
         if xs.is_empty() {
             return Summary::default();
         }
+        // Sort once; every percentile then indexes the same sorted copy
+        // (the old path cloned + sorted the full vector per percentile).
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n: xs.len(),
             mean: mean(xs),
             std: stddev(xs),
             min: min(xs),
-            p50: percentile(xs, 50.0),
-            p95: percentile(xs, 95.0),
-            p99: percentile(xs, 99.0),
+            p50: percentile_sorted(&sorted, 50.0),
+            p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
             max: max(xs),
         }
     }
@@ -157,6 +170,16 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(median(&xs), 2.5);
         assert_eq!(percentile(&xs, 25.0), 1.75);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 12.5, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&xs, q), percentile_sorted(&sorted, q));
+        }
     }
 
     #[test]

@@ -102,6 +102,8 @@ fn engine_conserves_requests_under_arbitrary_health_schedules() {
                 RoutePolicy::JoinShortestQueue
             },
             decision_ms_override: Some(1.5),
+            // The property inspects per-request ids below.
+            record_completions: true,
         };
         let requests = generate(
             n_requests,
@@ -130,6 +132,7 @@ fn engine_conserves_requests_under_arbitrary_health_schedules() {
             report.completed.len() + report.dropped.len(),
             n_requests,
         )?;
+        prop_assert_eq(report.completed_count, report.completed.len())?;
         let mut ids: Vec<usize> = report
             .completed
             .iter()
@@ -170,6 +173,7 @@ fn oracle_mode_conserves_requests_too() {
             pipeline_depth: g.usize(1, 3),
             route: RoutePolicy::RoundRobin,
             decision_ms_override: Some(1.5),
+            record_completions: true,
         };
         let requests = generate(
             n_requests,

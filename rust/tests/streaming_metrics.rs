@@ -1,0 +1,126 @@
+//! Properties of the streaming metrics path:
+//!
+//! 1. Histogram-derived p50/p95/p99 stay within one bucket's relative
+//!    error of the exact sorted-vector percentiles on seeded random
+//!    workloads (the interpolated exact percentile lies between two
+//!    adjacent order statistics; the histogram answer must land within
+//!    one bucket's width of that bracket).
+//! 2. Same-seed engine runs remain byte-identical with
+//!    `record_completions` on, and flipping the flag changes only the
+//!    per-request record vector — every streamed aggregate matches.
+
+use continuer::cluster::failure::{Detector, FailurePlan};
+use continuer::config::Objectives;
+use continuer::coordinator::batcher::BatcherConfig;
+use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::estimator::StaticMetrics;
+use continuer::coordinator::router::RoutePolicy;
+use continuer::coordinator::{Failover, ServiceReport};
+use continuer::runtime::HostTensor;
+use continuer::util::histogram::LogHistogram;
+use continuer::util::proptest::{check, prop_assert};
+use continuer::workload::{generate, Arrival};
+
+#[test]
+fn histogram_percentiles_track_exact_sorted_percentiles() {
+    const GROWTH: f64 = 1.02;
+    check(200, 0x5EED1, |g| {
+        // Mixed-scale latencies: some runs tight, some heavy-tailed.
+        let scale = g.f64(1.0, 500.0);
+        let mut xs = g.vec_f64(0.01, scale, 1..400);
+        if g.bool() {
+            // Inject a far tail so percentile buckets spread out.
+            let tail = g.f64(scale, scale * 50.0);
+            xs.push(tail);
+        }
+        let mut h = LogHistogram::latency_default();
+        for &x in &xs {
+            h.record(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for q in [50.0, 95.0, 99.0] {
+            let approx = h.quantile(q);
+            // The exact interpolated percentile lies between these two
+            // order statistics; the histogram must land within one
+            // bucket's relative width of that bracket.
+            let pos = (q / 100.0) * (sorted.len() - 1) as f64;
+            let lo = sorted[pos.floor() as usize];
+            let hi = sorted[pos.ceil() as usize];
+            prop_assert(
+                approx >= lo / GROWTH && approx <= hi * GROWTH,
+                &format!(
+                    "q{q}: histogram {approx} outside [{}, {}] (n={})",
+                    lo / GROWTH,
+                    hi * GROWTH,
+                    sorted.len()
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+fn engine_run(record_completions: bool, seed: u64) -> ServiceReport {
+    let mut backends = vec![
+        SyntheticBackend::uniform(4, 5.0, 1.0),
+        SyntheticBackend::uniform(4, 5.0, 1.0),
+    ];
+    let mut failovers = vec![
+        Failover::new(Objectives::default()),
+        Failover::new(Objectives::default()),
+    ];
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1, 4], 2.0, 4),
+        health: HealthMode::Oracle(Detector::default()),
+        deadline_ms: Some(500.0),
+        pipeline_depth: 3,
+        route: RoutePolicy::JoinShortestQueue,
+        decision_ms_override: Some(1.5),
+        record_completions,
+    };
+    let requests = generate(120, Arrival::Poisson { rate_rps: 600.0 }, 8, seed);
+    let inputs = HostTensor::zeros(vec![8, 4]);
+    serve(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        &cfg,
+        &requests,
+        &inputs,
+        &[FailurePlan::crash_recover(3, 25.0, 60.0)],
+    )
+    .unwrap()
+}
+
+#[test]
+fn same_seed_runs_byte_identical_with_recording_on() {
+    let a = format!("{:?}", engine_run(true, 7));
+    let b = format!("{:?}", engine_run(true, 7));
+    assert_eq!(a, b, "same-seed recorded runs must be byte-identical");
+}
+
+#[test]
+fn same_seed_runs_byte_identical_with_streaming_only() {
+    let a = format!("{:?}", engine_run(false, 7));
+    let b = format!("{:?}", engine_run(false, 7));
+    assert_eq!(a, b, "same-seed streaming runs must be byte-identical");
+}
+
+#[test]
+fn recording_flag_changes_only_the_record_vector() {
+    let on = engine_run(true, 11);
+    let off = engine_run(false, 11);
+    assert_eq!(on.completed.len(), on.completed_count);
+    assert!(off.completed.is_empty());
+    assert_eq!(on.completed_count, off.completed_count);
+    assert_eq!(format!("{:?}", on.latency), format!("{:?}", off.latency));
+    assert_eq!(format!("{:?}", on.dropped), format!("{:?}", off.dropped));
+    assert_eq!(format!("{:?}", on.failovers), format!("{:?}", off.failovers));
+    assert_eq!(on.throughput_rps, off.throughput_rps);
+    assert_eq!(on.sim_span_ms, off.sim_span_ms);
+    assert_eq!(on.events_processed, off.events_processed);
+    assert_eq!(on.batches_dispatched, off.batches_dispatched);
+    assert_eq!(on.plan_cache_hits, off.plan_cache_hits);
+    assert_eq!(on.plan_cache_misses, off.plan_cache_misses);
+}
