@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Reproducible perf sweep for the serving engine.
+#
+# Runs the engine-scale bench (replica axis, sequential vs sharded
+# workers axis, saturation sweep) and leaves the machine-readable
+# artifacts in rust/:
+#
+#   BENCH_engine_scale.json   replica + workers axes, saturation knee
+#   BENCH_serving.json        pipelining-depth hot-path bench
+#   BENCH_health.json         monitored-health serving bench
+#
+# Usage:
+#   bench/run.sh                 # full sweep, 1M requests
+#   REQUESTS=100000 bench/run.sh # smaller scale
+#   WORKERS=8 bench/run.sh       # pin the sharded worker count
+#   QUICK=1 bench/run.sh         # ~20k-request smoke (CI-sized)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REQUESTS="${REQUESTS:-1000000}"
+ARGS=()
+if [[ -n "${QUICK:-}" ]]; then
+  ARGS+=(--quick)
+else
+  ARGS+=(--requests "$REQUESTS")
+fi
+if [[ -n "${WORKERS:-}" ]]; then
+  ARGS+=(--workers "$WORKERS")
+fi
+
+cargo bench --bench engine_scale -- "${ARGS[@]}"
+cargo bench --bench pipeline
+cargo bench --bench health
+
+echo
+echo "artifacts:"
+for f in BENCH_engine_scale.json BENCH_serving.json BENCH_health.json; do
+  [[ -s $f ]] && echo "  $f"
+done

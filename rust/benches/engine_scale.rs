@@ -10,19 +10,30 @@
 //! state: completion memory is O(1) in request count and step plans are
 //! allocated once per distinct (technique, failure) pair, not per batch.
 //!
+//! Two further axes cover the sharded engine:
+//!
+//! - **Workers sweep** (`--workers N` pins a single count; default
+//!   1/2/4): the 4-replica case run `Execution::Sharded(N)` with
+//!   round-robin pre-split arrivals, against the same round-robin case
+//!   run sequentially — the speedup column is real-thread scaling on
+//!   identical per-shard work.
+//! - **Saturation sweep**: offered load ramps across the bottleneck
+//!   capacity until p99 exceeds the 50 ms SLO; the knee (highest offered
+//!   rate still inside the SLO) lands in the JSON.
+//!
 //! Emits machine-readable `BENCH_engine_scale.json`: per case, wall-clock
 //! events/sec through the event loop, virtual-time throughput, peak
 //! batches in flight, plan allocations vs batches dispatched, and the
 //! time to render the report's JSON record (`report_build_ms` — the
 //! post-run summary readout; the in-engine report construction itself is
-//! part of `wall_s`).
+//! part of `wall_s`). `rust/bench/run.sh` scripts the full sweep.
 
 use std::time::Instant;
 
 use continuer::cluster::failure::{Detector, FailurePlan};
 use continuer::config::Objectives;
 use continuer::coordinator::batcher::BatcherConfig;
-use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
 use continuer::coordinator::estimator::MetricsSource;
 use continuer::coordinator::router::RoutePolicy;
 use continuer::coordinator::scheduler::CandidateMetrics;
@@ -33,6 +44,15 @@ use continuer::util::bench::{f, Table};
 use continuer::util::cli::Args;
 use continuer::util::json::{obj, Json};
 use continuer::workload::{generate, Arrival};
+
+const NODES: usize = 4;
+const STAGE_MS: f64 = 5.0;
+const HOP_MS: f64 = 1.0;
+const DEPTH: usize = 4;
+/// What the batch-16 bottleneck stage admits per replica, roughly.
+const CAPACITY_RPS_PER_REPLICA: f64 = 3200.0;
+/// The saturation sweep's latency objective.
+const SLO_P99_MS: f64 = 50.0;
 
 /// Stub predictions: the synthetic bench has no fitted models.
 struct StubMetrics;
@@ -53,18 +73,19 @@ impl MetricsSource for StubMetrics {
 }
 
 struct ScaleCase {
-    replicas: usize,
+    label: String,
     wall_s: f64,
     events_per_sec: f64,
     report_build_ms: f64,
     json: Json,
 }
 
-fn scale_case(replicas: usize, n_requests: usize) -> ScaleCase {
-    const NODES: usize = 4;
-    const STAGE_MS: f64 = 5.0;
-    const HOP_MS: f64 = 1.0;
-    const DEPTH: usize = 4;
+fn scale_case(
+    replicas: usize,
+    n_requests: usize,
+    route: RoutePolicy,
+    execution: Execution,
+) -> ScaleCase {
     // Near-saturating arrivals: the batch-16 bottleneck stage admits
     // ~3200 rps per replica; offer ~2500 per replica so queues stay
     // bounded and every request completes.
@@ -90,10 +111,11 @@ fn scale_case(replicas: usize, n_requests: usize) -> ScaleCase {
         health: HealthMode::Oracle(Detector::default()),
         deadline_ms: None,
         pipeline_depth: DEPTH,
-        route: RoutePolicy::JoinShortestQueue,
+        route,
         decision_ms_override: Some(1.5),
         // The point of the bench: no per-request records at 1M scale.
         record_completions: false,
+        execution,
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -129,10 +151,22 @@ fn scale_case(replicas: usize, n_requests: usize) -> ScaleCase {
         report.batches_dispatched
     );
 
+    let (exec_label, workers) = match execution {
+        Execution::Sequential => ("sequential".to_string(), 1usize),
+        Execution::Sharded(w) => (format!("sharded({w})"), w),
+    };
+    let route_label = match route {
+        RoutePolicy::RoundRobin => "round_robin",
+        RoutePolicy::JoinShortestQueue => "jsq",
+    };
+    let label = format!("{replicas}r/{exec_label}");
     let events_per_sec = report.events_processed as f64 / wall_s.max(1e-9);
     let t1 = Instant::now();
-    let json = obj(&[
+    let mut json = obj(&[
         ("replicas", replicas.into()),
+        ("execution", exec_label.as_str().into()),
+        ("workers", workers.into()),
+        ("route", route_label.into()),
         ("pipeline_depth", DEPTH.into()),
         ("requests", n_requests.into()),
         ("arrival_rate_rps", rate_rps.into()),
@@ -153,8 +187,11 @@ fn scale_case(replicas: usize, n_requests: usize) -> ScaleCase {
         ("latency_p99_ms", report.latency.p99.into()),
     ]);
     let report_build_ms = t1.elapsed().as_secs_f64() * 1e3;
+    if let Json::Obj(m) = &mut json {
+        m.insert("report_build_ms".to_string(), report_build_ms.into());
+    }
     ScaleCase {
-        replicas,
+        label,
         wall_s,
         events_per_sec,
         report_build_ms,
@@ -162,8 +199,75 @@ fn scale_case(replicas: usize, n_requests: usize) -> ScaleCase {
     }
 }
 
+/// One rung of the saturation sweep: 4 replicas, round-robin shards, no
+/// failures — pure offered load against the pipeline's capacity.
+/// Returns the rung's JSON record and whether p99 met the SLO.
+fn saturation_rung(rate_rps: f64, n_requests: usize, workers: usize) -> (Json, bool) {
+    let replicas = 4usize;
+    let mut backends: Vec<SyntheticBackend> = (0..replicas)
+        .map(|_| SyntheticBackend::uniform(NODES, STAGE_MS, HOP_MS))
+        .collect();
+    let mut failovers: Vec<Failover> = (0..replicas)
+        .map(|_| Failover::new(Objectives::default()))
+        .collect();
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1, 2, 4, 8, 16], 2.0, 16),
+        health: HealthMode::Oracle(Detector::default()),
+        deadline_ms: None,
+        pipeline_depth: DEPTH,
+        route: RoutePolicy::RoundRobin,
+        decision_ms_override: Some(1.5),
+        record_completions: false,
+        execution: Execution::Sharded(workers),
+    };
+    let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let report = serve(
+        &mut backends,
+        &StubMetrics,
+        &mut failovers,
+        &cfg,
+        &requests,
+        &inputs,
+        &[],
+    )
+    .unwrap();
+    let within_slo = report.latency.p99 <= SLO_P99_MS;
+    let rung = obj(&[
+        ("offered_rps", rate_rps.into()),
+        ("requests", n_requests.into()),
+        ("completed", report.completed_count.into()),
+        ("p50_ms", report.latency.p50.into()),
+        ("p99_ms", report.latency.p99.into()),
+        ("within_slo", within_slo.into()),
+    ]);
+    (rung, within_slo)
+}
+
+/// Ramp offered load across the bottleneck capacity and report the knee:
+/// the highest offered rate whose p99 still meets the SLO.
+fn saturation_sweep(n_requests: usize, workers: usize) -> (Json, f64) {
+    let mut rungs = Vec::new();
+    let mut knee_rps = 0.0f64;
+    for mult in [0.5, 0.7, 0.85, 1.0, 1.1, 1.25, 1.5] {
+        let rate_rps = mult * CAPACITY_RPS_PER_REPLICA * 4.0;
+        let (rung, within_slo) = saturation_rung(rate_rps, n_requests, workers);
+        if within_slo && rate_rps > knee_rps {
+            knee_rps = rate_rps;
+        }
+        rungs.push(rung);
+    }
+    let sweep = obj(&[
+        ("slo_p99_ms", SLO_P99_MS.into()),
+        ("workers", workers.into()),
+        ("knee_rps", knee_rps.into()),
+        ("rungs", Json::Arr(rungs)),
+    ]);
+    (sweep, knee_rps)
+}
+
 fn main() {
-    let args = Args::parse(std::env::args().skip(1).collect());
+    let args = Args::from_env();
     let quick = args.flag("quick");
     let n_requests = if quick {
         20_000
@@ -171,35 +275,91 @@ fn main() {
         args.get_usize("requests", 1_000_000)
             .expect("--requests expects an integer")
     };
+    // 0 = sweep the default axis; `--workers N` pins a single count.
+    let pinned_workers = args
+        .get_usize("workers", 0)
+        .expect("--workers expects an integer");
+    let workers_axis: Vec<usize> = if pinned_workers == 0 {
+        vec![1, 2, 4]
+    } else {
+        vec![pinned_workers]
+    };
 
     let mut t = Table::new(
         &format!("bench: engine scale — {n_requests} requests, 4-node synthetic, depth 4"),
-        &["replicas", "wall s", "events/sec", "report build ms"],
+        &["case", "wall s", "events/sec", "report build ms"],
     );
     let mut cases = Vec::new();
-    for replicas in [1usize, 2, 4] {
-        let c = scale_case(replicas, n_requests);
+    let mut push_case = |t: &mut Table, c: ScaleCase| -> f64 {
         t.row(&[
-            c.replicas.to_string(),
+            c.label,
             f(c.wall_s, 2),
             f(c.events_per_sec, 0),
             f(c.report_build_ms, 3),
         ]);
-        let mut case = c.json;
-        if let Json::Obj(m) = &mut case {
-            m.insert("report_build_ms".into(), c.report_build_ms.into());
-        }
-        cases.push(case);
+        cases.push(c.json);
+        c.events_per_sec
+    };
+
+    // Replica axis, sequential reference (JSQ, as served in production).
+    for replicas in [1usize, 2, 4] {
+        let c = scale_case(
+            replicas,
+            n_requests,
+            RoutePolicy::JoinShortestQueue,
+            Execution::Sequential,
+        );
+        push_case(&mut t, c);
+    }
+
+    // Workers axis: 4 replicas on real threads vs the same work run
+    // sequentially — round-robin pre-split so both do identical work.
+    let seq_eps = {
+        let c = scale_case(4, n_requests, RoutePolicy::RoundRobin, Execution::Sequential);
+        push_case(&mut t, c)
+    };
+    let mut speedups = Vec::new();
+    let mut speedup_lines = Vec::new();
+    for &w in &workers_axis {
+        let c = scale_case(4, n_requests, RoutePolicy::RoundRobin, Execution::Sharded(w));
+        let eps = push_case(&mut t, c);
+        let speedup = eps / seq_eps.max(1e-9);
+        speedup_lines.push(format!(
+            "workers={w}: {speedup:.2}x events/sec vs sequential round-robin"
+        ));
+        speedups.push(obj(&[
+            ("workers", w.into()),
+            ("events_per_sec", eps.into()),
+            ("speedup_vs_sequential", speedup.into()),
+        ]));
     }
     t.print();
+    for line in &speedup_lines {
+        println!("{line}");
+    }
+
+    // Saturation knee, on the widest sharded configuration benchmarked.
+    let sat_workers = *workers_axis.iter().max().unwrap();
+    let sat_requests = (n_requests / 10).max(5_000);
+    let (saturation, knee_rps) = saturation_sweep(sat_requests, sat_workers);
+    println!(
+        "saturation knee ({sat_workers} workers): {knee_rps:.0} rps offered within p99 <= {SLO_P99_MS} ms"
+    );
 
     let out = obj(&[
         ("bench", "engine_scale".into()),
         ("requests", n_requests.into()),
         ("quick", quick.into()),
-        ("nodes", 4usize.into()),
-        ("stage_ms", 5.0.into()),
-        ("hop_ms", 1.0.into()),
+        ("nodes", NODES.into()),
+        ("stage_ms", STAGE_MS.into()),
+        ("hop_ms", HOP_MS.into()),
+        (
+            "workers_axis",
+            Json::Arr(workers_axis.iter().map(|&w| w.into()).collect()),
+        ),
+        ("sequential_rr_events_per_sec", seq_eps.into()),
+        ("worker_scaling", Json::Arr(speedups)),
+        ("saturation", saturation),
         ("cases", Json::Arr(cases)),
     ]);
     let path = "BENCH_engine_scale.json";

@@ -16,7 +16,7 @@
 use continuer::cluster::failure::{Detector, FailurePlan};
 use continuer::config::Objectives;
 use continuer::coordinator::batcher::BatcherConfig;
-use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
 use continuer::coordinator::estimator::StaticMetrics;
 use continuer::coordinator::router::RoutePolicy;
 use continuer::coordinator::Failover;
@@ -96,6 +96,7 @@ fn serving_case(health: HealthMode) -> (f64, usize, usize) {
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(1.5),
         record_completions: false,
+        execution: Execution::Sequential,
     };
     let requests = generate(400, Arrival::Poisson { rate_rps: 500.0 }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);

@@ -19,7 +19,7 @@ use continuer::cluster::failure::Detector;
 use continuer::cluster::sim::EdgeCluster;
 use continuer::config::{Config, Objectives};
 use continuer::coordinator::batcher::BatcherConfig;
-use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
 use continuer::coordinator::estimator::MetricsSource;
 use continuer::coordinator::router::RoutePolicy;
 use continuer::coordinator::scheduler::CandidateMetrics;
@@ -76,6 +76,7 @@ fn serving_case(replicas: usize, depth: usize) -> ServingCase {
         route: RoutePolicy::JoinShortestQueue,
         decision_ms_override: Some(1.5),
         record_completions: false,
+        execution: Execution::Sequential,
     };
     // Saturating Poisson load: ~1 ms inter-arrival against a 23 ms path.
     let requests = generate(400, Arrival::Poisson { rate_rps: 1000.0 }, 16, 42);

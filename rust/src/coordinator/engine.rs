@@ -21,13 +21,52 @@
 //! the engine's scheduling logic is testable and benchmarkable without
 //! compiled artifacts.
 //!
+//! # Execution modes: sequential reference vs per-replica shards
+//!
+//! [`EngineConfig::execution`] picks how the event loop runs:
+//!
+//! - [`Execution::Sequential`] (the deterministic reference): one thread,
+//!   one virtual-time heap over all replicas — the original engine.
+//! - [`Execution::Sharded`]`(workers)`: one *shard* per replica, run on
+//!   up to `workers` real threads ([`crate::util::threadpool`]). A shard
+//!   is a 1-replica engine that owns its event heap, generational slab,
+//!   plan cache and streaming metrics — all already per-replica state —
+//!   so shards share nothing mutable and need no locks on the hot path.
+//!
+//! Arrivals reach shards through the router split: under round-robin
+//! they are routed *positionally at generation time* (request `i` →
+//! replica `i % R`, exactly what the sequential router does), so every
+//! shard consumes a preloaded, byte-identical schedule; under
+//! join-shortest-queue a feeder thread routes live over per-replica
+//! atomic outstanding counters ([`super::router::ShardRouter`]) and
+//! feeds each shard over a channel, gated by an arrival-time watermark
+//! so a shard never processes an event later than traffic it has not
+//! seen yet. Failure and health events are scheduled per shard from the
+//! *global* replica index and the *global* end of traffic, so monitored
+//! detection streams are identical in both modes.
+//!
+//! After the shards run, their outcomes merge: histogram buckets add
+//! (exact), Welford moments combine pairwise (exact up to float
+//! accumulation order), failover windows concatenate and sort, drop and
+//! completion records concatenate, counters sum. Same-seed equivalence —
+//! merged sharded metrics bucket-for-bucket equal to the sequential
+//! run's — holds under round-robin (or pre-routed streams, see
+//! [`serve_routed`]) whenever each replica's failure events land while
+//! that replica still has traffic in flight: both modes stop at the end
+//! of work, but the sequential loop observes *global* end of work while
+//! a shard observes its own, so only post-work events (which serve
+//! nothing) can differ. JSQ sharding is live-routed and therefore not
+//! bit-reproducible against the sequential JSQ router (conservation
+//! still holds: every request completes or drops exactly once).
+//!
 //! The per-event hot path is allocation-free in steady state:
 //!
 //! - **Step plans are cached** — a per-replica
 //!   [`PlanCache`](super::plan_cache::PlanCache) memoizes
-//!   `backend.steps(technique, failed)` behind `Rc<[Step]>`, so after one
-//!   miss per distinct (technique, failed-node) pair every dispatch and
-//!   failover switches plans by pointer (the hit/miss counters surface in
+//!   `backend.steps(technique, failed)` behind `Arc<[Step]>` (send-able,
+//!   so shards own their caches), so after one miss per distinct
+//!   (technique, failed-node) pair every dispatch and failover switches
+//!   plans by pointer (the hit/miss counters surface in
 //!   [`ServiceReport`]).
 //! - **Synthetic activations are shape-only** — a non-materializing
 //!   backend receives [`Activation::Shape`] handles (two integers), so
@@ -46,7 +85,8 @@
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
-use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{mpsc, Arc};
 
 use anyhow::Result;
 
@@ -57,13 +97,14 @@ use crate::health::monitor::{simulate as simulate_monitor, HealthConfig, HealthE
 use crate::runtime::{Activation, HostTensor, ShapeOnly, UnitKind};
 use crate::util::histogram::Streaming;
 use crate::util::slab::{Slab, SlabKey};
-use crate::workload::Request;
+use crate::util::threadpool::parallel_map_with;
+use crate::workload::{split_round_robin, Request};
 
 use super::batcher::{decide, BatcherConfig, Dispatch};
 use super::estimator::MetricsSource;
 use super::failover::Failover;
 use super::plan_cache::PlanCache;
-use super::router::{ReplicaLoad, RoutePolicy, Router};
+use super::router::{ReplicaLoad, RoutePolicy, Router, ShardRouter};
 use super::service::{Completion, DroppedRequest, FailoverWindow, ServiceReport};
 
 /// Per-stage compute backend: the engine schedules *when* stages run;
@@ -73,7 +114,7 @@ pub trait StageBackend {
     fn num_nodes(&self) -> usize;
     /// Step sequence of a technique under an optional failure. Called
     /// once per distinct (technique, failure) pair — the engine caches
-    /// plans behind `Rc<[Step]>` and dispatches by pointer.
+    /// plans behind `Arc<[Step]>` and dispatches by pointer.
     fn steps(&self, tech: Technique, failed: Option<usize>) -> Vec<Step>;
     /// Execute one step's unit on a batch; returns output + compute ms.
     fn run_stage(&mut self, step: Step, x: &Activation) -> Result<(Activation, f64)>;
@@ -219,6 +260,21 @@ pub enum HealthMode {
     Monitored(HealthConfig),
 }
 
+/// How the event loop executes (see the module docs for the full
+/// threading story).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Execution {
+    /// One thread, one global virtual-time heap over all replicas — the
+    /// deterministic reference implementation.
+    Sequential,
+    /// One shard per replica, multiplexed onto up to this many worker
+    /// threads. Round-robin routing (and pre-routed streams) stays
+    /// deterministic and merge-equivalent to the sequential run;
+    /// join-shortest-queue routes live over atomic counters and is only
+    /// conservation-equivalent.
+    Sharded(usize),
+}
+
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -242,6 +298,8 @@ pub struct EngineConfig {
     /// at all. Tests and the accuracy experiments turn it on to inspect
     /// individual completions.
     pub record_completions: bool,
+    /// Sequential reference loop or per-replica shards on real threads.
+    pub execution: Execution,
 }
 
 impl EngineConfig {
@@ -256,7 +314,15 @@ impl EngineConfig {
             route: RoutePolicy::RoundRobin,
             decision_ms_override: None,
             record_completions: true,
+            execution: Execution::Sequential,
         }
+    }
+
+    /// The same configuration with the event loop sharded per replica
+    /// onto up to `workers` threads.
+    pub fn sharded(mut self, workers: usize) -> EngineConfig {
+        self.execution = Execution::Sharded(workers);
+        self
     }
 }
 
@@ -266,7 +332,9 @@ impl EngineConfig {
 
 #[derive(Debug)]
 enum EventKind {
-    Arrival(Request),
+    /// A request arrives. `replica` pins it (pre-routed streams and
+    /// shards, whose only local replica is 0); `None` asks the router.
+    Arrival { req: Request, replica: Option<usize> },
     /// Ground truth: the node's condition flips (the backend feels it
     /// immediately; the controller only reacts to Detect* events).
     RawCondition { replica: usize, node: usize, condition: NodeCondition },
@@ -370,7 +438,7 @@ struct BatchInFlight {
     x: Activation,
     /// Cached step plan, shared by pointer with the replica's
     /// [`PlanCache`] — dispatching a batch allocates no plan.
-    steps: Rc<[Step]>,
+    steps: Arc<[Step]>,
     /// Index of the next stage to start (or the one currently running,
     /// between its StageStart and StageDone events).
     stage: usize,
@@ -406,25 +474,37 @@ struct Engine<'a, B: StageBackend> {
     batches_dispatched: usize,
     events_processed: usize,
     clock_ms: f64,
-    /// Arrival events not yet processed; when this hits zero and no work
-    /// remains, the run ends (later failure events never fire — the
-    /// seed's "fail_at = never" idiom).
-    remaining_arrivals: usize,
+    /// Arrival events in the heap not yet processed; when this hits zero,
+    /// the intake (if any) is closed and no work remains, the run ends
+    /// (later failure events never fire — the seed's "fail_at = never"
+    /// idiom).
+    pending_arrivals: usize,
+    /// Live arrival feed for a channel-fed shard (JSQ sharding); `None`
+    /// when all arrivals are preloaded into the heap.
+    intake: Option<Intake>,
+    /// Outstanding-request counter shared with the sharded router's
+    /// feeder: decremented once per completion or drop so live routing
+    /// sees this shard's backlog.
+    outstanding: Option<Arc<AtomicUsize>>,
 }
 
-/// Run the serving simulation: `backends[r]`, `failovers[r]` and
-/// `plans.get(r)` describe replica `r` (plans may be shorter than the
-/// replica count; missing plans mean no failures). `requests` must be
-/// sorted by arrival time.
-pub fn serve<B: StageBackend>(
-    backends: &mut [B],
-    est: &dyn MetricsSource,
-    failovers: &mut [Failover],
+/// A shard's live arrival feed, with the watermark that makes it safe:
+/// the feeder sends requests in nondecreasing arrival time, so any heap
+/// event at or before the last received arrival time can be processed —
+/// no later-sent request can precede it. When the channel closes the
+/// watermark is effectively infinite and the shard drains its heap.
+struct Intake {
+    rx: mpsc::Receiver<Request>,
+    open: bool,
+    watermark_ms: f64,
+}
+
+fn validate<B: StageBackend>(
+    backends: &[B],
+    failovers: &[Failover],
     cfg: &EngineConfig,
-    requests: &[Request],
-    inputs: &HostTensor,
     plans: &[FailurePlan],
-) -> Result<ServiceReport> {
+) -> Result<()> {
     anyhow::ensure!(!backends.is_empty(), "engine needs >= 1 replica");
     anyhow::ensure!(
         backends.len() == failovers.len(),
@@ -439,25 +519,364 @@ pub fn serve<B: StageBackend>(
         backends.len()
     );
     anyhow::ensure!(cfg.pipeline_depth >= 1, "pipeline_depth must be >= 1");
+    Ok(())
+}
 
-    let states: Vec<ReplicaState> = backends
-        .iter()
-        .map(|b| ReplicaState::new(b.num_nodes()))
-        .collect();
-    let plan_caches: Vec<PlanCache> = backends.iter().map(|_| PlanCache::new()).collect();
-    let mut eng = Engine {
+/// Run the serving simulation: `backends[r]`, `failovers[r]` and
+/// `plans.get(r)` describe replica `r` (plans may be shorter than the
+/// replica count; missing plans mean no failures). `requests` must be
+/// sorted by arrival time.
+///
+/// Dispatches on [`EngineConfig::execution`]: the sequential reference
+/// loop, or per-replica shards on real threads (which is why this entry
+/// point needs `B: Send` and a `Sync` metrics source — callers whose
+/// backend cannot cross threads, like the PJRT [`EdgeCluster`], use
+/// [`serve_sequential`] directly).
+pub fn serve<B: StageBackend + Send>(
+    backends: &mut [B],
+    est: &(dyn MetricsSource + Sync),
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    requests: &[Request],
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+) -> Result<ServiceReport> {
+    match cfg.execution {
+        Execution::Sequential => {
+            serve_sequential(backends, est, failovers, cfg, requests, inputs, plans)
+        }
+        Execution::Sharded(workers) => {
+            validate(backends, failovers, cfg, plans)?;
+            let last_arrival = requests.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+            match cfg.route {
+                // Round-robin is positional: splitting the stream at
+                // "generation time" reproduces the sequential router's
+                // assignment exactly, so every shard gets a preloaded,
+                // deterministic schedule and no channels are needed.
+                RoutePolicy::RoundRobin => {
+                    let streams = split_round_robin(requests, backends.len());
+                    serve_sharded_preloaded(
+                        workers, backends, est, failovers, cfg, streams, inputs, plans,
+                        last_arrival,
+                    )
+                }
+                // JSQ needs live load: a feeder on the calling thread
+                // routes over the shards' atomic outstanding counters.
+                RoutePolicy::JoinShortestQueue => serve_sharded_jsq(
+                    workers, backends, est, failovers, cfg, requests, inputs, plans,
+                    last_arrival,
+                ),
+            }
+        }
+    }
+}
+
+/// The single-threaded reference engine, usable with non-`Send` backends
+/// (the PJRT cluster holds host-side caches behind `RefCell`). Always
+/// runs sequentially regardless of [`EngineConfig::execution`].
+pub fn serve_sequential<B: StageBackend>(
+    backends: &mut [B],
+    est: &dyn MetricsSource,
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    requests: &[Request],
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+) -> Result<ServiceReport> {
+    validate(backends, failovers, cfg, plans)?;
+    let last_arrival = requests.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+    run_sequential(
         backends,
+        est,
         failovers,
+        cfg,
+        SeqArrivals::Merged(requests),
+        inputs,
+        plans,
+        last_arrival,
+    )
+}
+
+/// Serve pre-routed per-replica arrival streams: `streams[r]` (sorted by
+/// arrival time) is pinned to replica `r` in both execution modes,
+/// bypassing the router. This is the workload-level counterpart of
+/// round-robin routing (see [`crate::workload::generate_per_replica`]):
+/// a sequential run and a sharded run consume byte-identical per-replica
+/// schedules, which the equivalence tests exploit.
+pub fn serve_routed<B: StageBackend + Send>(
+    backends: &mut [B],
+    est: &(dyn MetricsSource + Sync),
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    streams: &[Vec<Request>],
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+) -> Result<ServiceReport> {
+    validate(backends, failovers, cfg, plans)?;
+    anyhow::ensure!(
+        streams.len() == backends.len(),
+        "one arrival stream per replica ({} vs {})",
+        streams.len(),
+        backends.len()
+    );
+    let last_arrival = streams
+        .iter()
+        .filter_map(|s| s.last())
+        .map(|r| r.arrival_ms)
+        .fold(0.0, f64::max);
+    match cfg.execution {
+        Execution::Sequential => run_sequential(
+            backends,
+            est,
+            failovers,
+            cfg,
+            SeqArrivals::PerReplica(streams),
+            inputs,
+            plans,
+            last_arrival,
+        ),
+        Execution::Sharded(workers) => serve_sharded_preloaded(
+            workers,
+            backends,
+            est,
+            failovers,
+            cfg,
+            streams.to_vec(),
+            inputs,
+            plans,
+            last_arrival,
+        ),
+    }
+}
+
+/// Arrival input to the sequential loop: one merged stream the router
+/// spreads, or per-replica streams already pinned.
+enum SeqArrivals<'r> {
+    Merged(&'r [Request]),
+    PerReplica(&'r [Vec<Request>]),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_sequential<B: StageBackend>(
+    backends: &mut [B],
+    est: &dyn MetricsSource,
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    arrivals: SeqArrivals<'_>,
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+    last_arrival_ms: f64,
+) -> Result<ShardResultReport> {
+    let mut eng = Engine::new(backends, failovers, est, cfg, inputs);
+    match arrivals {
+        SeqArrivals::Merged(reqs) => {
+            eng.pending_arrivals = reqs.len();
+            for req in reqs {
+                eng.push(req.arrival_ms, EventKind::Arrival { req: *req, replica: None });
+            }
+        }
+        SeqArrivals::PerReplica(streams) => {
+            eng.pending_arrivals = streams.iter().map(Vec::len).sum();
+            for (r, stream) in streams.iter().enumerate() {
+                for req in stream {
+                    eng.push(
+                        req.arrival_ms,
+                        EventKind::Arrival { req: *req, replica: Some(r) },
+                    );
+                }
+            }
+        }
+    }
+    let empty_plan = FailurePlan::none();
+    let n_replicas = eng.backends.len();
+    for r in 0..n_replicas {
+        let plan = plans.get(r).unwrap_or(&empty_plan);
+        eng.schedule_failure_events(r, r, plan, last_arrival_ms);
+    }
+    Ok(finalize(eng.run()?))
+}
+
+/// One replica's work order for a sharded run.
+struct ShardTask<'a, B> {
+    /// The replica's index in the caller's arrays — the shard's local
+    /// index is always 0, but monitor seeding and report re-tagging need
+    /// the global identity.
+    global_replica: usize,
+    backend: &'a mut B,
+    failover: &'a mut Failover,
+    plan: &'a FailurePlan,
+    arrivals: ShardArrivals,
+    outstanding: Option<Arc<AtomicUsize>>,
+}
+
+enum ShardArrivals {
+    /// The shard's full schedule, known up front (round-robin /
+    /// pre-routed streams).
+    Preloaded(Vec<Request>),
+    /// Live feed from the JSQ feeder, gated by the arrival watermark.
+    Channel(mpsc::Receiver<Request>),
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_sharded_preloaded<B: StageBackend + Send>(
+    workers: usize,
+    backends: &mut [B],
+    est: &(dyn MetricsSource + Sync),
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    streams: Vec<Vec<Request>>,
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+    last_arrival_ms: f64,
+) -> Result<ShardResultReport> {
+    let empty_plan = FailurePlan::none();
+    let tasks: Vec<ShardTask<'_, B>> = backends
+        .iter_mut()
+        .zip(failovers.iter_mut())
+        .zip(streams)
+        .enumerate()
+        .map(|(r, ((backend, failover), stream))| ShardTask {
+            global_replica: r,
+            backend,
+            failover,
+            plan: plans.get(r).unwrap_or(&empty_plan),
+            arrivals: ShardArrivals::Preloaded(stream),
+            outstanding: None,
+        })
+        .collect();
+    run_shards(workers, tasks, est, cfg, inputs, last_arrival_ms, || {})
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_sharded_jsq<B: StageBackend + Send>(
+    workers: usize,
+    backends: &mut [B],
+    est: &(dyn MetricsSource + Sync),
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    requests: &[Request],
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+    last_arrival_ms: f64,
+) -> Result<ShardResultReport> {
+    let replicas = backends.len();
+    let mut router = ShardRouter::new(RoutePolicy::JoinShortestQueue, replicas);
+    let empty_plan = FailurePlan::none();
+    let mut txs = Vec::with_capacity(replicas);
+    let mut tasks = Vec::with_capacity(replicas);
+    for (r, (backend, failover)) in backends.iter_mut().zip(failovers.iter_mut()).enumerate() {
+        let (tx, rx) = mpsc::channel();
+        txs.push(tx);
+        tasks.push(ShardTask {
+            global_replica: r,
+            backend,
+            failover,
+            plan: plans.get(r).unwrap_or(&empty_plan),
+            arrivals: ShardArrivals::Channel(rx),
+            outstanding: Some(router.counter(r)),
+        });
+    }
+    // The feeder runs on the calling thread while the shards run on the
+    // scoped workers: it routes each arrival to the replica with the
+    // fewest outstanding requests (as the atomic counters report *now*)
+    // and never blocks — channels are unbounded, so shards multiplexed
+    // onto fewer workers than replicas simply find their traffic
+    // buffered when a worker picks them up.
+    run_shards(workers, tasks, est, cfg, inputs, last_arrival_ms, move || {
+        for req in requests {
+            let r = router.route();
+            // A shard that died early dropped its receiver; its error
+            // surfaces through run_shards, so the send result is moot.
+            let _ = txs[r].send(*req);
+        }
+        // Dropping the senders closes every intake: watermark → ∞ and
+        // the shards drain.
+    })
+}
+
+fn run_shards<B: StageBackend + Send>(
+    workers: usize,
+    tasks: Vec<ShardTask<'_, B>>,
+    est: &(dyn MetricsSource + Sync),
+    cfg: &EngineConfig,
+    inputs: &HostTensor,
+    last_arrival_ms: f64,
+    feeder: impl FnOnce(),
+) -> Result<ShardResultReport> {
+    let outcomes = parallel_map_with(
+        tasks,
+        workers,
+        |task| run_shard(task, est, cfg, inputs, last_arrival_ms),
+        feeder,
+    );
+    let shards: Vec<ShardOutcome> = outcomes.into_iter().collect::<Result<_>>()?;
+    Ok(finalize(merge_outcomes(shards)))
+}
+
+/// Run one replica as a 1-replica engine (its own heap, slab, plan
+/// cache and metrics). Local replica index is 0; the global index seeds
+/// the monitored channel identically to the sequential run.
+fn run_shard<B: StageBackend>(
+    task: ShardTask<'_, B>,
+    est: &(dyn MetricsSource + Sync),
+    cfg: &EngineConfig,
+    inputs: &HostTensor,
+    last_arrival_ms: f64,
+) -> Result<ShardOutcome> {
+    let ShardTask { global_replica, backend, failover, plan, arrivals, outstanding } = task;
+    let mut eng = Engine::new(
+        std::slice::from_mut(backend),
+        std::slice::from_mut(failover),
         est,
         cfg,
         inputs,
-        router: Router::new(cfg.route),
-        heap: BinaryHeap::new(),
-        seq: 0,
-        states,
-        batches: Slab::new(),
-        plan_caches,
-        pad_idxs: Vec::new(),
+    );
+    eng.outstanding = outstanding;
+    match arrivals {
+        ShardArrivals::Preloaded(reqs) => {
+            eng.pending_arrivals = reqs.len();
+            for req in &reqs {
+                eng.push(req.arrival_ms, EventKind::Arrival { req: *req, replica: Some(0) });
+            }
+        }
+        ShardArrivals::Channel(rx) => {
+            eng.intake = Some(Intake {
+                rx,
+                open: true,
+                watermark_ms: f64::NEG_INFINITY,
+            });
+        }
+    }
+    eng.schedule_failure_events(0, global_replica, plan, last_arrival_ms);
+    eng.run()
+}
+
+/// What one shard (or the whole sequential run) accumulates; replica
+/// indices in the records are shard-local until [`merge_outcomes`]
+/// re-tags them.
+struct ShardOutcome {
+    latency: Streaming,
+    completed: Vec<Completion>,
+    completed_count: usize,
+    dropped: Vec<DroppedRequest>,
+    windows: Vec<FailoverWindow>,
+    max_in_flight: usize,
+    batches_dispatched: usize,
+    events_processed: usize,
+    clock_ms: f64,
+    plan_hits: usize,
+    plan_misses: usize,
+}
+
+type ShardResultReport = ServiceReport;
+
+/// Combine per-shard outcomes into one run-level outcome: bucket-exact
+/// histogram merge, pairwise Welford combine, counter sums, window
+/// concat (sorted by start time then replica — the order the sequential
+/// loop emits same-time windows in), record concat with replica indices
+/// re-tagged from shard-local 0 to global.
+fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
+    let mut merged = ShardOutcome {
         latency: Streaming::default(),
         completed: Vec::new(),
         completed_count: 0,
@@ -467,30 +886,125 @@ pub fn serve<B: StageBackend>(
         batches_dispatched: 0,
         events_processed: 0,
         clock_ms: 0.0,
-        remaining_arrivals: requests.len(),
+        plan_hits: 0,
+        plan_misses: 0,
     };
-    for req in requests {
-        eng.push(req.arrival_ms, EventKind::Arrival(*req));
+    for (r, mut o) in shards.into_iter().enumerate() {
+        for c in &mut o.completed {
+            c.replica = r;
+        }
+        for d in &mut o.dropped {
+            d.replica = r;
+        }
+        for w in &mut o.windows {
+            w.replica = r;
+        }
+        merged.latency.merge(&o.latency);
+        merged.completed.extend(o.completed);
+        merged.completed_count += o.completed_count;
+        merged.dropped.extend(o.dropped);
+        merged.windows.extend(o.windows);
+        merged.max_in_flight = merged.max_in_flight.max(o.max_in_flight);
+        merged.batches_dispatched += o.batches_dispatched;
+        merged.events_processed += o.events_processed;
+        merged.clock_ms = merged.clock_ms.max(o.clock_ms);
+        merged.plan_hits += o.plan_hits;
+        merged.plan_misses += o.plan_misses;
     }
-    let last_arrival = requests.last().map(|r| r.arrival_ms).unwrap_or(0.0);
-    let empty_plan = FailurePlan::none();
-    let n_replicas = eng.backends.len();
-    for r in 0..n_replicas {
-        // A replica without a plan has no ground-truth failures, but a
-        // monitored channel can still produce false positives for it.
-        let plan = plans.get(r).unwrap_or(&empty_plan);
+    merged
+        .windows
+        .sort_by(|a, b| a.start_ms.total_cmp(&b.start_ms).then(a.replica.cmp(&b.replica)));
+    merged
+}
+
+fn finalize(o: ShardOutcome) -> ServiceReport {
+    let span = o.clock_ms.max(1e-9);
+    ServiceReport {
+        throughput_rps: o.completed_count as f64 / (span / 1e3),
+        latency: o.latency.summary(),
+        latency_stream: o.latency,
+        completed: o.completed,
+        completed_count: o.completed_count,
+        dropped: o.dropped,
+        failovers: o.windows,
+        sim_span_ms: span,
+        max_in_flight: o.max_in_flight,
+        events_processed: o.events_processed,
+        batches_dispatched: o.batches_dispatched,
+        plan_cache_hits: o.plan_hits,
+        plan_cache_misses: o.plan_misses,
+    }
+}
+
+impl<'a, B: StageBackend> Engine<'a, B> {
+    fn new(
+        backends: &'a mut [B],
+        failovers: &'a mut [Failover],
+        est: &'a dyn MetricsSource,
+        cfg: &'a EngineConfig,
+        inputs: &'a HostTensor,
+    ) -> Engine<'a, B> {
+        let states: Vec<ReplicaState> = backends
+            .iter()
+            .map(|b| ReplicaState::new(b.num_nodes()))
+            .collect();
+        let plan_caches: Vec<PlanCache> = backends.iter().map(|_| PlanCache::new()).collect();
+        Engine {
+            backends,
+            failovers,
+            est,
+            cfg,
+            inputs,
+            router: Router::new(cfg.route),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            states,
+            batches: Slab::new(),
+            plan_caches,
+            pad_idxs: Vec::new(),
+            latency: Streaming::default(),
+            completed: Vec::new(),
+            completed_count: 0,
+            dropped: Vec::new(),
+            windows: Vec::new(),
+            max_in_flight: 0,
+            batches_dispatched: 0,
+            events_processed: 0,
+            clock_ms: 0.0,
+            pending_arrivals: 0,
+            intake: None,
+            outstanding: None,
+        }
+    }
+}
+
+impl<B: StageBackend> Engine<'_, B> {
+    /// Schedule replica `local_r`'s ground-truth failure flips and its
+    /// detection stream. `global_r` is the replica's index in the
+    /// caller's arrays and `last_arrival_ms` the *global* end of traffic:
+    /// a shard (where `local_r` is 0) seeds its monitored channel and
+    /// bounds its horizon exactly as the sequential run does for the same
+    /// replica, so both modes see identical detection streams.
+    fn schedule_failure_events(
+        &mut self,
+        local_r: usize,
+        global_r: usize,
+        plan: &FailurePlan,
+        last_arrival_ms: f64,
+    ) {
         // Ground truth: the node flips at at_ms regardless of how (or
         // whether) the controller finds out.
         for e in &plan.events {
-            eng.push(
+            self.push(
                 e.at_ms,
                 EventKind::RawCondition {
-                    replica: r,
+                    replica: local_r,
                     node: e.node,
                     condition: e.condition,
                 },
             );
         }
+        let cfg = self.cfg;
         match &cfg.health {
             HealthMode::Oracle(det) => {
                 // Seed behaviour: crashes detected at the quantised
@@ -498,51 +1012,49 @@ pub fn serve<B: StageBackend>(
                 // failures slow stages in place without a failover.
                 for e in &plan.events {
                     match e.condition {
-                        NodeCondition::Down => eng.push(
+                        NodeCondition::Down => self.push(
                             det.detection_time(e.at_ms),
                             EventKind::DetectFailover {
-                                replica: r,
+                                replica: local_r,
                                 node: e.node,
                                 false_positive: false,
                             },
                         ),
-                        NodeCondition::Up => eng.push(
+                        NodeCondition::Up => self.push(
                             e.at_ms,
-                            EventKind::DetectRecovery { replica: r, node: e.node },
+                            EventKind::DetectRecovery { replica: local_r, node: e.node },
                         ),
                         NodeCondition::Degraded(_) => {}
                     }
                 }
             }
             HealthMode::Monitored(health) => {
-                // Per-replica monitor with an independent seeded channel.
+                // Per-replica monitor with an independent seeded channel,
+                // keyed by the *global* replica index.
                 let mut hcfg = health.clone();
-                hcfg.seed = health.seed.wrapping_add(r as u64);
-                let horizon = hcfg.horizon_for(plan, last_arrival);
-                let num_nodes = eng.backends[r].num_nodes();
+                hcfg.seed = health.seed.wrapping_add(global_r as u64);
+                let horizon = hcfg.horizon_for(plan, last_arrival_ms);
+                let num_nodes = self.backends[local_r].num_nodes();
                 for ev in simulate_monitor(&hcfg, plan, num_nodes, horizon) {
                     match ev.kind {
-                        HealthEventKind::Failover { false_positive } => eng.push(
+                        HealthEventKind::Failover { false_positive } => self.push(
                             ev.at_ms,
                             EventKind::DetectFailover {
-                                replica: r,
+                                replica: local_r,
                                 node: ev.node,
                                 false_positive,
                             },
                         ),
-                        HealthEventKind::Recovery => eng.push(
+                        HealthEventKind::Recovery => self.push(
                             ev.at_ms,
-                            EventKind::DetectRecovery { replica: r, node: ev.node },
+                            EventKind::DetectRecovery { replica: local_r, node: ev.node },
                         ),
                     }
                 }
             }
         }
     }
-    eng.run()
-}
 
-impl<B: StageBackend> Engine<'_, B> {
     fn push(&mut self, at_ms: f64, kind: EventKind) {
         self.seq += 1;
         self.heap.push(Event {
@@ -552,31 +1064,47 @@ impl<B: StageBackend> Engine<'_, B> {
         });
     }
 
-    fn run(mut self) -> Result<ServiceReport> {
-        while let Some(ev) = self.heap.pop() {
+    fn run(mut self) -> Result<ShardOutcome> {
+        loop {
+            // Top up from the live intake (if any) until the earliest
+            // heap event is at or before the arrival watermark.
+            self.pull_arrivals();
+            // All traffic served and nothing queued or in flight: stop.
+            // Matching the seed loop, failure events scheduled after the
+            // stream ends never fire and do not stretch the sim span.
+            if self.is_done() {
+                break;
+            }
+            let Some(ev) = self.heap.pop() else {
+                break;
+            };
             self.events_processed += 1;
             self.clock_ms = self.clock_ms.max(ev.at_ms);
             let t = self.clock_ms;
             match ev.kind {
-                EventKind::Arrival(req) => {
-                    self.remaining_arrivals -= 1;
-                    let r = if self.states.len() == 1 {
-                        0
-                    } else {
-                        // Expired requests must not inflate a replica's
-                        // apparent load before the router reads it.
-                        for r in 0..self.states.len() {
-                            self.prune_expired(r, t);
+                EventKind::Arrival { req, replica } => {
+                    self.pending_arrivals -= 1;
+                    let r = match replica {
+                        // Pinned: pre-routed streams and shards (whose
+                        // one local replica is 0) bypass the router.
+                        Some(r) => r,
+                        None if self.states.len() == 1 => 0,
+                        None => {
+                            // Expired requests must not inflate a replica's
+                            // apparent load before the router reads it.
+                            for r in 0..self.states.len() {
+                                self.prune_expired(r, t);
+                            }
+                            let loads: Vec<ReplicaLoad> = self
+                                .states
+                                .iter()
+                                .map(|s| ReplicaLoad {
+                                    queued: s.queue.len(),
+                                    in_flight: s.in_flight_reqs,
+                                })
+                                .collect();
+                            self.router.route(&loads)
                         }
-                        let loads: Vec<ReplicaLoad> = self
-                            .states
-                            .iter()
-                            .map(|s| ReplicaLoad {
-                                queued: s.queue.len(),
-                                in_flight: s.in_flight_reqs,
-                            })
-                            .collect();
-                        self.router.route(&loads)
                     };
                     self.states[r].queue.push_back(req);
                     self.try_dispatch(r, t)?;
@@ -620,15 +1148,6 @@ impl<B: StageBackend> Engine<'_, B> {
                     self.on_stage_done(replica, batch, t)?;
                 }
             }
-            // All traffic served and nothing queued or in flight: stop.
-            // Matching the seed loop, failure events scheduled after the
-            // stream ends never fire and do not stretch the sim span.
-            if self.remaining_arrivals == 0
-                && self.batches.is_empty()
-                && self.states.iter().all(|s| s.queue.is_empty())
-            {
-                break;
-            }
         }
 
         // Requests a wedged replica could never serve (e.g. a second
@@ -643,28 +1162,89 @@ impl<B: StageBackend> Engine<'_, B> {
                     dropped_at_ms: self.clock_ms,
                     degraded,
                 });
+                self.note_request_retired();
             }
         }
 
-        let span = self.clock_ms.max(1e-9);
         let (plan_hits, plan_misses) = self
             .plan_caches
             .iter()
             .fold((0, 0), |(h, m), c| (h + c.hits(), m + c.misses()));
-        Ok(ServiceReport {
-            throughput_rps: self.completed_count as f64 / (span / 1e3),
-            latency: self.latency.summary(),
+        Ok(ShardOutcome {
+            latency: self.latency,
             completed: self.completed,
             completed_count: self.completed_count,
             dropped: self.dropped,
-            failovers: self.windows,
-            sim_span_ms: span,
+            windows: self.windows,
             max_in_flight: self.max_in_flight,
-            events_processed: self.events_processed,
             batches_dispatched: self.batches_dispatched,
-            plan_cache_hits: plan_hits,
-            plan_cache_misses: plan_misses,
+            events_processed: self.events_processed,
+            clock_ms: self.clock_ms,
+            plan_hits,
+            plan_misses,
         })
+    }
+
+    /// The run is over when no arrival can still come in (heap arrivals
+    /// exhausted and the live intake, if any, closed) and nothing is
+    /// queued or in flight anywhere. Failure events left in the heap
+    /// never fire — the seed's "failures after the stream ends don't
+    /// count" idiom.
+    fn is_done(&self) -> bool {
+        self.pending_arrivals == 0
+            && self.intake.as_ref().is_none_or(|i| !i.open)
+            && self.batches.is_empty()
+            && self.states.iter().all(|s| s.queue.is_empty())
+    }
+
+    /// Drain the live intake into the heap until the earliest heap event
+    /// is safely processable: the feeder sends arrivals in nondecreasing
+    /// time, so once the watermark reaches the earliest heap event no
+    /// later-fed request can precede it. Blocks on the channel while the
+    /// heap is empty or still ahead of the watermark; channel close
+    /// lifts the watermark to infinity (the shard drains). No-op without
+    /// an intake (preloaded shards and the sequential engine).
+    fn pull_arrivals(&mut self) {
+        loop {
+            let msg = {
+                let Some(intake) = self.intake.as_mut() else { return };
+                if !intake.open {
+                    return;
+                }
+                if self
+                    .heap
+                    .peek()
+                    .is_some_and(|ev| ev.at_ms <= intake.watermark_ms)
+                {
+                    return;
+                }
+                intake.rx.recv()
+            };
+            match msg {
+                Ok(req) => {
+                    self.pending_arrivals += 1;
+                    let at = req.arrival_ms;
+                    self.push(at, EventKind::Arrival { req, replica: Some(0) });
+                    if let Some(intake) = self.intake.as_mut() {
+                        intake.watermark_ms = at;
+                    }
+                }
+                Err(_) => {
+                    if let Some(intake) = self.intake.as_mut() {
+                        intake.open = false;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tell the sharded router's feeder this shard retired one request
+    /// (served or dropped); live JSQ routing reads these counters. No-op
+    /// outside channel-fed sharding.
+    fn note_request_retired(&self) {
+        if let Some(c) = &self.outstanding {
+            c.fetch_sub(1, AtomicOrdering::Relaxed);
+        }
     }
 
     /// A batch reaches stage `b.stage`: requeue it if the host died while
@@ -720,6 +1300,7 @@ impl<B: StageBackend> Engine<'_, B> {
                 let latency_ms = t - q.arrival_ms;
                 self.latency.record(latency_ms);
                 self.completed_count += 1;
+                self.note_request_retired();
                 if self.cfg.record_completions {
                     self.completed.push(Completion {
                         id: q.id,
@@ -850,6 +1431,7 @@ impl<B: StageBackend> Engine<'_, B> {
                     dropped_at_ms: t,
                     degraded,
                 });
+                self.note_request_retired();
             } else {
                 break;
             }
@@ -873,6 +1455,7 @@ mod tests {
             route,
             decision_ms_override: Some(1.5),
             record_completions: true,
+            execution: Execution::Sequential,
         }
     }
 
@@ -886,6 +1469,7 @@ mod tests {
             route: RoutePolicy::RoundRobin,
             decision_ms_override: Some(1.5),
             record_completions: true,
+            execution: Execution::Sequential,
         }
     }
 
@@ -1360,5 +1944,212 @@ mod tests {
         let a = format!("{:?}", run());
         let b = format!("{:?}", run());
         assert_eq!(a, b, "same-seed monitored runs must be byte-identical");
+    }
+
+    // --- sharded execution: same-seed equivalence + JSQ conservation ---
+
+    /// Assert a merged sharded report matches the sequential reference:
+    /// exact on every counter, histogram bucket and record, except
+    /// mean/std (float accumulation order differs by a few ulps) and
+    /// drop timestamps/modes — the sequential router prunes *every*
+    /// replica's queue at each routed arrival while a shard prunes only
+    /// at its own events, so expired requests are identical as a set of
+    /// (id, replica, arrival) but can be logged at different times.
+    fn assert_equivalent(seq: &ServiceReport, shard: &ServiceReport) {
+        assert_eq!(seq.completed_count, shard.completed_count);
+        assert_eq!(seq.batches_dispatched, shard.batches_dispatched);
+        assert_eq!(seq.events_processed, shard.events_processed);
+        assert_eq!(seq.max_in_flight, shard.max_in_flight);
+        assert_eq!(seq.plan_cache_hits, shard.plan_cache_hits);
+        assert_eq!(seq.plan_cache_misses, shard.plan_cache_misses);
+        assert_eq!(seq.sim_span_ms, shard.sim_span_ms);
+        // Histogram merge is exact: bucket for bucket.
+        let (seq_low, seq_buckets) = seq.latency_stream.hist().buckets();
+        let (sh_low, sh_buckets) = shard.latency_stream.hist().buckets();
+        assert_eq!(seq_low, sh_low);
+        assert_eq!(seq_buckets, sh_buckets, "histograms must match bucket-for-bucket");
+        assert_eq!(seq.latency_stream.n(), shard.latency_stream.n());
+        assert_eq!(seq.latency_stream.min(), shard.latency_stream.min());
+        assert_eq!(seq.latency_stream.max(), shard.latency_stream.max());
+        assert_eq!(seq.latency.p50, shard.latency.p50);
+        assert_eq!(seq.latency.p95, shard.latency.p95);
+        assert_eq!(seq.latency.p99, shard.latency.p99);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+        assert!(
+            rel(shard.latency.mean, seq.latency.mean) < 1e-9,
+            "mean {} vs {}",
+            shard.latency.mean,
+            seq.latency.mean
+        );
+        assert!(
+            rel(shard.latency.std, seq.latency.std) < 1e-9,
+            "std {} vs {}",
+            shard.latency.std,
+            seq.latency.std
+        );
+        // Failover windows: identical set (merge sorts by start time).
+        let windows = |r: &ServiceReport| {
+            let mut v: Vec<String> = r.failovers.iter().map(|w| format!("{w:?}")).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(windows(seq), windows(shard));
+        // Completions: identical records, order-independent.
+        let completions = |r: &ServiceReport| {
+            let mut v: Vec<String> = r.completed.iter().map(|c| format!("{c:?}")).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(completions(seq), completions(shard));
+        // Drops: identical (id, replica, arrival) set.
+        let drops = |r: &ServiceReport| {
+            let mut v: Vec<(usize, usize, u64)> = r
+                .dropped
+                .iter()
+                .map(|d| (d.id, d.replica, d.arrival_ms.to_bits()))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(drops(seq), drops(shard));
+    }
+
+    fn equivalence_fixture() -> (Vec<SyntheticBackend>, Vec<Failover>, Vec<FailurePlan>) {
+        let backends = vec![
+            SyntheticBackend::uniform(4, 5.0, 1.0),
+            SyntheticBackend::uniform(4, 5.0, 1.0),
+        ];
+        let failovers = vec![
+            Failover::new(Objectives::default()),
+            Failover::new(Objectives::default()),
+        ];
+        // Both plans land (and recover) while their replica still has
+        // traffic in flight — the equivalence precondition the module
+        // docs spell out.
+        let plans = vec![
+            FailurePlan::crash_recover(2, 40.0, 120.0),
+            FailurePlan::crash_recover(3, 60.0, 140.0),
+        ];
+        (backends, failovers, plans)
+    }
+
+    #[test]
+    fn sharded_rr_matches_sequential_bucket_for_bucket() {
+        // Oversaturated (250 rps offered per replica vs the 200 rps
+        // bottleneck) with a tight deadline: completions, drops and two
+        // mid-stream failovers all in play.
+        let reqs = generate(300, Arrival::Poisson { rate_rps: 500.0 }, 8, 71);
+        let run = |execution: Execution| {
+            let (mut backends, mut failovers, plans) = equivalence_fixture();
+            let mut c = cfg(2, RoutePolicy::RoundRobin);
+            c.deadline_ms = Some(100.0);
+            c.execution = execution;
+            serve(&mut backends, &StaticMetrics, &mut failovers, &c, &reqs, &pool(), &plans)
+                .unwrap()
+        };
+        let seq = run(Execution::Sequential);
+        assert!(seq.completed_count > 0);
+        assert!(!seq.dropped.is_empty(), "deadline must bite for a meaningful test");
+        assert_eq!(seq.failovers.len(), 2);
+        // Worker count must not change results — shards multiplex.
+        for workers in [1, 2, 4] {
+            let shard = run(Execution::Sharded(workers));
+            assert_equivalent(&seq, &shard);
+        }
+    }
+
+    #[test]
+    fn sharded_monitored_matches_sequential() {
+        // Monitored health: each shard re-derives its replica's detection
+        // stream from the global replica index and traffic horizon.
+        let health = clean_channel(DetectorKind::FixedTimeout { timeout_ms: 25.0 }, 40.0);
+        let reqs = generate(200, Arrival::Poisson { rate_rps: 400.0 }, 8, 29);
+        let run = |execution: Execution| {
+            let (mut backends, mut failovers, plans) = equivalence_fixture();
+            let mut c = monitored(2, health.clone());
+            c.execution = execution;
+            serve(&mut backends, &StaticMetrics, &mut failovers, &c, &reqs, &pool(), &plans)
+                .unwrap()
+        };
+        let seq = run(Execution::Sequential);
+        assert_eq!(seq.failovers.len(), 2);
+        assert_equivalent(&seq, &run(Execution::Sharded(2)));
+    }
+
+    #[test]
+    fn routed_streams_sequential_and_sharded_agree() {
+        // Pre-routed per-replica streams: both modes consume byte-identical
+        // schedules, the strongest equivalence surface.
+        let streams = crate::workload::generate_per_replica(
+            120,
+            Arrival::Poisson { rate_rps: 250.0 },
+            8,
+            83,
+            2,
+        );
+        let run = |execution: Execution| {
+            let (mut backends, mut failovers, plans) = equivalence_fixture();
+            let mut c = cfg(2, RoutePolicy::RoundRobin);
+            c.execution = execution;
+            serve_routed(&mut backends, &StaticMetrics, &mut failovers, &c, &streams, &pool(), &plans)
+                .unwrap()
+        };
+        let seq = run(Execution::Sequential);
+        assert_eq!(seq.completed_count, 240, "no deadline: everything serves");
+        assert_equivalent(&seq, &run(Execution::Sharded(2)));
+    }
+
+    #[test]
+    fn sharded_jsq_conserves_and_completes() {
+        // 3 replicas multiplexed onto 2 workers: the non-blocking feeder
+        // must not deadlock even while one shard has no worker yet, and
+        // every request must be served or dropped by exactly one shard.
+        let mut backends: Vec<SyntheticBackend> =
+            (0..3).map(|_| SyntheticBackend::uniform(4, 5.0, 1.0)).collect();
+        let mut failovers: Vec<Failover> =
+            (0..3).map(|_| Failover::new(Objectives::default())).collect();
+        let reqs = generate(120, Arrival::Uniform { gap_ms: 1.0 }, 8, 37);
+        let mut c = cfg(2, RoutePolicy::JoinShortestQueue);
+        c.execution = Execution::Sharded(2);
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &c,
+            &reqs,
+            &pool(),
+            &[FailurePlan::crash_recover(2, 20.0, 60.0)],
+        )
+        .unwrap();
+        assert_eq!(report.completed_count + report.dropped.len(), 120, "conservation");
+        let mut ids: Vec<usize> = report
+            .completed
+            .iter()
+            .map(|c| c.id)
+            .chain(report.dropped.iter().map(|d| d.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..120).collect::<Vec<_>>(), "each request exactly once");
+        assert!(report.dropped.is_empty(), "no deadline: nothing drops");
+        assert_eq!(report.latency_stream.n(), 120);
+        // A saturating stream spreads across all three shards.
+        for r in 0..3 {
+            assert!(
+                report.completed.iter().any(|c| c.replica == r),
+                "replica {r} served nothing"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_zero_requests_is_empty_report() {
+        let (mut backends, mut failovers, plans) = equivalence_fixture();
+        let c = cfg(1, RoutePolicy::RoundRobin).sharded(2);
+        let report =
+            serve(&mut backends, &StaticMetrics, &mut failovers, &c, &[], &pool(), &plans)
+                .unwrap();
+        assert_eq!(report.completed_count, 0);
+        assert!(report.dropped.is_empty());
+        assert_eq!(report.latency_stream.n(), 0);
     }
 }

@@ -28,13 +28,33 @@
 //!
 //! The engine's steady-state hot path allocates nothing per event: step
 //! plans are memoized per replica in a [`plan_cache::PlanCache`]
-//! (`Rc<[Step]>`, one miss per distinct technique/failure pair),
+//! (`Arc<[Step]>`, one miss per distinct technique/failure pair),
 //! in-flight batches live in a generational slab whose slots are
 //! free-list reused, synthetic-path activations are shape-only handles
 //! (the real PJRT path materializes its batch in one gather), and
 //! latency metrics stream into a log-bucketed histogram + online moments
 //! instead of a grow-forever completion vector (exact records return
 //! behind `EngineConfig::record_completions`).
+//!
+//! # Threading
+//!
+//! The engine runs in one of two modes ([`engine::Execution`]):
+//! `Sequential` is the single-threaded deterministic reference;
+//! `Sharded(workers)` runs one shard per replica on real threads
+//! ([`crate::util::threadpool`]). Everything a shard touches is already
+//! per-replica state — event heap, slab, plan cache, streaming metrics,
+//! failover controller — so shards share nothing mutable: round-robin
+//! arrivals are pre-split positionally, join-shortest-queue arrivals are
+//! fed live over channels routed by per-replica atomic outstanding
+//! counters ([`router::ShardRouter`]), and per-shard reports merge at
+//! the end (exact histogram-bucket adds, pairwise Welford combine,
+//! record/window concat). Same-seed sequential and round-robin-sharded
+//! runs produce bucket-for-bucket identical merged metrics — asserted in
+//! the engine tests and the `sharded_equivalence` property test. The
+//! [`RecoveryPolicy`] trait requires `Send + Sync` so boxed policies can
+//! cross onto worker threads; the PJRT-backed [`service::run`] path
+//! stays on [`engine::serve_sequential`] because the real cluster holds
+//! `RefCell` caches.
 
 pub mod batcher;
 pub mod engine;
@@ -47,12 +67,15 @@ pub mod router;
 pub mod scheduler;
 pub mod service;
 
-pub use engine::{serve, EngineConfig, HealthMode, StageBackend, SyntheticBackend};
+pub use engine::{
+    serve, serve_routed, serve_sequential, EngineConfig, Execution, HealthMode, StageBackend,
+    SyntheticBackend,
+};
 pub use plan_cache::PlanCache;
 pub use estimator::{Estimator, MetricsSource, StaticMetrics};
 pub use failover::{Failover, FailoverReport, Mode};
 pub use policy::{Continuer, RecoveryPolicy};
 pub use profiler::{fit_platform, platform_transform, DowntimeTable, LayerProfiler, PlatformLatencyModel};
-pub use router::{ReplicaLoad, RoutePolicy, Router};
+pub use router::{ReplicaLoad, RoutePolicy, Router, ShardRouter};
 pub use scheduler::{select, weight_sweep, CandidateMetrics, Decision};
 pub use service::{Completion, DroppedRequest, FailoverWindow, ServiceConfig, ServiceReport};

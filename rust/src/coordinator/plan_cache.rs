@@ -3,17 +3,23 @@
 //! A replica's step plan depends only on `(technique, failed_node)` — the
 //! chain layout is fixed for the run — yet the engine used to re-derive
 //! and re-allocate a fresh `Vec<Step>` from the backend on *every* batch
-//! dispatch. [`PlanCache`] memoizes each plan behind an `Rc<[Step]>`, so
+//! dispatch. [`PlanCache`] memoizes each plan behind an `Arc<[Step]>`, so
 //! steady-state dispatch and failover switch plans by pointer: after
 //! warm-up (one miss per distinct technique/failure pair) dispatch
 //! performs zero step-plan allocations, which the hit/miss counters let
 //! tests and benches assert directly.
 //!
+//! Plans are `Arc` rather than `Rc` so they are `Send`: the sharded
+//! engine moves each replica's cache onto its worker thread, and a cache
+//! warmed on one thread can seed another via [`PlanCache::share_warmed`]
+//! (entries shared by pointer, counters reset so per-shard hit/miss
+//! accounting stays correct under sharding).
+//!
 //! Lookup is a linear scan over the few plans a run ever sees (healthy
 //! plus one per failover decision) — deliberately no hashing on the
 //! per-batch path.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::cluster::sim::Step;
 use crate::dnn::variants::Technique;
@@ -21,9 +27,9 @@ use crate::dnn::variants::Technique;
 use super::engine::StageBackend;
 
 /// Per-replica memo of `backend.steps(technique, failed)` results.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct PlanCache {
-    entries: Vec<((Technique, Option<usize>), Rc<[Step]>)>,
+    entries: Vec<((Technique, Option<usize>), Arc<[Step]>)>,
     hits: usize,
     misses: usize,
 }
@@ -34,22 +40,34 @@ impl PlanCache {
     }
 
     /// The step plan for `(tech, failed)`, deriving and caching it on
-    /// first sight. The returned `Rc` is a pointer copy on a hit.
+    /// first sight. The returned `Arc` is a pointer copy on a hit.
     pub fn plan<B: StageBackend + ?Sized>(
         &mut self,
         backend: &B,
         tech: Technique,
         failed: Option<usize>,
-    ) -> Rc<[Step]> {
+    ) -> Arc<[Step]> {
         let key = (tech, failed);
         if let Some((_, steps)) = self.entries.iter().find(|(k, _)| *k == key) {
             self.hits += 1;
-            return Rc::clone(steps);
+            return Arc::clone(steps);
         }
         self.misses += 1;
-        let steps: Rc<[Step]> = backend.steps(tech, failed).into();
-        self.entries.push((key, Rc::clone(&steps)));
+        let steps: Arc<[Step]> = backend.steps(tech, failed).into();
+        self.entries.push((key, Arc::clone(&steps)));
         steps
+    }
+
+    /// A copy of this cache that shares every entry by pointer but starts
+    /// its hit/miss counters at zero — the shape a shard wants when it
+    /// inherits a warmed cache: plans resolve without re-deriving, and
+    /// the shard's own counters measure only its own traffic.
+    pub fn share_warmed(&self) -> PlanCache {
+        PlanCache {
+            entries: self.entries.clone(),
+            hits: 0,
+            misses: 0,
+        }
     }
 
     /// Lookups served from the cache (no allocation).
@@ -84,7 +102,7 @@ mod tests {
         let first = cache.plan(&backend, Technique::Repartition, None);
         for _ in 0..99 {
             let again = cache.plan(&backend, Technique::Repartition, None);
-            assert!(Rc::ptr_eq(&first, &again), "hits must be pointer copies");
+            assert!(Arc::ptr_eq(&first, &again), "hits must be pointer copies");
         }
         assert_eq!(cache.misses(), 1, "one allocation at warm-up");
         assert_eq!(cache.hits(), 99, "every later dispatch reuses it");
@@ -107,5 +125,36 @@ mod tests {
         cache.plan(&backend, Technique::Repartition, None);
         assert_eq!(cache.misses(), 3);
         assert_eq!(cache.hits(), 1);
+    }
+
+    #[test]
+    fn shared_warm_cache_hits_without_rederiving() {
+        let backend = SyntheticBackend::uniform(4, 5.0, 1.0);
+        let mut warm = PlanCache::new();
+        let original = warm.plan(&backend, Technique::Repartition, None);
+
+        let mut shard = warm.share_warmed();
+        assert_eq!(shard.hits(), 0, "inherited counters start at zero");
+        assert_eq!(shard.misses(), 0);
+        let reused = shard.plan(&backend, Technique::Repartition, None);
+        assert!(
+            Arc::ptr_eq(&original, &reused),
+            "warm entries are shared by pointer across caches"
+        );
+        assert_eq!(shard.hits(), 1);
+        assert_eq!(shard.misses(), 0, "no re-derivation on a warm entry");
+        // The donor cache's counters are untouched by the shard's traffic.
+        assert_eq!(warm.hits(), 0);
+        assert_eq!(warm.misses(), 1);
+    }
+
+    #[test]
+    fn plans_are_send_for_sharding() {
+        fn assert_send<T: Send>(_: &T) {}
+        let backend = SyntheticBackend::uniform(4, 5.0, 1.0);
+        let mut cache = PlanCache::new();
+        let plan = cache.plan(&backend, Technique::Repartition, None);
+        assert_send(&plan);
+        assert_send(&cache);
     }
 }

@@ -12,7 +12,13 @@ use super::scheduler::{select, CandidateMetrics, Decision};
 
 /// A recovery policy: given the candidate techniques (with their predicted
 /// accuracy/latency and empirical downtime), pick one.
-pub trait RecoveryPolicy {
+///
+/// `Send + Sync` because each [`super::failover::Failover`] controller —
+/// and the boxed policy inside it — moves onto a worker thread when the
+/// engine runs sharded. Policies are decision tables over the candidate
+/// metrics (no shared mutable state), so every implementation satisfies
+/// the bound structurally.
+pub trait RecoveryPolicy: Send + Sync {
     fn name(&self) -> &'static str;
     fn decide(&self, candidates: &[CandidateMetrics]) -> Result<Decision>;
 }

@@ -2,6 +2,21 @@
 //! independent copy of the distributed pipeline (own cluster state, own
 //! failover controller); the router decides, per arriving request, which
 //! replica's queue it joins.
+//!
+//! Two routers live here:
+//!
+//! - [`Router`] is the sequential engine's: it reads exact per-replica
+//!   load snapshots at each arrival, inside the one event loop.
+//! - [`ShardRouter`] is the sharded engine's arrival feeder: replicas run
+//!   on worker threads, so exact queue lengths are not observable from
+//!   the feeder. Round-robin needs no load at all (requests are routed
+//!   positionally — at generation time), and join-shortest-queue routes
+//!   on per-replica [`AtomicUsize`] outstanding counters that the feeder
+//!   increments at enqueue and each shard decrements at completion or
+//!   drop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,6 +78,59 @@ impl Router {
     }
 }
 
+/// Live router for the sharded engine's arrival feeder: tracks each
+/// replica's outstanding requests (enqueued but not yet completed or
+/// dropped) in an atomic counter the shard's thread decrements.
+///
+/// Round-robin through this router reproduces the sequential router's
+/// positional assignment exactly; join-shortest-queue is a heuristic over
+/// racy counter reads and is therefore *not* part of the sequential-vs-
+/// sharded determinism contract (conservation still holds — every routed
+/// request is served or dropped by exactly one shard).
+#[derive(Debug)]
+pub struct ShardRouter {
+    policy: RoutePolicy,
+    next_rr: usize,
+    outstanding: Vec<Arc<AtomicUsize>>,
+}
+
+impl ShardRouter {
+    pub fn new(policy: RoutePolicy, replicas: usize) -> ShardRouter {
+        assert!(replicas > 0, "router needs >= 1 replica");
+        ShardRouter {
+            policy,
+            next_rr: 0,
+            outstanding: (0..replicas).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+        }
+    }
+
+    /// Replica `r`'s outstanding counter, to hand to its shard (which
+    /// decrements it once per completion or drop).
+    pub fn counter(&self, r: usize) -> Arc<AtomicUsize> {
+        Arc::clone(&self.outstanding[r])
+    }
+
+    /// Route one arrival and charge the chosen replica's counter.
+    pub fn route(&mut self) -> usize {
+        let r = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let r = self.next_rr % self.outstanding.len();
+                self.next_rr = self.next_rr.wrapping_add(1);
+                r
+            }
+            RoutePolicy::JoinShortestQueue => self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, c)| (c.load(Ordering::Relaxed), *i))
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.outstanding[r].fetch_add(1, Ordering::Relaxed);
+        r
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,5 +163,26 @@ mod tests {
     fn jsq_breaks_ties_low_index() {
         let mut r = Router::new(RoutePolicy::JoinShortestQueue);
         assert_eq!(r.route(&loads(&[(1, 1), (2, 0), (0, 2)])), 0);
+    }
+
+    #[test]
+    fn shard_router_rr_matches_positional_assignment() {
+        let mut r = ShardRouter::new(RoutePolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..7).map(|_| r.route()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn shard_router_jsq_follows_outstanding_counters() {
+        let mut r = ShardRouter::new(RoutePolicy::JoinShortestQueue, 3);
+        // All zero: lowest index wins and gets charged.
+        assert_eq!(r.route(), 0);
+        assert_eq!(r.route(), 1);
+        assert_eq!(r.route(), 2);
+        assert_eq!(r.counter(0).load(Ordering::Relaxed), 1);
+        // A shard drains replica 1: it becomes the shortest queue.
+        r.counter(1).fetch_sub(1, Ordering::Relaxed);
+        assert_eq!(r.route(), 1);
+        assert_eq!(r.counter(1).load(Ordering::Relaxed), 1);
     }
 }

@@ -19,11 +19,12 @@ use crate::cluster::failure::{Detector, FailurePlan};
 use crate::cluster::sim::EdgeCluster;
 use crate::dnn::variants::Technique;
 use crate::runtime::HostTensor;
+use crate::util::histogram::Streaming;
 use crate::util::stats::Summary;
 use crate::workload::Request;
 
 use super::batcher::BatcherConfig;
-use super::engine::{serve, EngineConfig};
+use super::engine::{serve_sequential, EngineConfig};
 use super::estimator::Estimator;
 use super::failover::Failover;
 
@@ -94,6 +95,12 @@ pub struct ServiceReport {
     /// percentiles from the log-bucketed histogram (within one bucket's
     /// relative error, 2%).
     pub latency: Summary,
+    /// The raw streaming accumulator behind [`Self::latency`] (histogram
+    /// buckets + Welford moments). Exposed so callers can merge reports
+    /// across runs and so the sharded-equivalence tests can compare a
+    /// merged sharded run against the sequential reference
+    /// bucket-for-bucket.
+    pub latency_stream: Streaming,
     pub throughput_rps: f64,
     pub failovers: Vec<FailoverWindow>,
     pub sim_span_ms: f64,
@@ -152,7 +159,9 @@ impl ServiceConfig {
 
 /// Run the service simulation on a single pipeline (seed-compatible
 /// entry point; multi-replica / pipelined serving goes through
-/// [`super::engine::serve`] directly).
+/// [`super::engine::serve`] directly). Uses the sequential engine
+/// unconditionally: the PJRT cluster and the estimator hold host-side
+/// caches behind `RefCell` and cannot cross threads.
 pub fn run(
     cluster: &mut EdgeCluster,
     est: &Estimator,
@@ -162,7 +171,7 @@ pub fn run(
     inputs: &HostTensor, // pool of eval images [n, ...]
     plan: &FailurePlan,
 ) -> Result<ServiceReport> {
-    serve(
+    serve_sequential(
         std::slice::from_mut(cluster),
         est,
         std::slice::from_mut(failover),

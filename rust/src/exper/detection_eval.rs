@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::cluster::failure::FailurePlan;
 use crate::config::Objectives;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use crate::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
 use crate::coordinator::estimator::StaticMetrics;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::router::RoutePolicy;
@@ -88,6 +88,7 @@ fn run_point_with(
         decision_ms_override: Some(2.0),
         // The sweep reads only aggregates — stream, keep no records.
         record_completions: false,
+        execution: Execution::Sequential,
     };
     let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
     let mut failovers = vec![Failover::new(Objectives::default())];

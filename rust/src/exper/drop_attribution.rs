@@ -20,7 +20,7 @@ use anyhow::Result;
 use crate::cluster::failure::{Detector, FailurePlan, NodeCondition};
 use crate::config::Objectives;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use crate::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
 use crate::coordinator::estimator::StaticMetrics;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::router::RoutePolicy;
@@ -109,6 +109,7 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
         // Drop classification reads `dropped` and counts — stream the
         // completions instead of recording them.
         record_completions: false,
+        execution: Execution::Sequential,
     };
     let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
     let mut failovers = vec![Failover::new(Objectives::default())];

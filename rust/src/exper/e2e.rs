@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::cluster::failure::{Detector, FailurePlan};
 use crate::cluster::sim::EdgeCluster;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::engine::{serve, EngineConfig, HealthMode};
+use crate::coordinator::engine::{serve_sequential, EngineConfig, Execution, HealthMode};
 use crate::coordinator::estimator::Estimator;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::profiler::DowntimeTable;
@@ -154,8 +154,10 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         // The report splits healthy vs degraded completions below, so
         // keep exact per-request records.
         record_completions: true,
+        // PJRT clusters hold RefCell caches and cannot cross threads.
+        execution: Execution::Sequential,
     };
-    serve(
+    serve_sequential(
         &mut clusters,
         &est,
         &mut failovers,

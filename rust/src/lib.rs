@@ -33,13 +33,20 @@
 //!   the bottleneck stage) across `R` pipeline replicas behind a
 //!   round-robin / join-shortest-queue router, with per-replica failure
 //!   injection and failover. The engine's steady-state hot path is
-//!   allocation-free: step plans are cached (`PlanCache`, `Rc<[Step]>`),
+//!   allocation-free: step plans are cached (`PlanCache`, `Arc<[Step]>`),
 //!   in-flight batches live in a generational slab with free-list slot
 //!   reuse, synthetic activations are shape-only handles (the real PJRT
 //!   path materializes batches in one gather), and latency metrics
 //!   stream into a log-bucketed histogram + online moments so run memory
 //!   is O(1) in request count (exact per-request records return behind
-//!   `EngineConfig::record_completions`).
+//!   `EngineConfig::record_completions`). Under
+//!   `EngineConfig::execution: Sharded(workers)` the event loop itself
+//!   shards per replica onto real threads — each shard owns its heap,
+//!   slab, plan cache and streaming metrics; arrivals are round-robin
+//!   pre-split or JSQ-fed over atomic load counters; per-shard reports
+//!   merge (exact histogram adds, Welford pairwise moments) into one
+//!   `ServiceReport` that is bucket-identical to the sequential
+//!   reference on the same seed.
 //! - [`workload`], [`baselines`], [`exper`] support the evaluation: load
 //!   generators (with per-replica stream helpers), comparison policies
 //!   (all implementing the same [`coordinator::RecoveryPolicy`] trait

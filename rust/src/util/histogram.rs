@@ -73,6 +73,34 @@ impl LogHistogram {
         self.total
     }
 
+    /// The raw bucket state: the low-bucket count plus the geometric
+    /// bucket counts. Exposed so sharded-engine merges can be asserted
+    /// bucket-for-bucket against a sequential reference run.
+    pub fn buckets(&self) -> (u64, &[u64]) {
+        (self.low, &self.counts)
+    }
+
+    /// Fold another histogram into this one. Bucket counts are integers,
+    /// so merging shards is *exact*: merge-of-parts is bucket-for-bucket
+    /// identical to recording the concatenated stream. Panics if the two
+    /// histograms were built with different geometry.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert!(
+            self.min_value == other.min_value
+                && self.growth == other.growth
+                && self.max_buckets == other.max_buckets,
+            "LogHistogram::merge: mismatched geometry"
+        );
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.low += other.low;
+        self.total += other.total;
+    }
+
     /// One bucket's relative width — the quantile error bound.
     pub fn relative_error(&self) -> f64 {
         self.growth - 1.0
@@ -150,6 +178,49 @@ impl Streaming {
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn hist(&self) -> &LogHistogram {
+        &self.hist
+    }
+
+    /// Fold another accumulator into this one (Chan et al.'s pairwise
+    /// Welford combine). Counts, min/max and histogram buckets merge
+    /// exactly; mean and variance are exact up to float rounding — the
+    /// combined `m2` can differ from the single-stream accumulation by
+    /// a few ulps because the addition order differs, which is why
+    /// sequential-vs-sharded equivalence asserts them within a relative
+    /// tolerance rather than bit-for-bit.
+    pub fn merge(&mut self, other: &Streaming) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let delta = other.mean - self.mean;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.hist.merge(&other.hist);
     }
 
     /// Render the accumulated stream as a [`Summary`]: mean/std/min/max
@@ -239,5 +310,84 @@ mod tests {
         let sum = s.summary();
         assert_eq!(sum.n, 0);
         assert_eq!(sum.mean, 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_of_halves_is_bucket_exact() {
+        let xs: Vec<f64> = (1..=999).map(|i| (i as f64 * 0.37).sin().abs() * 80.0 + 0.01).collect();
+        let mut whole = LogHistogram::latency_default();
+        let mut left = LogHistogram::latency_default();
+        let mut right = LogHistogram::latency_default();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.record(x);
+            if i % 2 == 0 {
+                left.record(x);
+            } else {
+                right.record(x);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left.count(), whole.count());
+        let (mlow, mcounts) = left.buckets();
+        let (wlow, wcounts) = whole.buckets();
+        assert_eq!(mlow, wlow);
+        assert_eq!(mcounts, wcounts, "merge must be bucket-for-bucket exact");
+        for q in [50.0, 95.0, 99.0] {
+            assert_eq!(left.quantile(q), whole.quantile(q));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched geometry")]
+    fn histogram_merge_rejects_mismatched_geometry() {
+        let mut a = LogHistogram::latency_default();
+        let b = LogHistogram::new(1.0, 2.0, 8);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn streaming_merge_of_halves_matches_whole_stream() {
+        let xs: Vec<f64> = (0..2000)
+            .map(|i| ((i as f64 * 0.613).cos() * 40.0).abs() + 0.5)
+            .collect();
+        let mut whole = Streaming::default();
+        let mut parts: Vec<Streaming> = (0..4).map(|_| Streaming::default()).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.record(x);
+            parts[i % 4].record(x);
+        }
+        let mut merged = parts.remove(0);
+        for p in &parts {
+            merged.merge(p);
+        }
+        let m = merged.summary();
+        let w = whole.summary();
+        assert_eq!(m.n, w.n);
+        assert_eq!(m.min, w.min, "min is exact");
+        assert_eq!(m.max, w.max, "max is exact");
+        // Welford pairwise combine: exact up to accumulation-order float
+        // rounding.
+        assert!((m.mean - w.mean).abs() <= 1e-12 * w.mean.abs(), "{} vs {}", m.mean, w.mean);
+        assert!((m.std - w.std).abs() <= 1e-9 * w.std.abs().max(1.0), "{} vs {}", m.std, w.std);
+        // Percentiles ride on the exactly-merged histogram.
+        assert_eq!(m.p50, w.p50);
+        assert_eq!(m.p95, w.p95);
+        assert_eq!(m.p99, w.p99);
+    }
+
+    #[test]
+    fn streaming_merge_with_empty_sides() {
+        let mut filled = Streaming::default();
+        for x in [1.0, 2.0, 3.0] {
+            filled.record(x);
+        }
+        let reference = filled.summary();
+        // empty.merge(filled) adopts the filled stream...
+        let mut empty = Streaming::default();
+        empty.merge(&filled);
+        assert_eq!(format!("{:?}", empty.summary()), format!("{reference:?}"));
+        // ...and filled.merge(empty) is a no-op.
+        filled.merge(&Streaming::default());
+        assert_eq!(format!("{:?}", filled.summary()), format!("{reference:?}"));
     }
 }

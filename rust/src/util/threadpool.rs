@@ -73,8 +73,26 @@ where
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    parallel_map_with(items, workers, f, || {})
+}
+
+/// [`parallel_map`] plus a foreground task: `foreground` runs on the
+/// *calling* thread while the worker threads map the items, and the call
+/// returns once both the foreground task and every item are done. This is
+/// the shape the sharded serving engine needs — shards run on scoped
+/// workers while the arrival feeder (which owns the channel senders and
+/// must observe shard backpressure counters live) runs alongside them.
+/// `foreground` needs no `Send`: it never leaves the calling thread.
+pub fn parallel_map_with<T, R, F, G>(items: Vec<T>, workers: usize, f: F, foreground: G) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+    G: FnOnce(),
+{
     let n = items.len();
     if n == 0 {
+        foreground();
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
@@ -94,6 +112,7 @@ where
                 }
             });
         }
+        foreground();
     });
     results
         .into_iter()
@@ -142,5 +161,37 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_with_runs_foreground_alongside_workers() {
+        // A feeder/consumer pair across the foreground/worker boundary:
+        // the foreground closure produces into a channel that a mapped
+        // item drains, so the call can only return if both ran
+        // concurrently under the same scope.
+        let (tx, rx) = mpsc::channel::<u32>();
+        let rx = Mutex::new(rx);
+        let out = parallel_map_with(
+            vec![0u32],
+            2,
+            |_| {
+                let rx = rx.lock().unwrap();
+                (0..100).map(|_| rx.recv().unwrap()).sum::<u32>()
+            },
+            move || {
+                for v in 0..100 {
+                    tx.send(v).unwrap();
+                }
+            },
+        );
+        assert_eq!(out, vec![(0..100).sum::<u32>()]);
+    }
+
+    #[test]
+    fn parallel_map_with_empty_still_runs_foreground() {
+        let mut ran = false;
+        let out: Vec<i32> = parallel_map_with(Vec::new(), 4, |x| x, || ran = true);
+        assert!(out.is_empty());
+        assert!(ran);
     }
 }

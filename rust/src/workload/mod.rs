@@ -27,6 +27,41 @@ pub enum Arrival {
 /// Generate `n` requests with the given arrival process.
 pub fn generate(n: usize, arrival: Arrival, pool_size: usize, seed: u64) -> Vec<Request> {
     let mut rng = Rng::new(seed);
+    generate_with(n, arrival, pool_size, &mut rng, 0)
+}
+
+/// Generate one independent arrival stream per replica: replica `r`
+/// draws from `Rng::new(seed).derive(r)`, so its schedule is a pure
+/// function of `(seed, r)` — byte-identical whether the streams are
+/// consumed interleaved by the sequential engine or each by its own
+/// shard, and unchanged when the replica count changes. Each stream
+/// carries `n_per_replica` requests (ids `r * n_per_replica ..`, globally
+/// unique) with the arrival process applied per replica, i.e. total
+/// offered load scales with the replica count.
+pub fn generate_per_replica(
+    n_per_replica: usize,
+    arrival: Arrival,
+    pool_size: usize,
+    seed: u64,
+    replicas: usize,
+) -> Vec<Vec<Request>> {
+    assert!(replicas > 0, "need >= 1 replica stream");
+    let root = Rng::new(seed);
+    (0..replicas)
+        .map(|r| {
+            let mut rng = root.derive(r as u64);
+            generate_with(n_per_replica, arrival, pool_size, &mut rng, r * n_per_replica)
+        })
+        .collect()
+}
+
+fn generate_with(
+    n: usize,
+    arrival: Arrival,
+    pool_size: usize,
+    rng: &mut Rng,
+    id_base: usize,
+) -> Vec<Request> {
     let mut out = Vec::with_capacity(n);
     let mut t = 0.0;
     match arrival {
@@ -35,7 +70,7 @@ pub fn generate(n: usize, arrival: Arrival, pool_size: usize, seed: u64) -> Vec<
             for id in 0..n {
                 t += rng.exp(rate_per_ms.max(1e-9));
                 out.push(Request {
-                    id,
+                    id: id_base + id,
                     arrival_ms: t,
                     input_idx: rng.below(pool_size.max(1)),
                 });
@@ -45,7 +80,7 @@ pub fn generate(n: usize, arrival: Arrival, pool_size: usize, seed: u64) -> Vec<
             for id in 0..n {
                 t += gap_ms;
                 out.push(Request {
-                    id,
+                    id: id_base + id,
                     arrival_ms: t,
                     input_idx: rng.below(pool_size.max(1)),
                 });
@@ -56,7 +91,7 @@ pub fn generate(n: usize, arrival: Arrival, pool_size: usize, seed: u64) -> Vec<
             while id < n {
                 for _ in 0..size.min(n - id) {
                     out.push(Request {
-                        id,
+                        id: id_base + id,
                         arrival_ms: t,
                         input_idx: rng.below(pool_size.max(1)),
                     });
@@ -166,6 +201,44 @@ mod tests {
     fn input_indices_within_pool() {
         let reqs = generate(100, Arrival::Poisson { rate_rps: 10.0 }, 5, 5);
         assert!(reqs.iter().all(|r| r.input_idx < 5));
+    }
+
+    #[test]
+    fn per_replica_streams_are_stable_under_replica_count() {
+        let arrival = Arrival::Poisson { rate_rps: 200.0 };
+        let two = generate_per_replica(50, arrival, 16, 9, 2);
+        let four = generate_per_replica(50, arrival, 16, 9, 4);
+        // Replica r's schedule (times + inputs) is a pure function of
+        // (seed, r): growing the fleet never reshuffles existing streams.
+        for r in 0..2 {
+            let (a, b) = (&two[r], &four[r]);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.arrival_ms, y.arrival_ms);
+                assert_eq!(x.input_idx, y.input_idx);
+            }
+        }
+        // Streams are mutually independent and ids globally unique.
+        assert_ne!(four[0][0].arrival_ms, four[1][0].arrival_ms);
+        let mut ids: Vec<usize> = four.iter().flatten().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..200).collect::<Vec<_>>());
+        // Each stream is arrival-ordered, like any generated stream.
+        for s in &four {
+            assert!(s.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        }
+    }
+
+    #[test]
+    fn per_replica_single_stream_matches_generate_shape() {
+        // One replica's stream has the same statistical machinery as
+        // generate() (same process, same pool bounds); ids start at 0.
+        let s = generate_per_replica(30, Arrival::Uniform { gap_ms: 2.0 }, 8, 4, 1);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].len(), 30);
+        assert_eq!(s[0][0].id, 0);
+        assert!((s[0][29].arrival_ms - 60.0).abs() < 1e-9);
+        assert!(s[0].iter().all(|r| r.input_idx < 8));
     }
 
     #[test]

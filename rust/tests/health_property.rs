@@ -10,7 +10,7 @@
 use continuer::cluster::failure::FailurePlan;
 use continuer::config::Objectives;
 use continuer::coordinator::batcher::BatcherConfig;
-use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
 use continuer::coordinator::estimator::StaticMetrics;
 use continuer::coordinator::router::RoutePolicy;
 use continuer::coordinator::Failover;
@@ -104,6 +104,7 @@ fn engine_conserves_requests_under_arbitrary_health_schedules() {
             decision_ms_override: Some(1.5),
             // The property inspects per-request ids below.
             record_completions: true,
+            execution: Execution::Sequential,
         };
         let requests = generate(
             n_requests,
@@ -174,6 +175,7 @@ fn oracle_mode_conserves_requests_too() {
             route: RoutePolicy::RoundRobin,
             decision_ms_override: Some(1.5),
             record_completions: true,
+            execution: Execution::Sequential,
         };
         let requests = generate(
             n_requests,

@@ -1,0 +1,249 @@
+//! Property: the sharded engine IS the sequential engine, observably.
+//!
+//! 1. For ANY seeded per-replica workload with in-span oracle failures,
+//!    running the same streams through `serve_routed` sequentially and
+//!    sharded onto real threads (any worker count) yields the same
+//!    merged report: bucket-identical latency histograms, identical
+//!    completion/drop sets, identical failover windows and counters.
+//!    (Oracle health keeps detection times a pure function of the plan;
+//!    the monitored path's equivalence is covered by fixed fixtures in
+//!    the engine's unit tests.)
+//! 2. The JSQ-sharded path — which routes over live atomic load
+//!    counters and is deliberately NOT bit-reproducible — still
+//!    conserves requests: every offered request completes or drops
+//!    exactly once, whatever the worker count.
+//!
+//! Failure plans are kept well inside each replica's arrival span
+//! (crash <= 0.3x, recovery <= 0.45x of the expected span): a shard
+//! stops its clock when its own work drains, so a detection scheduled
+//! past one replica's span would fire in the merged sequential run but
+//! not in that replica's shard. In-span plans are the documented
+//! contract for bucket-exact equivalence.
+
+use continuer::cluster::failure::{Detector, FailurePlan};
+use continuer::config::Objectives;
+use continuer::coordinator::batcher::BatcherConfig;
+use continuer::coordinator::engine::{
+    serve, serve_routed, EngineConfig, Execution, HealthMode, SyntheticBackend,
+};
+use continuer::coordinator::estimator::StaticMetrics;
+use continuer::coordinator::router::RoutePolicy;
+use continuer::coordinator::{Failover, ServiceReport};
+use continuer::runtime::HostTensor;
+use continuer::util::proptest::{check, prop_assert, prop_assert_eq, PropResult};
+use continuer::workload::{generate, generate_per_replica, Arrival, Request};
+
+fn run_routed(
+    replicas: usize,
+    nodes: usize,
+    stage_ms: f64,
+    streams: &[Vec<Request>],
+    plans: &[FailurePlan],
+    cfg: &EngineConfig,
+) -> ServiceReport {
+    let mut backends: Vec<SyntheticBackend> = (0..replicas)
+        .map(|_| SyntheticBackend::uniform(nodes, stage_ms, 1.0))
+        .collect();
+    let mut failovers: Vec<Failover> = (0..replicas)
+        .map(|_| Failover::new(Objectives::default()))
+        .collect();
+    let inputs = HostTensor::zeros(vec![8, 4]);
+    serve_routed(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        cfg,
+        streams,
+        &inputs,
+        plans,
+    )
+    .unwrap()
+}
+
+/// The merged sharded report must match the sequential reference on
+/// every observable the engine promises to preserve.
+fn assert_reports_match(seq: &ServiceReport, shard: &ServiceReport) -> PropResult {
+    prop_assert_eq(shard.completed_count, seq.completed_count)?;
+    prop_assert_eq(shard.events_processed, seq.events_processed)?;
+    prop_assert_eq(shard.batches_dispatched, seq.batches_dispatched)?;
+    prop_assert_eq(shard.plan_cache_hits, seq.plan_cache_hits)?;
+    prop_assert_eq(shard.plan_cache_misses, seq.plan_cache_misses)?;
+
+    // Bucket-for-bucket histogram equality (exact u64 adds commute).
+    let (seq_low, seq_counts) = seq.latency_stream.hist().buckets();
+    let (shard_low, shard_counts) = shard.latency_stream.hist().buckets();
+    prop_assert_eq(shard_low, seq_low)?;
+    prop_assert_eq(shard_counts, seq_counts)?;
+    prop_assert_eq(shard.latency_stream.n(), seq.latency_stream.n())?;
+    prop_assert(
+        shard.latency_stream.min() == seq.latency_stream.min()
+            && shard.latency_stream.max() == seq.latency_stream.max(),
+        "latency min/max diverged between sequential and sharded",
+    )?;
+    // Welford pairwise combine reorders float adds: moments agree to
+    // rounding, not to the bit.
+    let tol = 1e-9 * seq.latency.mean.abs().max(1.0);
+    prop_assert(
+        (shard.latency.mean - seq.latency.mean).abs() <= tol,
+        &format!(
+            "mean diverged: sequential {} vs sharded {}",
+            seq.latency.mean, shard.latency.mean
+        ),
+    )?;
+    let std_tol = 1e-9 * seq.latency.std.abs().max(1.0);
+    prop_assert(
+        (shard.latency.std - seq.latency.std).abs() <= std_tol,
+        &format!(
+            "std diverged: sequential {} vs sharded {}",
+            seq.latency.std, shard.latency.std
+        ),
+    )?;
+
+    // Failover windows are plan-driven and must agree exactly.
+    let windows = |r: &ServiceReport| {
+        let mut w: Vec<String> = r.failovers.iter().map(|w| format!("{w:?}")).collect();
+        w.sort();
+        w
+    };
+    prop_assert_eq(windows(shard), windows(seq))?;
+
+    // Drops: the (id, replica, arrival) set is mode-independent even
+    // though drop *timestamps* may differ (the sequential engine prunes
+    // every replica's queue at each event; a shard only at its own).
+    let drops = |r: &ServiceReport| {
+        let mut d: Vec<(usize, usize, u64)> = r
+            .dropped
+            .iter()
+            .map(|d| (d.id, d.replica, d.arrival_ms.to_bits()))
+            .collect();
+        d.sort_unstable();
+        d
+    };
+    prop_assert_eq(drops(shard), drops(seq))?;
+    Ok(())
+}
+
+#[test]
+fn sharded_matches_sequential_on_any_routed_workload() {
+    check(40, 0x5AA2DED, |g| {
+        let replicas = g.usize(1, 3);
+        let nodes = g.usize(3, 5);
+        let stage_ms = g.f64(1.0, 6.0);
+        let n_per_replica = g.usize(80, 160);
+        let rate_rps = g.f64(300.0, 600.0);
+        let span_est_ms = n_per_replica as f64 / (rate_rps / 1e3);
+
+        let streams = generate_per_replica(
+            n_per_replica,
+            Arrival::Poisson { rate_rps },
+            8,
+            g.rng().next_u64(),
+            replicas,
+        );
+        // Crash + recovery well inside every replica's own span (see
+        // the module docs for why that bounds exact equivalence).
+        let plans: Vec<FailurePlan> = (0..replicas)
+            .map(|_| {
+                let node = g.usize(2, nodes);
+                let down_ms = g.f64(0.05, 0.3) * span_est_ms;
+                let up_ms = down_ms + g.f64(0.02, 0.15) * span_est_ms;
+                FailurePlan::crash_recover(node, down_ms, up_ms)
+            })
+            .collect();
+        let mut cfg = EngineConfig {
+            batcher: BatcherConfig::new(vec![1, 4], 2.0, 4),
+            health: HealthMode::Oracle(Detector::default()),
+            deadline_ms: if g.bool() { Some(g.f64(40.0, 200.0)) } else { None },
+            pipeline_depth: g.usize(1, 3),
+            // Per-replica streams fix the assignment; the route policy
+            // is irrelevant on this path.
+            route: RoutePolicy::RoundRobin,
+            decision_ms_override: Some(1.5),
+            record_completions: false,
+            execution: Execution::Sequential,
+        };
+        let seq = run_routed(replicas, nodes, stage_ms, &streams, &plans, &cfg);
+        prop_assert(
+            seq.completed_count + seq.dropped.len() == replicas * n_per_replica,
+            "sequential reference must conserve requests",
+        )?;
+
+        let workers = g.usize(1, 4);
+        cfg.execution = Execution::Sharded(workers);
+        let shard = run_routed(replicas, nodes, stage_ms, &streams, &plans, &cfg);
+        assert_reports_match(&seq, &shard)
+    });
+}
+
+#[test]
+fn jsq_sharded_conserves_requests_for_any_worker_count() {
+    check(30, 0x15011A7, |g| {
+        let replicas = g.usize(2, 4);
+        let nodes = g.usize(3, 5);
+        let n_requests = g.usize(40, 200);
+        let rate_rps = g.f64(200.0, 800.0);
+        let span_est_ms = n_requests as f64 / (rate_rps / 1e3);
+
+        let mut backends: Vec<SyntheticBackend> = (0..replicas)
+            .map(|_| SyntheticBackend::uniform(nodes, g.f64(1.0, 6.0), 1.0))
+            .collect();
+        let mut failovers: Vec<Failover> = (0..replicas)
+            .map(|_| Failover::new(Objectives::default()))
+            .collect();
+        let plans: Vec<FailurePlan> = (0..replicas)
+            .map(|_| {
+                let node = g.usize(2, nodes);
+                let down_ms = g.f64(0.05, 0.3) * span_est_ms;
+                FailurePlan::crash_recover(node, down_ms, down_ms + 0.2 * span_est_ms)
+            })
+            .collect();
+        let cfg = EngineConfig {
+            batcher: BatcherConfig::new(vec![1, 4], 2.0, 4),
+            health: HealthMode::Oracle(Detector::default()),
+            deadline_ms: if g.bool() { Some(g.f64(40.0, 200.0)) } else { None },
+            pipeline_depth: g.usize(1, 3),
+            route: RoutePolicy::JoinShortestQueue,
+            decision_ms_override: Some(1.5),
+            // The property inspects per-request ids below.
+            record_completions: true,
+            execution: Execution::Sharded(g.usize(1, 4)),
+        };
+        let requests = generate(
+            n_requests,
+            Arrival::Poisson { rate_rps },
+            8,
+            g.rng().next_u64(),
+        );
+        let inputs = HostTensor::zeros(vec![8, 4]);
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &cfg,
+            &requests,
+            &inputs,
+            &plans,
+        )
+        .map_err(|e| format!("engine errored: {e}"))?;
+
+        prop_assert_eq(report.completed.len() + report.dropped.len(), n_requests)?;
+        prop_assert_eq(report.completed_count, report.completed.len())?;
+        let mut ids: Vec<usize> = report
+            .completed
+            .iter()
+            .map(|c| c.id)
+            .chain(report.dropped.iter().map(|d| d.id))
+            .collect();
+        ids.sort_unstable();
+        let expected: Vec<usize> = (0..n_requests).collect();
+        prop_assert(ids == expected, "request ids must partition 0..n exactly once")?;
+        prop_assert(
+            report
+                .completed
+                .iter()
+                .all(|c| c.latency_ms.is_finite() && c.latency_ms >= 0.0),
+            "non-finite completion latency",
+        )?;
+        Ok(())
+    });
+}

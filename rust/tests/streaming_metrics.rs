@@ -12,7 +12,7 @@
 use continuer::cluster::failure::{Detector, FailurePlan};
 use continuer::config::Objectives;
 use continuer::coordinator::batcher::BatcherConfig;
-use continuer::coordinator::engine::{serve, EngineConfig, HealthMode, SyntheticBackend};
+use continuer::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
 use continuer::coordinator::estimator::StaticMetrics;
 use continuer::coordinator::router::RoutePolicy;
 use continuer::coordinator::{Failover, ServiceReport};
@@ -78,6 +78,7 @@ fn engine_run(record_completions: bool, seed: u64) -> ServiceReport {
         route: RoutePolicy::JoinShortestQueue,
         decision_ms_override: Some(1.5),
         record_completions,
+        execution: Execution::Sequential,
     };
     let requests = generate(120, Arrival::Poisson { rate_rps: 600.0 }, 8, seed);
     let inputs = HostTensor::zeros(vec![8, 4]);
