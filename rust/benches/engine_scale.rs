@@ -21,6 +21,12 @@
 //!   capacity until p99 exceeds the 50 ms SLO; the knee (highest offered
 //!   rate still inside the SLO) lands in the JSON.
 //!
+//! A **tracing axis** guards the observability layer: the 4-replica
+//! round-robin workload run with the default `NoopSink` (must hold the
+//! baseline within 1% — the sink generic monomorphizes to nothing) and
+//! with a recording `EventBuffer` (reported, not asserted). Both land
+//! under the JSON's `tracing` key.
+//!
 //! Emits machine-readable `BENCH_engine_scale.json`: per case, wall-clock
 //! events/sec through the event loop, virtual-time throughput, peak
 //! batches in flight, plan allocations vs batches dispatched, and the
@@ -33,12 +39,15 @@ use std::time::Instant;
 use continuer::cluster::failure::{Detector, FailurePlan};
 use continuer::config::Objectives;
 use continuer::coordinator::batcher::BatcherConfig;
-use continuer::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
+use continuer::coordinator::engine::{
+    serve, serve_with_sink, EngineConfig, Execution, HealthMode, SyntheticBackend,
+};
 use continuer::coordinator::estimator::MetricsSource;
 use continuer::coordinator::router::RoutePolicy;
 use continuer::coordinator::scheduler::CandidateMetrics;
 use continuer::coordinator::Failover;
 use continuer::dnn::variants::Technique;
+use continuer::obs::EventBuffer;
 use continuer::runtime::HostTensor;
 use continuer::util::bench::{f, Table};
 use continuer::util::cli::Args;
@@ -199,6 +208,71 @@ fn scale_case(
     }
 }
 
+/// One arm of the tracing axis: the 4-replica round-robin sequential
+/// workload run with the default `NoopSink` (via `serve`) or with a
+/// recording `EventBuffer` (via `serve_with_sink`). Returns wall-clock
+/// events/sec and the number of observability events captured.
+fn tracing_arm(n_requests: usize, record: bool) -> (f64, usize) {
+    let replicas = 4usize;
+    let rate_rps = 2500.0 * replicas as f64;
+    let span_est_ms = n_requests as f64 / (rate_rps / 1e3);
+    let mut backends: Vec<SyntheticBackend> = (0..replicas)
+        .map(|_| SyntheticBackend::uniform(NODES, STAGE_MS, HOP_MS))
+        .collect();
+    let mut failovers: Vec<Failover> = (0..replicas)
+        .map(|_| Failover::new(Objectives::default()))
+        .collect();
+    let plans: Vec<FailurePlan> = (0..replicas)
+        .map(|r| {
+            let node = 2 + (r % (NODES - 1));
+            FailurePlan::crash_recover(node, 0.25 * span_est_ms, 0.1 * span_est_ms)
+        })
+        .collect();
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1, 2, 4, 8, 16], 2.0, 16),
+        health: HealthMode::Oracle(Detector::default()),
+        deadline_ms: None,
+        pipeline_depth: DEPTH,
+        route: RoutePolicy::RoundRobin,
+        decision_ms_override: Some(1.5),
+        record_completions: false,
+        execution: Execution::Sequential,
+    };
+    let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let mut sink = EventBuffer::default();
+    let t0 = Instant::now();
+    let report = if record {
+        serve_with_sink(
+            &mut backends,
+            &StubMetrics,
+            &mut failovers,
+            &cfg,
+            &requests,
+            &inputs,
+            &plans,
+            &mut sink,
+        )
+        .unwrap()
+    } else {
+        serve(
+            &mut backends,
+            &StubMetrics,
+            &mut failovers,
+            &cfg,
+            &requests,
+            &inputs,
+            &plans,
+        )
+        .unwrap()
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+    (
+        report.events_processed as f64 / wall_s.max(1e-9),
+        sink.events.len(),
+    )
+}
+
 /// One rung of the saturation sweep: 4 replicas, round-robin shards, no
 /// failures — pure offered load against the pipeline's capacity.
 /// Returns the rung's JSON record and whether p99 met the SLO.
@@ -338,6 +412,39 @@ fn main() {
         println!("{line}");
     }
 
+    // Tracing axis: the engine is generic over its event sink, so the
+    // default NoopSink must cost nothing — guard that the `serve` hot
+    // path (Noop) holds the sequential round-robin baseline measured
+    // above, and report what a recording sink pays. Interleaved
+    // best-of-2 to damp scheduler noise.
+    let (mut noop_eps, mut recording_eps, mut events_recorded) = (0.0f64, 0.0f64, 0usize);
+    for _ in 0..2 {
+        let (eps, _) = tracing_arm(n_requests, false);
+        noop_eps = noop_eps.max(eps);
+        let (eps, n) = tracing_arm(n_requests, true);
+        recording_eps = recording_eps.max(eps);
+        events_recorded = n;
+    }
+    let noop_vs_baseline = noop_eps / seq_eps.max(1e-9);
+    let recording_overhead_pct = 100.0 * (1.0 - recording_eps / noop_eps.max(1e-9));
+    println!(
+        "tracing: noop {noop_eps:.0} events/sec ({:.2}x baseline), recording {recording_eps:.0} \
+         events/sec ({recording_overhead_pct:.1}% overhead, {events_recorded} events captured)",
+        noop_vs_baseline
+    );
+    assert!(
+        noop_vs_baseline >= 0.99,
+        "NoopSink must keep the zero-cost hot path: best-of-2 {noop_eps:.0} events/sec \
+         vs baseline {seq_eps:.0} ({noop_vs_baseline:.3}x < 0.99x)"
+    );
+    let tracing = obj(&[
+        ("noop_events_per_sec", noop_eps.into()),
+        ("recording_events_per_sec", recording_eps.into()),
+        ("noop_vs_baseline", noop_vs_baseline.into()),
+        ("recording_overhead_pct", recording_overhead_pct.into()),
+        ("events_recorded", events_recorded.into()),
+    ]);
+
     // Saturation knee, on the widest sharded configuration benchmarked.
     let sat_workers = *workers_axis.iter().max().unwrap();
     let sat_requests = (n_requests / 10).max(5_000);
@@ -359,6 +466,7 @@ fn main() {
         ),
         ("sequential_rr_events_per_sec", seq_eps.into()),
         ("worker_scaling", Json::Arr(speedups)),
+        ("tracing", tracing),
         ("saturation", saturation),
         ("cases", Json::Arr(cases)),
     ]);

@@ -94,6 +94,7 @@ use crate::cluster::failure::{Detector, FailurePlan, NodeCondition};
 use crate::cluster::sim::{steps_for, steps_for_chain, EdgeCluster, Step};
 use crate::dnn::variants::Technique;
 use crate::health::monitor::{simulate as simulate_monitor, HealthConfig, HealthEventKind};
+use crate::obs::{EngineEvent, EngineEventKind, EventBuffer, EventSink, NoopSink};
 use crate::runtime::{Activation, HostTensor, ShapeOnly, UnitKind};
 use crate::util::histogram::Streaming;
 use crate::util::slab::{Slab, SlabKey};
@@ -444,9 +445,12 @@ struct BatchInFlight {
     stage: usize,
     technique: Option<Technique>,
     target_batch: usize,
+    /// Per-replica dispatch ordinal, carried so stage start/done events
+    /// in the observability stream name a stable batch identity.
+    trace_seq: usize,
 }
 
-struct Engine<'a, B: StageBackend> {
+struct Engine<'a, B: StageBackend, S: EventSink> {
     backends: &'a mut [B],
     failovers: &'a mut [Failover],
     est: &'a dyn MetricsSource,
@@ -486,6 +490,9 @@ struct Engine<'a, B: StageBackend> {
     /// feeder: decremented once per completion or drop so live routing
     /// sees this shard's backlog.
     outstanding: Option<Arc<AtomicUsize>>,
+    /// Observability stream. Monomorphized: with [`NoopSink`] every
+    /// emission compiles to nothing, keeping the hot path zero-cost.
+    sink: &'a mut S,
 }
 
 /// A shard's live arrival feed, with the watermark that makes it safe:
@@ -541,32 +548,90 @@ pub fn serve<B: StageBackend + Send>(
     inputs: &HostTensor,
     plans: &[FailurePlan],
 ) -> Result<ServiceReport> {
+    serve_with_sink(
+        backends,
+        est,
+        failovers,
+        cfg,
+        requests,
+        inputs,
+        plans,
+        &mut NoopSink,
+    )
+}
+
+/// [`serve`] with an observability stream: every engine transition is
+/// emitted into `sink` (see [`crate::obs`] for the event taxonomy). The
+/// sequential loop streams events live; sharded execution buffers per
+/// shard, merges with replica ids re-tagged and a stable time sort, and
+/// replays the merged stream into `sink` — unless
+/// [`EventSink::wants_events`] is false, in which case the shards run
+/// with [`NoopSink`] and stay allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_with_sink<B: StageBackend + Send, S: EventSink>(
+    backends: &mut [B],
+    est: &(dyn MetricsSource + Sync),
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    requests: &[Request],
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+    sink: &mut S,
+) -> Result<ServiceReport> {
+    validate(backends, failovers, cfg, plans)?;
+    let last_arrival = requests.last().map(|r| r.arrival_ms).unwrap_or(0.0);
     match cfg.execution {
-        Execution::Sequential => {
-            serve_sequential(backends, est, failovers, cfg, requests, inputs, plans)
-        }
+        Execution::Sequential => run_sequential(
+            backends,
+            est,
+            failovers,
+            cfg,
+            SeqArrivals::Merged(requests),
+            inputs,
+            plans,
+            last_arrival,
+            sink,
+        ),
         Execution::Sharded(workers) => {
-            validate(backends, failovers, cfg, plans)?;
-            let last_arrival = requests.last().map(|r| r.arrival_ms).unwrap_or(0.0);
-            match cfg.route {
+            let outcome = match cfg.route {
                 // Round-robin is positional: splitting the stream at
                 // "generation time" reproduces the sequential router's
                 // assignment exactly, so every shard gets a preloaded,
                 // deterministic schedule and no channels are needed.
                 RoutePolicy::RoundRobin => {
                     let streams = split_round_robin(requests, backends.len());
-                    serve_sharded_preloaded(
-                        workers, backends, est, failovers, cfg, streams, inputs, plans,
-                        last_arrival,
-                    )
+                    if sink.wants_events() {
+                        serve_sharded_preloaded::<_, EventBuffer>(
+                            workers, backends, est, failovers, cfg, streams, inputs, plans,
+                            last_arrival,
+                        )?
+                    } else {
+                        serve_sharded_preloaded::<_, NoopSink>(
+                            workers, backends, est, failovers, cfg, streams, inputs, plans,
+                            last_arrival,
+                        )?
+                    }
                 }
                 // JSQ needs live load: a feeder on the calling thread
                 // routes over the shards' atomic outstanding counters.
-                RoutePolicy::JoinShortestQueue => serve_sharded_jsq(
-                    workers, backends, est, failovers, cfg, requests, inputs, plans,
-                    last_arrival,
-                ),
+                RoutePolicy::JoinShortestQueue => {
+                    if sink.wants_events() {
+                        serve_sharded_jsq::<_, EventBuffer>(
+                            workers, backends, est, failovers, cfg, requests, inputs, plans,
+                            last_arrival,
+                        )?
+                    } else {
+                        serve_sharded_jsq::<_, NoopSink>(
+                            workers, backends, est, failovers, cfg, requests, inputs, plans,
+                            last_arrival,
+                        )?
+                    }
+                }
+            };
+            for ev in &outcome.events {
+                sink.on_event(ev);
             }
+            Ok(finalize(outcome))
         }
     }
 }
@@ -583,6 +648,31 @@ pub fn serve_sequential<B: StageBackend>(
     inputs: &HostTensor,
     plans: &[FailurePlan],
 ) -> Result<ServiceReport> {
+    serve_sequential_with_sink(
+        backends,
+        est,
+        failovers,
+        cfg,
+        requests,
+        inputs,
+        plans,
+        &mut NoopSink,
+    )
+}
+
+/// [`serve_sequential`] with a live observability stream (the non-`Send`
+/// backend counterpart of [`serve_with_sink`]).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_sequential_with_sink<B: StageBackend, S: EventSink>(
+    backends: &mut [B],
+    est: &dyn MetricsSource,
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    requests: &[Request],
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+    sink: &mut S,
+) -> Result<ServiceReport> {
     validate(backends, failovers, cfg, plans)?;
     let last_arrival = requests.last().map(|r| r.arrival_ms).unwrap_or(0.0);
     run_sequential(
@@ -594,6 +684,7 @@ pub fn serve_sequential<B: StageBackend>(
         inputs,
         plans,
         last_arrival,
+        sink,
     )
 }
 
@@ -611,6 +702,31 @@ pub fn serve_routed<B: StageBackend + Send>(
     streams: &[Vec<Request>],
     inputs: &HostTensor,
     plans: &[FailurePlan],
+) -> Result<ServiceReport> {
+    serve_routed_with_sink(
+        backends,
+        est,
+        failovers,
+        cfg,
+        streams,
+        inputs,
+        plans,
+        &mut NoopSink,
+    )
+}
+
+/// [`serve_routed`] with an observability stream; buffering/merge
+/// semantics match [`serve_with_sink`].
+#[allow(clippy::too_many_arguments)]
+pub fn serve_routed_with_sink<B: StageBackend + Send, S: EventSink>(
+    backends: &mut [B],
+    est: &(dyn MetricsSource + Sync),
+    failovers: &mut [Failover],
+    cfg: &EngineConfig,
+    streams: &[Vec<Request>],
+    inputs: &HostTensor,
+    plans: &[FailurePlan],
+    sink: &mut S,
 ) -> Result<ServiceReport> {
     validate(backends, failovers, cfg, plans)?;
     anyhow::ensure!(
@@ -634,18 +750,39 @@ pub fn serve_routed<B: StageBackend + Send>(
             inputs,
             plans,
             last_arrival,
+            sink,
         ),
-        Execution::Sharded(workers) => serve_sharded_preloaded(
-            workers,
-            backends,
-            est,
-            failovers,
-            cfg,
-            streams.to_vec(),
-            inputs,
-            plans,
-            last_arrival,
-        ),
+        Execution::Sharded(workers) => {
+            let outcome = if sink.wants_events() {
+                serve_sharded_preloaded::<_, EventBuffer>(
+                    workers,
+                    backends,
+                    est,
+                    failovers,
+                    cfg,
+                    streams.to_vec(),
+                    inputs,
+                    plans,
+                    last_arrival,
+                )?
+            } else {
+                serve_sharded_preloaded::<_, NoopSink>(
+                    workers,
+                    backends,
+                    est,
+                    failovers,
+                    cfg,
+                    streams.to_vec(),
+                    inputs,
+                    plans,
+                    last_arrival,
+                )?
+            };
+            for ev in &outcome.events {
+                sink.on_event(ev);
+            }
+            Ok(finalize(outcome))
+        }
     }
 }
 
@@ -657,7 +794,7 @@ enum SeqArrivals<'r> {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_sequential<B: StageBackend>(
+fn run_sequential<B: StageBackend, S: EventSink>(
     backends: &mut [B],
     est: &dyn MetricsSource,
     failovers: &mut [Failover],
@@ -666,8 +803,9 @@ fn run_sequential<B: StageBackend>(
     inputs: &HostTensor,
     plans: &[FailurePlan],
     last_arrival_ms: f64,
+    sink: &mut S,
 ) -> Result<ShardResultReport> {
-    let mut eng = Engine::new(backends, failovers, est, cfg, inputs);
+    let mut eng = Engine::new(backends, failovers, est, cfg, inputs, sink);
     match arrivals {
         SeqArrivals::Merged(reqs) => {
             eng.pending_arrivals = reqs.len();
@@ -718,7 +856,7 @@ enum ShardArrivals {
 }
 
 #[allow(clippy::too_many_arguments)]
-fn serve_sharded_preloaded<B: StageBackend + Send>(
+fn serve_sharded_preloaded<B: StageBackend + Send, S: EventSink + Default>(
     workers: usize,
     backends: &mut [B],
     est: &(dyn MetricsSource + Sync),
@@ -728,7 +866,7 @@ fn serve_sharded_preloaded<B: StageBackend + Send>(
     inputs: &HostTensor,
     plans: &[FailurePlan],
     last_arrival_ms: f64,
-) -> Result<ShardResultReport> {
+) -> Result<ShardOutcome> {
     let empty_plan = FailurePlan::none();
     let tasks: Vec<ShardTask<'_, B>> = backends
         .iter_mut()
@@ -744,11 +882,11 @@ fn serve_sharded_preloaded<B: StageBackend + Send>(
             outstanding: None,
         })
         .collect();
-    run_shards(workers, tasks, est, cfg, inputs, last_arrival_ms, || {})
+    run_shards::<_, S>(workers, tasks, est, cfg, inputs, last_arrival_ms, || {})
 }
 
 #[allow(clippy::too_many_arguments)]
-fn serve_sharded_jsq<B: StageBackend + Send>(
+fn serve_sharded_jsq<B: StageBackend + Send, S: EventSink + Default>(
     workers: usize,
     backends: &mut [B],
     est: &(dyn MetricsSource + Sync),
@@ -758,7 +896,7 @@ fn serve_sharded_jsq<B: StageBackend + Send>(
     inputs: &HostTensor,
     plans: &[FailurePlan],
     last_arrival_ms: f64,
-) -> Result<ShardResultReport> {
+) -> Result<ShardOutcome> {
     let replicas = backends.len();
     let mut router = ShardRouter::new(RoutePolicy::JoinShortestQueue, replicas);
     let empty_plan = FailurePlan::none();
@@ -782,7 +920,7 @@ fn serve_sharded_jsq<B: StageBackend + Send>(
     // and never blocks — channels are unbounded, so shards multiplexed
     // onto fewer workers than replicas simply find their traffic
     // buffered when a worker picks them up.
-    run_shards(workers, tasks, est, cfg, inputs, last_arrival_ms, move || {
+    run_shards::<_, S>(workers, tasks, est, cfg, inputs, last_arrival_ms, move || {
         for req in requests {
             let r = router.route();
             // A shard that died early dropped its receiver; its error
@@ -794,7 +932,7 @@ fn serve_sharded_jsq<B: StageBackend + Send>(
     })
 }
 
-fn run_shards<B: StageBackend + Send>(
+fn run_shards<B: StageBackend + Send, S: EventSink + Default>(
     workers: usize,
     tasks: Vec<ShardTask<'_, B>>,
     est: &(dyn MetricsSource + Sync),
@@ -802,21 +940,21 @@ fn run_shards<B: StageBackend + Send>(
     inputs: &HostTensor,
     last_arrival_ms: f64,
     feeder: impl FnOnce(),
-) -> Result<ShardResultReport> {
+) -> Result<ShardOutcome> {
     let outcomes = parallel_map_with(
         tasks,
         workers,
-        |task| run_shard(task, est, cfg, inputs, last_arrival_ms),
+        |task| run_shard::<_, S>(task, est, cfg, inputs, last_arrival_ms),
         feeder,
     );
     let shards: Vec<ShardOutcome> = outcomes.into_iter().collect::<Result<_>>()?;
-    Ok(finalize(merge_outcomes(shards)))
+    Ok(merge_outcomes(shards))
 }
 
 /// Run one replica as a 1-replica engine (its own heap, slab, plan
 /// cache and metrics). Local replica index is 0; the global index seeds
 /// the monitored channel identically to the sequential run.
-fn run_shard<B: StageBackend>(
+fn run_shard<B: StageBackend, S: EventSink + Default>(
     task: ShardTask<'_, B>,
     est: &(dyn MetricsSource + Sync),
     cfg: &EngineConfig,
@@ -824,12 +962,14 @@ fn run_shard<B: StageBackend>(
     last_arrival_ms: f64,
 ) -> Result<ShardOutcome> {
     let ShardTask { global_replica, backend, failover, plan, arrivals, outstanding } = task;
+    let mut sink = S::default();
     let mut eng = Engine::new(
         std::slice::from_mut(backend),
         std::slice::from_mut(failover),
         est,
         cfg,
         inputs,
+        &mut sink,
     );
     eng.outstanding = outstanding;
     match arrivals {
@@ -848,7 +988,9 @@ fn run_shard<B: StageBackend>(
         }
     }
     eng.schedule_failure_events(0, global_replica, plan, last_arrival_ms);
-    eng.run()
+    let mut outcome = eng.run()?;
+    outcome.events = sink.take_events();
+    Ok(outcome)
 }
 
 /// What one shard (or the whole sequential run) accumulates; replica
@@ -866,6 +1008,9 @@ struct ShardOutcome {
     clock_ms: f64,
     plan_hits: usize,
     plan_misses: usize,
+    /// Observability stream buffered by this shard's sink (empty when
+    /// the run used [`NoopSink`] or streamed live to the caller).
+    events: Vec<EngineEvent>,
 }
 
 type ShardResultReport = ServiceReport;
@@ -874,7 +1019,10 @@ type ShardResultReport = ServiceReport;
 /// histogram merge, pairwise Welford combine, counter sums, window
 /// concat (sorted by start time then replica — the order the sequential
 /// loop emits same-time windows in), record concat with replica indices
-/// re-tagged from shard-local 0 to global.
+/// re-tagged from shard-local 0 to global. Buffered observability
+/// events are re-tagged the same way and stable-sorted by timestamp —
+/// shards are appended in replica order, so ties keep a deterministic
+/// replica-then-causal order and track identities are stable.
 fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
     let mut merged = ShardOutcome {
         latency: Streaming::default(),
@@ -888,6 +1036,7 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         clock_ms: 0.0,
         plan_hits: 0,
         plan_misses: 0,
+        events: Vec::new(),
     };
     for (r, mut o) in shards.into_iter().enumerate() {
         for c in &mut o.completed {
@@ -898,6 +1047,9 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         }
         for w in &mut o.windows {
             w.replica = r;
+        }
+        for e in &mut o.events {
+            e.replica = r;
         }
         merged.latency.merge(&o.latency);
         merged.completed.extend(o.completed);
@@ -910,10 +1062,12 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         merged.clock_ms = merged.clock_ms.max(o.clock_ms);
         merged.plan_hits += o.plan_hits;
         merged.plan_misses += o.plan_misses;
+        merged.events.extend(o.events);
     }
     merged
         .windows
         .sort_by(|a, b| a.start_ms.total_cmp(&b.start_ms).then(a.replica.cmp(&b.replica)));
+    merged.events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
     merged
 }
 
@@ -936,14 +1090,15 @@ fn finalize(o: ShardOutcome) -> ServiceReport {
     }
 }
 
-impl<'a, B: StageBackend> Engine<'a, B> {
+impl<'a, B: StageBackend, S: EventSink> Engine<'a, B, S> {
     fn new(
         backends: &'a mut [B],
         failovers: &'a mut [Failover],
         est: &'a dyn MetricsSource,
         cfg: &'a EngineConfig,
         inputs: &'a HostTensor,
-    ) -> Engine<'a, B> {
+        sink: &'a mut S,
+    ) -> Engine<'a, B, S> {
         let states: Vec<ReplicaState> = backends
             .iter()
             .map(|b| ReplicaState::new(b.num_nodes()))
@@ -974,11 +1129,23 @@ impl<'a, B: StageBackend> Engine<'a, B> {
             pending_arrivals: 0,
             intake: None,
             outstanding: None,
+            sink,
         }
     }
 }
 
-impl<B: StageBackend> Engine<'_, B> {
+impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
+    /// Emit one observability event. With [`NoopSink`] (the default)
+    /// this inlines to nothing and the event is never constructed.
+    #[inline]
+    fn emit(&mut self, at_ms: f64, replica: usize, kind: EngineEventKind) {
+        self.sink.on_event(&EngineEvent {
+            at_ms,
+            replica,
+            kind,
+        });
+    }
+
     /// Schedule replica `local_r`'s ground-truth failure flips and its
     /// detection stream. `global_r` is the replica's index in the
     /// caller's arrays and `last_arrival_ms` the *global* end of traffic:
@@ -1106,6 +1273,7 @@ impl<B: StageBackend> Engine<'_, B> {
                             self.router.route(&loads)
                         }
                     };
+                    self.emit(t, r, EngineEventKind::Arrival { id: req.id });
                     self.states[r].queue.push_back(req);
                     self.try_dispatch(r, t)?;
                 }
@@ -1116,6 +1284,15 @@ impl<B: StageBackend> Engine<'_, B> {
                     // dispatching here would serve the recovery-instant
                     // batch on the stale degraded path.
                     self.backends[replica].set_condition(node, condition);
+                    self.emit(t, replica, EngineEventKind::Condition { node, condition });
+                    // Back up but still failed over: the node sits in
+                    // the reintegration gate until the health layer
+                    // clears it (DetectRecovery below).
+                    if matches!(condition, NodeCondition::Up)
+                        && self.failovers[replica].failed_node() == Some(node)
+                    {
+                        self.emit(t, replica, EngineEventKind::QuarantineEnter { node });
+                    }
                 }
                 EventKind::DetectFailover { replica, node, false_positive } => {
                     let report = self.failovers[replica].on_failure(self.est, node)?;
@@ -1123,18 +1300,35 @@ impl<B: StageBackend> Engine<'_, B> {
                         .cfg
                         .decision_ms_override
                         .unwrap_or_else(|| report.downtime_ms());
+                    let technique = report.decision.chosen;
                     self.windows.push(FailoverWindow {
                         replica,
                         node,
                         start_ms: t,
                         end_ms: t + downtime,
-                        technique: report.decision.chosen,
+                        technique,
                         false_positive,
                     });
+                    self.emit(
+                        t,
+                        replica,
+                        EngineEventKind::Failover {
+                            node,
+                            technique,
+                            false_positive,
+                            end_ms: t + downtime,
+                        },
+                    );
                     self.try_dispatch(replica, t)?;
                 }
                 EventKind::DetectRecovery { replica, node } => {
-                    self.failovers[replica].on_recovery(node);
+                    // `on_recovery` reports whether the failover mode
+                    // actually cleared — only then did the node leave
+                    // the path (and any quarantine window close).
+                    if self.failovers[replica].on_recovery(node) {
+                        self.emit(t, replica, EngineEventKind::QuarantineExit { node });
+                        self.emit(t, replica, EngineEventKind::Recovery { node });
+                    }
                     self.try_dispatch(replica, t)?;
                 }
                 EventKind::BatcherTimeout { replica } => {
@@ -1152,6 +1346,7 @@ impl<B: StageBackend> Engine<'_, B> {
 
         // Requests a wedged replica could never serve (e.g. a second
         // overlapping failure on the recovery path) are recorded as drops.
+        let t_end = self.clock_ms;
         for r in 0..self.states.len() {
             let degraded = self.failovers[r].technique().is_some();
             while let Some(q) = self.states[r].queue.pop_front() {
@@ -1159,9 +1354,18 @@ impl<B: StageBackend> Engine<'_, B> {
                     id: q.id,
                     replica: r,
                     arrival_ms: q.arrival_ms,
-                    dropped_at_ms: self.clock_ms,
+                    dropped_at_ms: t_end,
                     degraded,
                 });
+                self.emit(
+                    t_end,
+                    r,
+                    EngineEventKind::Drop {
+                        id: q.id,
+                        arrival_ms: q.arrival_ms,
+                        degraded,
+                    },
+                );
                 self.note_request_retired();
             }
         }
@@ -1182,6 +1386,7 @@ impl<B: StageBackend> Engine<'_, B> {
             clock_ms: self.clock_ms,
             plan_hits,
             plan_misses,
+            events: Vec::new(),
         })
     }
 
@@ -1276,8 +1481,18 @@ impl<B: StageBackend> Engine<'_, B> {
         let b = self.batches.get_mut(batch).unwrap();
         let (y, ms) = self.backends[replica].run_stage(step, &b.x)?;
         b.x = y;
+        let (batch_seq, stage) = (b.trace_seq, b.stage);
         self.states[replica].busy_until[step.host] = t + ms;
         self.push(t + ms, EventKind::StageDone { replica, batch });
+        self.emit(
+            t,
+            replica,
+            EngineEventKind::StageStart {
+                batch_seq,
+                stage,
+                node: step.host,
+            },
+        );
         Ok(())
     }
 
@@ -1286,8 +1501,19 @@ impl<B: StageBackend> Engine<'_, B> {
     fn on_stage_done(&mut self, replica: usize, batch: SlabKey, t: f64) -> Result<()> {
         let finished = match self.batches.get_mut(batch) {
             Some(b) => {
+                let (batch_seq, stage, node) = (b.trace_seq, b.stage, b.steps[b.stage].host);
                 b.stage += 1;
-                b.stage >= b.steps.len()
+                let finished = b.stage >= b.steps.len();
+                self.emit(
+                    t,
+                    replica,
+                    EngineEventKind::StageDone {
+                        batch_seq,
+                        stage,
+                        node,
+                    },
+                );
+                finished
             }
             None => return Ok(()),
         };
@@ -1301,6 +1527,14 @@ impl<B: StageBackend> Engine<'_, B> {
                 self.latency.record(latency_ms);
                 self.completed_count += 1;
                 self.note_request_retired();
+                self.emit(
+                    t,
+                    replica,
+                    EngineEventKind::Completion {
+                        id: q.id,
+                        latency_ms,
+                    },
+                );
                 if self.cfg.record_completions {
                     self.completed.push(Completion {
                         id: q.id,
@@ -1388,7 +1622,17 @@ impl<B: StageBackend> Engine<'_, B> {
                     if self.states[r].in_flight_batches > self.max_in_flight {
                         self.max_in_flight = self.states[r].in_flight_batches;
                     }
+                    let trace_seq = self.batches_dispatched;
                     self.batches_dispatched += 1;
+                    self.emit(
+                        t,
+                        r,
+                        EngineEventKind::BatchDispatch {
+                            seq: trace_seq,
+                            size: take,
+                            target,
+                        },
+                    );
                     let key = self.batches.insert(BatchInFlight {
                         requests: reqs,
                         x,
@@ -1396,6 +1640,7 @@ impl<B: StageBackend> Engine<'_, B> {
                         stage: 0,
                         technique: technique_tag,
                         target_batch: target,
+                        trace_seq,
                     });
                     self.push(t, EventKind::StageStart { replica: r, batch: key });
                 }
@@ -1431,6 +1676,15 @@ impl<B: StageBackend> Engine<'_, B> {
                     dropped_at_ms: t,
                     degraded,
                 });
+                self.emit(
+                    t,
+                    r,
+                    EngineEventKind::Drop {
+                        id: q.id,
+                        arrival_ms: q.arrival_ms,
+                        degraded,
+                    },
+                );
                 self.note_request_retired();
             } else {
                 break;

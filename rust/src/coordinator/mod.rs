@@ -55,6 +55,27 @@
 //! cross onto worker threads; the PJRT-backed [`service::run`] path
 //! stays on [`engine::serve_sequential`] because the real cluster holds
 //! `RefCell` caches.
+//!
+//! # Observability
+//!
+//! Every engine transition is emitted into an
+//! [`EventSink`](crate::obs::EventSink) (see [`crate::obs`] for the
+//! event taxonomy: arrival, batch dispatch, stage start/done, raw
+//! condition change, failover/recovery detection, quarantine
+//! enter/exit, drop, completion). The engine is *generic* over the
+//! sink, so the cost model is compile-time: the default
+//! [`NoopSink`](crate::obs::NoopSink) monomorphizes every emission to
+//! nothing (the zero-allocation steady state is untouched — the bench
+//! guard in `benches/engine_scale.rs` asserts ≤1% overhead), while a
+//! recording sink pays one `Vec` push per event. Sharded runs buffer
+//! events per shard and merge them with replica ids re-tagged and a
+//! stable time sort, so the merged stream has the same track
+//! identities as a sequential run. Use
+//! [`engine::serve_with_sink`] / [`engine::serve_routed_with_sink`] /
+//! [`engine::serve_sequential_with_sink`] to observe a run, export it
+//! with [`crate::obs::trace::chrome_trace`] (`continuer trace`, opens
+//! in Perfetto), or fold it through
+//! [`crate::obs::report::ReportModule`]s.
 
 pub mod batcher;
 pub mod engine;
@@ -68,8 +89,8 @@ pub mod scheduler;
 pub mod service;
 
 pub use engine::{
-    serve, serve_routed, serve_sequential, EngineConfig, Execution, HealthMode, StageBackend,
-    SyntheticBackend,
+    serve, serve_routed, serve_routed_with_sink, serve_sequential, serve_sequential_with_sink,
+    serve_with_sink, EngineConfig, Execution, HealthMode, StageBackend, SyntheticBackend,
 };
 pub use plan_cache::PlanCache;
 pub use estimator::{Estimator, MetricsSource, StaticMetrics};

@@ -17,12 +17,16 @@ use anyhow::Result;
 use crate::cluster::failure::FailurePlan;
 use crate::config::Objectives;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
+use crate::coordinator::engine::{
+    serve_with_sink, EngineConfig, Execution, HealthMode, SyntheticBackend,
+};
 use crate::coordinator::estimator::StaticMetrics;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::router::RoutePolicy;
 use crate::coordinator::service::ServiceReport;
 use crate::health::{DetectorKind, HealthConfig, HeartbeatConfig};
+use crate::obs::report::{Downtime, ReportModule};
+use crate::obs::EventBuffer;
 use crate::runtime::HostTensor;
 use crate::util::bench::{f, Table};
 use crate::util::json::{obj, Json};
@@ -55,7 +59,11 @@ pub struct SweepPoint {
     pub throughput_rps: f64,
 }
 
-fn run_point(label: &str, detector: DetectorKind, seed: u64) -> Result<SweepPoint> {
+fn run_point(
+    label: &str,
+    detector: DetectorKind,
+    seed: u64,
+) -> Result<(SweepPoint, ServiceReport)> {
     run_point_with(label, detector, seed, 1.0, 0.05)
 }
 
@@ -65,7 +73,7 @@ fn run_point_with(
     seed: u64,
     jitter_ms: f64,
     loss_prob: f64,
-) -> Result<SweepPoint> {
+) -> Result<(SweepPoint, ServiceReport)> {
     let health = HealthConfig {
         heartbeat: HeartbeatConfig {
             interval_ms: 10.0,
@@ -94,7 +102,8 @@ fn run_point_with(
     let mut failovers = vec![Failover::new(Objectives::default())];
     let requests = generate(600, Arrival::Poisson { rate_rps: 150.0 }, 16, seed);
     let inputs = HostTensor::zeros(vec![16, 4]);
-    let report = serve(
+    let mut sink = EventBuffer::default();
+    let report = serve_with_sink(
         &mut backends,
         &StaticMetrics,
         &mut failovers,
@@ -102,30 +111,26 @@ fn run_point_with(
         &requests,
         &inputs,
         &[scenario_plan()],
+        &mut sink,
     )?;
-    Ok(SweepPoint {
+    // Failover accounting comes off the event stream via the shared
+    // `Downtime` module; drop/latency/throughput aggregates still read
+    // the report. Module-vs-report equivalence is asserted in tests.
+    let mut downtime = Downtime::with_crash(CRASH_NODE, CRASH_AT_MS);
+    for ev in &sink.events {
+        downtime.on_event(ev);
+    }
+    let point = SweepPoint {
         label: label.to_string(),
-        detection_ms: true_detection_latency(&report),
-        false_failovers: report.false_failovers(),
-        failovers: report.failovers.len(),
-        downtime_ms: report.total_downtime_ms(),
+        detection_ms: downtime.detection_ms(),
+        false_failovers: downtime.false_failovers(),
+        failovers: downtime.failovers(),
+        downtime_ms: downtime.total_downtime_ms(),
         dropped: report.dropped.len(),
         p99_ms: report.latency.p99,
         throughput_rps: report.throughput_rps,
-    })
-}
-
-/// Latency from the scenario's real crash to its first honest detection
-/// of the crashed node (None when the detector never attributed a
-/// failover to it — e.g. a false positive left the node suspected when
-/// the real crash silenced it).
-fn true_detection_latency(report: &ServiceReport) -> Option<f64> {
-    report
-        .failovers
-        .iter()
-        .filter(|w| w.node == CRASH_NODE && !w.false_positive && w.start_ms >= CRASH_AT_MS)
-        .map(|w| w.start_ms - CRASH_AT_MS)
-        .min_by(|a, b| a.total_cmp(b))
+    };
+    Ok((point, report))
 }
 
 /// Run the sweep; prints the frontier table and returns the JSON record.
@@ -163,7 +168,7 @@ pub fn sweep(seed: u64) -> Result<Json> {
     );
     let mut rows = Vec::new();
     for (label, kind) in &cases {
-        let p = run_point(label, *kind, seed)?;
+        let (p, _) = run_point(label, *kind, seed)?;
         t.row(&[
             p.label.clone(),
             p.detection_ms.map(|d| f(d, 1)).unwrap_or_else(|| "-".into()),
@@ -215,12 +220,10 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
 }
 
 /// Artifact-free entry point (`continuer detection-eval`): write the
-/// JSON next to the working directory.
-pub fn run_standalone(seed: u64) -> Result<()> {
-    let out = sweep(seed)?;
-    let path = "detection_eval.json";
-    std::fs::write(path, out.to_string())?;
-    println!("wrote {path}");
+/// JSON next to the working directory (or `--out`).
+pub fn run_standalone(seed: u64, out: Option<&str>, pretty: bool) -> Result<()> {
+    let record = sweep(seed)?;
+    crate::obs::emit::emit_json(&record, "detection_eval.json", out, pretty)?;
     Ok(())
 }
 
@@ -228,11 +231,24 @@ pub fn run_standalone(seed: u64) -> Result<()> {
 mod tests {
     use super::*;
 
+    /// The legacy detection-latency computation, recomputed from the
+    /// report's failover windows: latency from the scenario's real
+    /// crash to its first honest detection of the crashed node (None
+    /// when the detector never attributed a failover to it).
+    fn true_detection_latency(report: &ServiceReport) -> Option<f64> {
+        report
+            .failovers
+            .iter()
+            .filter(|w| w.node == CRASH_NODE && !w.false_positive && w.start_ms >= CRASH_AT_MS)
+            .map(|w| w.start_ms - CRASH_AT_MS)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
     #[test]
     fn sweep_point_detects_the_real_crash() {
         // Clean channel: detection timing is analytic (last beat at 390,
         // checks every 10 ms, timeout 25 → failover at 420).
-        let p = run_point_with(
+        let (p, _) = run_point_with(
             "fixed/25ms",
             DetectorKind::FixedTimeout { timeout_ms: 25.0 },
             3,
@@ -250,11 +266,33 @@ mod tests {
     #[test]
     fn conservative_fixed_timeout_detects_later() {
         let fixed = |ms| DetectorKind::FixedTimeout { timeout_ms: ms };
-        let fast = run_point_with("fixed/15ms", fixed(15.0), 3, 0.0, 0.0).unwrap();
-        let slow = run_point_with("fixed/100ms", fixed(100.0), 3, 0.0, 0.0).unwrap();
+        let (fast, _) = run_point_with("fixed/15ms", fixed(15.0), 3, 0.0, 0.0).unwrap();
+        let (slow, _) = run_point_with("fixed/100ms", fixed(100.0), 3, 0.0, 0.0).unwrap();
         let df = fast.detection_ms.unwrap();
         let ds = slow.detection_ms.unwrap();
         assert!(df < ds, "aggressive timeout must detect sooner: {df} vs {ds}");
+    }
+
+    /// The `Downtime` event-stream module reproduces the numbers the
+    /// legacy driver computed from `ServiceReport` fields, on the same
+    /// seed and under heartbeat noise (false positives included).
+    #[test]
+    fn downtime_module_matches_report_accounting() {
+        let phi = DetectorKind::PhiAccrual {
+            threshold: 1.0,
+            window: 48,
+            min_std_ms: 0.5,
+        };
+        let (p, report) = run_point_with("phi/1", phi, 3, 1.0, 0.05).unwrap();
+        assert_eq!(p.failovers, report.failovers.len());
+        assert_eq!(p.false_failovers, report.false_failovers());
+        assert!(
+            (p.downtime_ms - report.total_downtime_ms()).abs() < 1e-9,
+            "module downtime {} vs report {}",
+            p.downtime_ms,
+            report.total_downtime_ms()
+        );
+        assert_eq!(p.detection_ms, true_detection_latency(&report));
     }
 
     #[test]

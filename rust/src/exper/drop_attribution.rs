@@ -1,11 +1,14 @@
 //! Drop attribution: which deadline drops are the failure's fault?
 //!
-//! Sweeps the request deadline and classifies every entry of
-//! [`ServiceReport::dropped`](crate::coordinator::service::ServiceReport)
-//! as *inside* or *outside* the ground-truth outage windows of the
-//! failure plan (merged per-cluster intervals where any node is down; a
-//! drop counts as inside when the request's waiting interval overlapped
-//! a window).
+//! Sweeps the request deadline and classifies every drop event as
+//! *inside* or *outside* the ground-truth outage windows of the failure
+//! plan (merged per-cluster intervals where any node is down; a drop
+//! counts as inside when the request's waiting interval overlapped a
+//! window). The classification itself lives in
+//! [`crate::obs::report::DropAttribution`] — this driver is the thin
+//! composition: run with a recording sink, fold the stream through the
+//! module, print the table. A test asserts the module's numbers match
+//! the legacy classification recomputed from `ServiceReport::dropped`.
 //! Outside-window drops at a given deadline are pure overload — the
 //! failure cannot be blamed for them — so the inside/outside split
 //! separates "the deadline is too tight for this load" from "the outage
@@ -20,11 +23,15 @@ use anyhow::Result;
 use crate::cluster::failure::{Detector, FailurePlan, NodeCondition};
 use crate::config::Objectives;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::engine::{serve, EngineConfig, Execution, HealthMode, SyntheticBackend};
+use crate::coordinator::engine::{
+    serve_with_sink, EngineConfig, Execution, HealthMode, SyntheticBackend,
+};
 use crate::coordinator::estimator::StaticMetrics;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::router::RoutePolicy;
 use crate::coordinator::service::ServiceReport;
+use crate::obs::report::{DropAttribution, ReportModule};
+use crate::obs::EventBuffer;
 use crate::runtime::HostTensor;
 use crate::util::bench::{f, Table};
 use crate::util::json::{obj, Json};
@@ -68,17 +75,6 @@ pub fn outage_windows(plan: &FailurePlan) -> Vec<(f64, f64)> {
     merged
 }
 
-/// A drop is the outage's fault when the request's waiting interval
-/// `[arrival, dropped_at)` overlapped an outage window — a request that
-/// arrived during the outage but only timed out after recovery was
-/// still stranded by it, so classifying on the drop instant alone would
-/// leak a full deadline-width of outage-caused drops into "outside".
-fn overlaps_any(arrival_ms: f64, dropped_at_ms: f64, windows: &[(f64, f64)]) -> bool {
-    windows
-        .iter()
-        .any(|&(s, e)| arrival_ms < e && dropped_at_ms >= s)
-}
-
 /// The swept scenario: node 3 down 500-900, node 2 down 520-920 — the
 /// overlap makes every recovery path infeasible until 900.
 fn scenario_plan() -> FailurePlan {
@@ -117,7 +113,8 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
     let inputs = HostTensor::zeros(vec![16, 4]);
     let plan = scenario_plan();
     let windows = outage_windows(&plan);
-    let report = serve(
+    let mut sink = EventBuffer::default();
+    let report = serve_with_sink(
         &mut backends,
         &StaticMetrics,
         &mut failovers,
@@ -125,19 +122,19 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
         &requests,
         &inputs,
         &[plan],
+        &mut sink,
     )?;
-    let inside = report
-        .dropped
-        .iter()
-        .filter(|d| overlaps_any(d.arrival_ms, d.dropped_at_ms, &windows))
-        .count();
+    let mut module = DropAttribution::new(windows);
+    for ev in &sink.events {
+        module.on_event(ev);
+    }
     let point = DeadlinePoint {
         deadline_ms,
-        completed: report.completed_count,
-        dropped_inside: inside,
-        dropped_outside: report.dropped.len() - inside,
-        dropped_degraded: report.degraded_drops(),
-        p99_ms: report.latency.p99,
+        completed: module.completed(),
+        dropped_inside: module.dropped_inside(),
+        dropped_outside: module.dropped_outside(),
+        dropped_degraded: module.dropped_degraded(),
+        p99_ms: module.p99_ms(),
     };
     Ok((point, report))
 }
@@ -199,11 +196,9 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
 }
 
 /// Artifact-free entry point (`continuer drop-attribution`).
-pub fn run_standalone(seed: u64) -> Result<()> {
-    let out = sweep(seed)?;
-    let path = "drop_attribution.json";
-    std::fs::write(path, out.to_string())?;
-    println!("wrote {path}");
+pub fn run_standalone(seed: u64, out: Option<&str>, pretty: bool) -> Result<()> {
+    let record = sweep(seed)?;
+    crate::obs::emit::emit_json(&record, "drop_attribution.json", out, pretty)?;
     Ok(())
 }
 
@@ -242,6 +237,31 @@ mod tests {
         assert!(
             p.dropped_inside > 0,
             "a 420 ms un-routable outage must strand 100 ms-deadline traffic: {report:?}"
+        );
+    }
+
+    /// Acceptance criterion: the event-stream module reproduces the
+    /// legacy classification recomputed from `ServiceReport::dropped`
+    /// on the same seed, field for field.
+    #[test]
+    fn module_attribution_matches_legacy_classification() {
+        use crate::obs::report::overlaps_outage;
+        let (p, report) = run_deadline(100.0, 11).unwrap();
+        let windows = outage_windows(&scenario_plan());
+        let inside = report
+            .dropped
+            .iter()
+            .filter(|d| overlaps_outage(d.arrival_ms, d.dropped_at_ms, &windows))
+            .count();
+        assert_eq!(p.completed, report.completed_count);
+        assert_eq!(p.dropped_inside, inside);
+        assert_eq!(p.dropped_outside, report.dropped.len() - inside);
+        assert_eq!(p.dropped_degraded, report.degraded_drops());
+        assert!(
+            (p.p99_ms - report.latency.p99).abs() < 1e-9,
+            "module p99 {} vs report p99 {}",
+            p.p99_ms,
+            report.latency.p99
         );
     }
 

@@ -13,6 +13,7 @@ pub mod latency_eval;
 pub mod table2;
 pub mod table7;
 pub mod table8;
+pub mod trace_export;
 
 use std::path::{Path, PathBuf};
 
@@ -45,10 +46,8 @@ impl ExpContext {
     }
 
     pub fn save_result(&self, name: &str, value: &Json) -> Result<PathBuf> {
-        let dir = self.results_dir();
-        std::fs::create_dir_all(&dir)?;
-        let path = dir.join(format!("{name}.json"));
-        std::fs::write(&path, value.to_string())?;
+        let path = self.results_dir().join(format!("{name}.json"));
+        crate::obs::emit::write_json(&path, value, false)?;
         Ok(path)
     }
 

@@ -72,6 +72,7 @@ pub fn layer_samples(ctx: &ExpContext) -> Result<Vec<LayerSample>> {
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let samples = layer_samples(ctx)?;
     let params = GbdtParams::default();
+    let mut platforms_json = Vec::new();
     for platform in [Platform::Host, Platform::platform2()] {
         let fitted = fit_platform(&samples, platform.clone(), &params, ctx.config.seed)?;
         let mut t = Table::new(
@@ -97,7 +98,29 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             good,
             fitted.quality.len()
         );
+        let rows: Vec<Json> = fitted
+            .quality
+            .iter()
+            .map(|q| {
+                obj(&[
+                    ("kind", q.kind.name().into()),
+                    ("n", (q.n_train + q.n_test).into()),
+                    ("mse", q.mse.into()),
+                    ("r2", q.r2.into()),
+                ])
+            })
+            .collect();
+        platforms_json.push(obj(&[
+            ("platform", platform.name().into()),
+            ("quality", Json::Arr(rows)),
+        ]));
     }
+    let record = obj(&[
+        ("experiment", "table2".into()),
+        ("platforms", Json::Arr(platforms_json)),
+    ]);
+    let path = ctx.save_result("table2", &record)?;
+    println!("wrote {}", path.display());
     let _ = LayerKind::ALL; // referenced for doc completeness
     Ok(())
 }

@@ -13,6 +13,7 @@ use anyhow::Result;
 use crate::coordinator::scheduler::{select, weight_sweep, CandidateMetrics};
 use crate::dnn::variants::Technique;
 use crate::util::bench::{pct, Table};
+use crate::util::json::{obj, Json};
 
 use super::{accuracy_eval, latency_eval, ExpContext};
 
@@ -50,6 +51,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         "Table VII — Scheduler selection quality (classification accuracy)",
         &["DNN Model", "Platform 1", "Platform 2"],
     );
+    let mut rows_json = Vec::new();
     for name in ctx.model_names() {
         let mut cells = vec![name.clone()];
         for platform in ["platform1", "platform2"] {
@@ -102,6 +104,19 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             } else {
                 pct(100.0 * correct as f64 / total as f64, 2)
             });
+            rows_json.push(obj(&[
+                ("model", name.clone().into()),
+                ("platform", platform.into()),
+                ("instances", total.into()),
+                (
+                    "accuracy_pct",
+                    if total == 0 {
+                        Json::Null
+                    } else {
+                        (100.0 * correct as f64 / total as f64).into()
+                    },
+                ),
+            ]));
             if total > 0 {
                 println!(
                     "{name}/{platform}: {total} instances ({} failure cases x {} weight combos)",
@@ -113,5 +128,12 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         t.row(&cells);
     }
     t.print();
+    let record = obj(&[
+        ("experiment", "table7".into()),
+        ("weights", weights.len().into()),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    let path = ctx.save_result("table7", &record)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

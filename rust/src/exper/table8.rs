@@ -15,6 +15,7 @@ use crate::coordinator::scheduler::select;
 use crate::dnn::variants::{candidates, failure_sweep};
 use crate::predict::{AccuracyModel, GbdtParams};
 use crate::util::bench::{f, Table};
+use crate::util::json::{obj, Json};
 
 use super::table2::layer_samples;
 use super::ExpContext;
@@ -71,20 +72,29 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             }
         }
     }
+    let mut cells_json = Vec::new();
     for kind in ["repartition", "early-exit", "skip-connection"] {
         let mut cells = vec![kind.to_string()];
         for name in ["resnet32", "mobilenetv2"] {
-            cells.push(
-                per_model
-                    .get(&(kind, name.to_string()))
-                    .map(|v| f(*v, 2))
-                    .unwrap_or_else(|| "-".into()),
-            );
+            let v = per_model.get(&(kind, name.to_string()));
+            cells.push(v.map(|v| f(*v, 2)).unwrap_or_else(|| "-".into()));
+            cells_json.push(obj(&[
+                ("technique", kind.into()),
+                ("model", name.into()),
+                ("downtime_ms", v.map_or(Json::Null, |v| (*v).into())),
+            ]));
         }
         t.row(&cells);
     }
     t.print();
     let overall = per_model.values().cloned().fold(0.0, f64::max);
     println!("CONTINUER selects a technique within {overall:.2} ms of a node failure\n");
+    let record = obj(&[
+        ("experiment", "table8".into()),
+        ("overall_max_ms", overall.into()),
+        ("cells", Json::Arr(cells_json)),
+    ]);
+    let path = ctx.save_result("table8", &record)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -1,0 +1,139 @@
+//! `continuer trace`: record a synthetic serving run with failures and
+//! export it as a Chrome `trace_event` JSON file for Perfetto.
+//!
+//! The scenario is artifact-free and exercises every marker the
+//! exporter draws: per-(replica, node) stage spans, a real crash with
+//! recovery (failover window + detection instant + quarantined
+//! reintegration on replica 0), a gray-failure slowdown (replica 1),
+//! and a request deadline so drops can appear. Deterministic for a
+//! given seed — same seed, same bytes — which the `trace_export`
+//! integration tests assert.
+
+use anyhow::Result;
+
+use crate::cluster::failure::FailurePlan;
+use crate::config::Objectives;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::engine::{
+    serve_with_sink, EngineConfig, Execution, HealthMode, SyntheticBackend,
+};
+use crate::coordinator::estimator::StaticMetrics;
+use crate::coordinator::failover::Failover;
+use crate::coordinator::router::RoutePolicy;
+use crate::health::{DetectorKind, HealthConfig, HeartbeatConfig};
+use crate::obs::trace::chrome_trace;
+use crate::obs::{EngineEvent, EngineEventKind, EventBuffer};
+use crate::runtime::HostTensor;
+use crate::workload::{generate, Arrival};
+
+/// Per-replica failure plans: a crash with recovery on replica 0 (the
+/// full failover → quarantine → reintegration arc) and a gray-failure
+/// slowdown on replica 1. Further replicas cycle through the same two.
+fn plan_for(replica: usize) -> FailurePlan {
+    if replica % 2 == 0 {
+        FailurePlan::crash_recover(3, 400.0, 300.0)
+    } else {
+        FailurePlan::degraded(2, 600.0, 4.0, 300.0)
+    }
+}
+
+/// Record the demo scenario's event stream under the given execution
+/// mode. Clean heartbeat channel (no jitter/loss) so detection timing —
+/// and therefore the exported trace — is deterministic per seed.
+pub fn record_with(
+    requests: usize,
+    replicas: usize,
+    seed: u64,
+    execution: Execution,
+) -> Result<Vec<EngineEvent>> {
+    let health = HealthConfig {
+        heartbeat: HeartbeatConfig {
+            interval_ms: 10.0,
+            jitter_ms: 0.0,
+            loss_prob: 0.0,
+            blackout: None,
+        },
+        detector: DetectorKind::FixedTimeout { timeout_ms: 25.0 },
+        failover_slowdown: 3.0,
+        quarantine_ms: 100.0,
+        slowdown_window: 8,
+        seed,
+    };
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1], 2.0, 1),
+        health: HealthMode::Monitored(health),
+        deadline_ms: Some(250.0),
+        pipeline_depth: 2,
+        route: RoutePolicy::RoundRobin,
+        decision_ms_override: Some(2.0),
+        record_completions: false,
+        execution,
+    };
+    let mut backends: Vec<SyntheticBackend> = (0..replicas)
+        .map(|_| SyntheticBackend::uniform(4, 5.0, 1.0))
+        .collect();
+    let mut failovers: Vec<Failover> = (0..replicas)
+        .map(|_| Failover::new(Objectives::default()))
+        .collect();
+    let plans: Vec<FailurePlan> = (0..replicas).map(plan_for).collect();
+    let reqs = generate(requests, Arrival::Poisson { rate_rps: 150.0 }, 16, seed);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let mut sink = EventBuffer::default();
+    serve_with_sink(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        &cfg,
+        &reqs,
+        &inputs,
+        &plans,
+        &mut sink,
+    )?;
+    Ok(sink.take_events())
+}
+
+/// `continuer trace` entry point: record, export, summarize.
+pub fn run_standalone(
+    requests: usize,
+    replicas: usize,
+    seed: u64,
+    out: Option<&str>,
+    pretty: bool,
+) -> Result<()> {
+    let events = record_with(requests, replicas, seed, Execution::Sequential)?;
+    let stages = events
+        .iter()
+        .filter(|e| matches!(e.kind, EngineEventKind::StageStart { .. }))
+        .count();
+    let failovers = events
+        .iter()
+        .filter(|e| matches!(e.kind, EngineEventKind::Failover { .. }))
+        .count();
+    println!(
+        "recorded {} events ({stages} stage spans, {failovers} failovers) over {replicas} replicas",
+        events.len()
+    );
+    let doc = chrome_trace(&events);
+    crate::obs::emit::emit_json(&doc, "trace.json", out, pretty)?;
+    println!("open in https://ui.perfetto.dev or chrome://tracing");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn demo_scenario_exercises_every_marker() {
+        let events = record_with(300, 2, 7, Execution::Sequential).unwrap();
+        let has = |pred: &dyn Fn(&EngineEventKind) -> bool| events.iter().any(|e| pred(&e.kind));
+        assert!(has(&|k| matches!(k, EngineEventKind::StageStart { .. })));
+        assert!(has(&|k| matches!(k, EngineEventKind::StageDone { .. })));
+        assert!(has(&|k| matches!(k, EngineEventKind::Failover { .. })));
+        assert!(
+            has(&|k| matches!(k, EngineEventKind::QuarantineEnter { .. })),
+            "crash_recover under a quarantine gate must produce a quarantine window"
+        );
+        assert!(has(&|k| matches!(k, EngineEventKind::Completion { .. })));
+    }
+}

@@ -47,6 +47,18 @@
 //!   merge (exact histogram adds, Welford pairwise moments) into one
 //!   `ServiceReport` that is bucket-identical to the sequential
 //!   reference on the same seed.
+//! - [`obs`] is the observability layer: the engine emits a typed event
+//!   stream (arrivals, batch dispatches, stage spans, condition changes,
+//!   failover/recovery detections, quarantine windows, drops,
+//!   completions) into an [`obs::EventSink`] it is generic over — the
+//!   default [`obs::NoopSink`] monomorphizes every emission away, so
+//!   observability costs nothing unless a recording sink is plugged in.
+//!   On top of the stream sit a Chrome `trace_event` exporter
+//!   ([`obs::trace`], `continuer trace`, opens in Perfetto /
+//!   `chrome://tracing`) and a modular report pipeline
+//!   ([`obs::report::ReportModule`]) that folds one replayed stream
+//!   through pluggable analyses (drop attribution, downtime/failover
+//!   summary, latency summary, event counts).
 //! - [`workload`], [`baselines`], [`exper`] support the evaluation: load
 //!   generators (with per-replica stream helpers), comparison policies
 //!   (all implementing the same [`coordinator::RecoveryPolicy`] trait
@@ -60,6 +72,7 @@ pub mod coordinator;
 pub mod dnn;
 pub mod exper;
 pub mod health;
+pub mod obs;
 pub mod predict;
 pub mod runtime;
 pub mod util;

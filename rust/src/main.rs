@@ -12,6 +12,8 @@
 //!                                no artifacts needed)
 //!   drop-attribution             deadline sweep classifying drops inside
 //!                                vs outside failure windows (synthetic)
+//!   trace                        record a synthetic failure scenario and
+//!                                export a Chrome/Perfetto trace (synthetic)
 //!   clean-results                drop cached experiment results
 //!
 //! Common options:
@@ -99,11 +101,26 @@ fn main() -> Result<()> {
         // Synthetic health experiments: no artifacts required.
         "detection-eval" => {
             let seed = args.get_usize("seed", 0)? as u64;
-            continuer::exper::detection_eval::run_standalone(seed)
+            let out = args.get("out");
+            continuer::exper::detection_eval::run_standalone(seed, out, args.flag("pretty"))
         }
         "drop-attribution" => {
             let seed = args.get_usize("seed", 0)? as u64;
-            continuer::exper::drop_attribution::run_standalone(seed)
+            let out = args.get("out");
+            continuer::exper::drop_attribution::run_standalone(seed, out, args.flag("pretty"))
+        }
+        "trace" => {
+            let requests = args.get_usize("requests", 2000)?;
+            let replicas = args.get_usize("replicas", 2)?;
+            let seed = args.get_usize("seed", 0)? as u64;
+            let out = args.get("out");
+            continuer::exper::trace_export::run_standalone(
+                requests,
+                replicas,
+                seed,
+                out,
+                args.flag("pretty"),
+            )
         }
         "clean-results" => {
             let cfg = build_config(&args)?;
@@ -132,12 +149,18 @@ SUBCOMMANDS
   profile           layer-latency profiling sweep (= exp table2)
   detection-eval    detector sweep: downtime vs false failovers (synthetic)
   drop-attribution  deadline sweep: drops inside vs outside outages (synthetic)
+  trace             export a Chrome trace_event JSON of a synthetic failure
+                    scenario — stage spans per (replica, node), failover and
+                    quarantine markers; open in https://ui.perfetto.dev
   clean-results     drop cached experiment results
 
 OPTIONS
   --artifacts <dir>  artifacts directory (default ./artifacts)
   --config <file>    TOML config file
   --model <name>     resnet32 | mobilenetv2 (for serve)
-  --requests <n>     request count for serve (default 60)
+  --requests <n>     request count for serve (default 60) / trace (default 2000)
+  --replicas <n>     pipeline replicas for trace (default 2)
+  --out <file>       output path for trace / detection-eval / drop-attribution
+  --pretty           pretty-print emitted JSON
   --seed <n>         simulation seed
   --reps <n>         profiling repetitions";

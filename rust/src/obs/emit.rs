@@ -1,0 +1,96 @@
+//! Shared JSON emission for experiment drivers and the CLI.
+//!
+//! Every driver used to hand-roll its own `std::fs::write(path,
+//! json.to_string())`; this is the one place that decides how a result
+//! lands on disk: consistent `--out` override handling, an opt-in
+//! pretty-print flag, parent-directory creation, and a uniform
+//! "wrote <path>" line.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Render a value compact (default) or pretty (`--pretty`).
+pub fn render(value: &Json, pretty: bool) -> String {
+    if pretty {
+        value.to_pretty_string()
+    } else {
+        value.to_string()
+    }
+}
+
+/// Write `value` to `path`, creating parent directories as needed.
+pub fn write_json(path: &Path, value: &Json, pretty: bool) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, render(value, pretty))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// The drivers' shared `--out`/`--pretty` handling: write to `out`
+/// when given, else to `default_path`; announce and return the
+/// destination.
+pub fn emit_json(
+    value: &Json,
+    default_path: &str,
+    out: Option<&str>,
+    pretty: bool,
+) -> Result<PathBuf> {
+    let path = PathBuf::from(out.unwrap_or(default_path));
+    write_json(&path, value, pretty)?;
+    println!("wrote {}", path.display());
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn scratch(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("continuer-emit-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_compact_and_pretty() {
+        let v = obj(&[("a", 1.0.into()), ("b", Json::Arr(vec![2.0.into()]))]);
+        let dir = scratch("fmt");
+        let compact = dir.join("nested/compact.json");
+        write_json(&compact, &v, false).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&compact).unwrap(),
+            r#"{"a":1,"b":[2]}"#
+        );
+        let pretty = dir.join("pretty.json");
+        write_json(&pretty, &v, true).unwrap();
+        let text = std::fs::read_to_string(&pretty).unwrap();
+        assert!(text.contains("\n  \"a\": 1"));
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_flag_overrides_default_path() {
+        let v = obj(&[("x", true.into())]);
+        let dir = scratch("out");
+        let override_path = dir.join("override.json");
+        let got = emit_json(
+            &v,
+            dir.join("default.json").to_str().unwrap(),
+            override_path.to_str(),
+            false,
+        )
+        .unwrap();
+        assert_eq!(got, override_path);
+        assert!(override_path.exists());
+        assert!(!dir.join("default.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,188 @@
+//! # Engine observability: event bus, trace export, modular reports.
+//!
+//! At million-event scale the aggregate histograms in `ServiceReport`
+//! hide the 50 ms that matter: which stage stalled during a failover,
+//! how long a quarantine window actually gated reintegration, where
+//! the cut-over gap sits inside a repartition. This module makes the
+//! engine's internal timeline a first-class, replayable stream.
+//!
+//! Three layers:
+//!
+//! 1. **Event bus** ([`EngineEvent`] + [`EventSink`]): the serving
+//!    engine in `coordinator/engine.rs` emits one event per observable
+//!    transition — request arrival, batch dispatch, stage start/done,
+//!    raw node-condition change, detected failover/recovery,
+//!    quarantine enter/exit, deadline drop, request completion. The
+//!    engine is generic over the sink (monomorphized, never boxed), so
+//!    the default [`NoopSink`] is genuinely zero-cost: its `on_event`
+//!    is an empty `#[inline(always)]` body and the dead event
+//!    construction is eliminated by the optimizer, preserving the
+//!    zero-allocation steady state from PR 3. Under
+//!    `Execution::Sharded` each shard buffers its own events and the
+//!    merge re-tags replica ids and time-sorts, so the merged stream
+//!    has stable track identities.
+//! 2. **Trace export** ([`trace`]): serializes a recorded stream as
+//!    Chrome `trace_event` JSON — one track per (replica, node) with
+//!    stage spans as `ph:"X"` duration events, failover windows and
+//!    detection instants on a per-replica controller track, quarantine
+//!    windows as spans — loadable in `chrome://tracing` or
+//!    <https://ui.perfetto.dev> (File → Open trace file).
+//! 3. **Modular reports** ([`report`]): a [`report::ReportModule`]
+//!    trait (`on_event` + `finish -> Json`) and a replay driver, so
+//!    experiment summaries (drop attribution, downtime/failover,
+//!    latency) are composable subscribers over one stream instead of
+//!    bespoke per-driver aggregation.
+//!
+//! [`emit`] rounds this out with the shared JSON emission helper
+//! (`--out` / pretty-print handling) used by every experiment driver.
+
+pub mod emit;
+pub mod report;
+pub mod trace;
+
+use crate::cluster::failure::NodeCondition;
+use crate::dnn::variants::Technique;
+
+/// One observable engine transition, stamped with simulation time and
+/// the replica it happened on. `Copy` so sinks can buffer by value
+/// without touching the allocator per event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineEvent {
+    /// Simulation timestamp in milliseconds.
+    pub at_ms: f64,
+    /// Replica the event belongs to (re-tagged to the global id when
+    /// sharded per-replica streams are merged).
+    pub replica: usize,
+    pub kind: EngineEventKind,
+}
+
+/// The engine's event taxonomy. Every variant corresponds to exactly
+/// one emission site in `coordinator/engine.rs`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum EngineEventKind {
+    /// A request entered a replica's queue (after routing).
+    Arrival { id: usize },
+    /// The batcher cut a batch and put its first stage on the heap.
+    /// `seq` is the per-replica dispatch ordinal; `size` the real
+    /// request count; `target` the padded batch size.
+    BatchDispatch { seq: usize, size: usize, target: usize },
+    /// A stage actually began computing on `node` (occupancy granted).
+    StageStart { batch_seq: usize, stage: usize, node: usize },
+    /// The stage finished on `node`; `stage` matches its `StageStart`.
+    StageDone { batch_seq: usize, stage: usize, node: usize },
+    /// Ground-truth node condition changed (failure injection), before
+    /// any detector sees it.
+    Condition { node: usize, condition: NodeCondition },
+    /// The health layer declared `node` failed and the failover chose
+    /// `technique`; the modeled cut-over blackout ends at `end_ms`.
+    Failover {
+        node: usize,
+        technique: Technique,
+        false_positive: bool,
+        end_ms: f64,
+    },
+    /// The health layer reinstated `node` and the failover mode
+    /// actually cleared (rollback to the full pipeline).
+    Recovery { node: usize },
+    /// `node` is back up but still held out of the serving path
+    /// (failover mode active) — the reintegration gate is working.
+    QuarantineEnter { node: usize },
+    /// The gate released: emitted immediately before [`Recovery`].
+    QuarantineExit { node: usize },
+    /// A request was dropped (deadline expiry or wedged at run end).
+    Drop {
+        id: usize,
+        arrival_ms: f64,
+        degraded: bool,
+    },
+    /// A request completed end-to-end.
+    Completion { id: usize, latency_ms: f64 },
+}
+
+/// Receiver for the engine's event stream. The engine is generic over
+/// the sink, so implementations are monomorphized into the event loop:
+/// an empty `on_event` costs nothing.
+pub trait EventSink: Send {
+    fn on_event(&mut self, ev: &EngineEvent);
+
+    /// Whether this sink observes events at all. Sharded execution
+    /// consults this before paying for per-shard buffering; `false`
+    /// keeps the merged run allocation-free.
+    fn wants_events(&self) -> bool {
+        true
+    }
+
+    /// Drain any buffered events (used by the sharded merge). Sinks
+    /// that don't buffer return an empty vec.
+    fn take_events(&mut self) -> Vec<EngineEvent> {
+        Vec::new()
+    }
+}
+
+/// The zero-cost default sink: drops every event at compile time.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopSink;
+
+impl EventSink for NoopSink {
+    #[inline(always)]
+    fn on_event(&mut self, _ev: &EngineEvent) {}
+
+    #[inline(always)]
+    fn wants_events(&self) -> bool {
+        false
+    }
+}
+
+/// A recording sink: buffers every event in order. One lives per
+/// shard under `Execution::Sharded`; the merge concatenates in replica
+/// order, re-tags `replica`, then stable-sorts by timestamp so track
+/// identities and tie order are deterministic.
+#[derive(Debug, Default)]
+pub struct EventBuffer {
+    pub events: Vec<EngineEvent>,
+}
+
+impl EventSink for EventBuffer {
+    #[inline]
+    fn on_event(&mut self, ev: &EngineEvent) {
+        self.events.push(*ev);
+    }
+
+    fn take_events(&mut self) -> Vec<EngineEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_sink_wants_nothing() {
+        let mut s = NoopSink;
+        assert!(!s.wants_events());
+        s.on_event(&EngineEvent {
+            at_ms: 0.0,
+            replica: 0,
+            kind: EngineEventKind::Arrival { id: 0 },
+        });
+        assert!(s.take_events().is_empty());
+    }
+
+    #[test]
+    fn buffer_records_in_order_and_drains() {
+        let mut b = EventBuffer::default();
+        for i in 0..4 {
+            b.on_event(&EngineEvent {
+                at_ms: i as f64,
+                replica: 0,
+                kind: EngineEventKind::Arrival { id: i },
+            });
+        }
+        assert!(b.wants_events());
+        let evs = b.take_events();
+        assert_eq!(evs.len(), 4);
+        assert!(evs.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+        assert!(b.take_events().is_empty());
+    }
+}

@@ -1,0 +1,361 @@
+//! Chrome `trace_event` / Perfetto export of a recorded engine stream.
+//!
+//! Track layout: each replica is a process (`pid = replica`); inside
+//! it, `tid 0` is the replica's **controller** track (failover
+//! windows, quarantine windows, detection/recovery/drop instants,
+//! raw condition markers) and `tid = node + 1` is one track per
+//! cluster node carrying its stage spans as `ph:"X"` duration events.
+//! Per-node spans never overlap because the engine serializes a
+//! node's occupancy through `busy_until`.
+//!
+//! Open the emitted JSON in `chrome://tracing` or at
+//! <https://ui.perfetto.dev> (File → Open trace file). Timestamps are
+//! microseconds as the format requires; the simulation clock is ms,
+//! so `ts = at_ms * 1000`.
+//!
+//! High-rate per-request events (arrival, completion, batch dispatch)
+//! are deliberately not serialized — they would dominate the file
+//! without adding timeline structure; use a [`crate::obs::report`]
+//! module for those.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::cluster::failure::NodeCondition;
+use crate::obs::{EngineEvent, EngineEventKind};
+use crate::util::json::{obj, Json};
+
+const MS_TO_US: f64 = 1000.0;
+
+fn meta(name: &str, pid: usize, tid: Option<usize>, label: &str) -> Json {
+    let mut fields = vec![
+        ("ph", Json::from("M")),
+        ("name", Json::from(name)),
+        ("pid", Json::from(pid as f64)),
+        ("args", obj(&[("name", Json::from(label))])),
+    ];
+    if let Some(tid) = tid {
+        fields.push(("tid", Json::from(tid as f64)));
+    }
+    obj(&fields)
+}
+
+fn span(name: &str, cat: &str, pid: usize, tid: usize, ts_ms: f64, dur_ms: f64, args: Json) -> Json {
+    obj(&[
+        ("ph", Json::from("X")),
+        ("name", Json::from(name)),
+        ("cat", Json::from(cat)),
+        ("pid", Json::from(pid as f64)),
+        ("tid", Json::from(tid as f64)),
+        ("ts", Json::from(ts_ms * MS_TO_US)),
+        ("dur", Json::from(dur_ms.max(0.0) * MS_TO_US)),
+        ("args", args),
+    ])
+}
+
+fn instant(name: &str, cat: &str, pid: usize, tid: usize, ts_ms: f64, args: Json) -> Json {
+    obj(&[
+        ("ph", Json::from("i")),
+        ("s", Json::from("t")),
+        ("name", Json::from(name)),
+        ("cat", Json::from(cat)),
+        ("pid", Json::from(pid as f64)),
+        ("tid", Json::from(tid as f64)),
+        ("ts", Json::from(ts_ms * MS_TO_US)),
+        ("args", args),
+    ])
+}
+
+fn condition_label(c: NodeCondition) -> (&'static str, f64) {
+    match c {
+        NodeCondition::Up => ("up", 1.0),
+        NodeCondition::Degraded(s) => ("degraded", s),
+        NodeCondition::Down => ("down", 0.0),
+    }
+}
+
+/// Serialize a recorded event stream as a Chrome `trace_event` JSON
+/// document. Output is a pure function of the stream (BTree-ordered
+/// keys, deterministic event order), so same-seed runs produce
+/// byte-identical traces.
+pub fn chrome_trace(events: &[EngineEvent]) -> Json {
+    // Track discovery: every replica gets a controller track; every
+    // node mentioned by any event gets a stage track.
+    let mut replicas: BTreeSet<usize> = BTreeSet::new();
+    let mut node_tracks: BTreeSet<(usize, usize)> = BTreeSet::new();
+    for ev in events {
+        replicas.insert(ev.replica);
+        match ev.kind {
+            EngineEventKind::StageStart { node, .. }
+            | EngineEventKind::StageDone { node, .. }
+            | EngineEventKind::Condition { node, .. }
+            | EngineEventKind::Failover { node, .. }
+            | EngineEventKind::Recovery { node }
+            | EngineEventKind::QuarantineEnter { node }
+            | EngineEventKind::QuarantineExit { node } => {
+                node_tracks.insert((ev.replica, node));
+            }
+            _ => {}
+        }
+    }
+
+    let mut out: Vec<Json> = Vec::new();
+    for &r in &replicas {
+        out.push(meta("process_name", r, None, &format!("replica {r}")));
+        out.push(meta("thread_name", r, Some(0), "controller"));
+    }
+    for &(r, node) in &node_tracks {
+        out.push(meta("thread_name", r, Some(node + 1), &format!("node {node}")));
+    }
+
+    // Span pairing state. Stage spans key on (replica, batch, stage);
+    // quarantine windows on (replica, node).
+    let mut open_stage: BTreeMap<(usize, usize, usize), (f64, usize)> = BTreeMap::new();
+    let mut open_quarantine: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut last_ms: f64 = 0.0;
+
+    for ev in events {
+        last_ms = last_ms.max(ev.at_ms);
+        let r = ev.replica;
+        match ev.kind {
+            EngineEventKind::StageStart {
+                batch_seq,
+                stage,
+                node,
+            } => {
+                open_stage.insert((r, batch_seq, stage), (ev.at_ms, node));
+            }
+            EngineEventKind::StageDone {
+                batch_seq,
+                stage,
+                node,
+            } => {
+                if let Some((start_ms, start_node)) = open_stage.remove(&(r, batch_seq, stage)) {
+                    debug_assert_eq!(start_node, node);
+                    out.push(span(
+                        &format!("batch {batch_seq} stage {stage}"),
+                        "stage",
+                        r,
+                        node + 1,
+                        start_ms,
+                        ev.at_ms - start_ms,
+                        obj(&[
+                            ("batch", Json::from(batch_seq as f64)),
+                            ("stage", Json::from(stage as f64)),
+                            ("node", Json::from(node as f64)),
+                        ]),
+                    ));
+                }
+            }
+            EngineEventKind::Condition { node, condition } => {
+                let (state, slowdown) = condition_label(condition);
+                out.push(instant(
+                    &format!("node {node} {state}"),
+                    "condition",
+                    r,
+                    0,
+                    ev.at_ms,
+                    obj(&[
+                        ("node", Json::from(node as f64)),
+                        ("state", Json::from(state)),
+                        ("slowdown", Json::from(slowdown)),
+                    ]),
+                ));
+            }
+            EngineEventKind::Failover {
+                node,
+                technique,
+                false_positive,
+                end_ms,
+            } => {
+                out.push(instant(
+                    &format!("detect node {node}"),
+                    "detection",
+                    r,
+                    0,
+                    ev.at_ms,
+                    obj(&[
+                        ("node", Json::from(node as f64)),
+                        ("false_positive", Json::from(false_positive)),
+                    ]),
+                ));
+                out.push(span(
+                    &format!("failover {} (node {node})", technique.label()),
+                    "failover",
+                    r,
+                    0,
+                    ev.at_ms,
+                    end_ms - ev.at_ms,
+                    obj(&[
+                        ("node", Json::from(node as f64)),
+                        ("technique", Json::from(technique.label())),
+                        ("false_positive", Json::from(false_positive)),
+                    ]),
+                ));
+            }
+            EngineEventKind::Recovery { node } => {
+                out.push(instant(
+                    &format!("recovery node {node}"),
+                    "recovery",
+                    r,
+                    0,
+                    ev.at_ms,
+                    obj(&[("node", Json::from(node as f64))]),
+                ));
+            }
+            EngineEventKind::QuarantineEnter { node } => {
+                open_quarantine.insert((r, node), ev.at_ms);
+            }
+            EngineEventKind::QuarantineExit { node } => {
+                if let Some(start_ms) = open_quarantine.remove(&(r, node)) {
+                    out.push(span(
+                        &format!("quarantine node {node}"),
+                        "quarantine",
+                        r,
+                        0,
+                        start_ms,
+                        ev.at_ms - start_ms,
+                        obj(&[("node", Json::from(node as f64))]),
+                    ));
+                }
+            }
+            EngineEventKind::Drop {
+                id,
+                arrival_ms,
+                degraded,
+            } => {
+                out.push(instant(
+                    "drop",
+                    "drop",
+                    r,
+                    0,
+                    ev.at_ms,
+                    obj(&[
+                        ("id", Json::from(id as f64)),
+                        ("arrival_ms", Json::from(arrival_ms)),
+                        ("degraded", Json::from(degraded)),
+                    ]),
+                ));
+            }
+            EngineEventKind::Arrival { .. }
+            | EngineEventKind::BatchDispatch { .. }
+            | EngineEventKind::Completion { .. } => {}
+        }
+    }
+
+    // A node can still be quarantined when the run drains; close the
+    // window at the last observed timestamp so the track stays valid.
+    for (&(r, node), &start_ms) in &open_quarantine {
+        out.push(span(
+            &format!("quarantine node {node} (open)"),
+            "quarantine",
+            r,
+            0,
+            start_ms,
+            last_ms - start_ms,
+            obj(&[("node", Json::from(node as f64)), ("open", Json::from(true))]),
+        ));
+    }
+
+    obj(&[
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::variants::Technique;
+
+    fn ev(at_ms: f64, replica: usize, kind: EngineEventKind) -> EngineEvent {
+        EngineEvent {
+            at_ms,
+            replica,
+            kind,
+        }
+    }
+
+    #[test]
+    fn stage_spans_pair_start_with_done() {
+        let events = vec![
+            ev(
+                1.0,
+                0,
+                EngineEventKind::StageStart {
+                    batch_seq: 0,
+                    stage: 0,
+                    node: 2,
+                },
+            ),
+            ev(
+                6.0,
+                0,
+                EngineEventKind::StageDone {
+                    batch_seq: 0,
+                    stage: 0,
+                    node: 2,
+                },
+            ),
+        ];
+        let doc = chrome_trace(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let spans: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("ts").and_then(Json::as_f64), Some(1000.0));
+        assert_eq!(spans[0].get("dur").and_then(Json::as_f64), Some(5000.0));
+        assert_eq!(spans[0].get("tid").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn failover_emits_instant_and_window() {
+        let events = vec![ev(
+            10.0,
+            1,
+            EngineEventKind::Failover {
+                node: 3,
+                technique: Technique::Repartition,
+                false_positive: false,
+                end_ms: 18.0,
+            },
+        )];
+        let doc = chrome_trace(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph").and_then(Json::as_str) == Some("i")
+                && e.get("cat").and_then(Json::as_str) == Some("detection")));
+        let window = evs
+            .iter()
+            .find(|e| e.get("cat").and_then(Json::as_str) == Some("failover"))
+            .expect("failover window span");
+        assert_eq!(window.get("dur").and_then(Json::as_f64), Some(8000.0));
+        assert_eq!(window.get("tid").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn unclosed_quarantine_is_closed_at_stream_end() {
+        let events = vec![
+            ev(5.0, 0, EngineEventKind::QuarantineEnter { node: 1 }),
+            ev(
+                40.0,
+                0,
+                EngineEventKind::Drop {
+                    id: 7,
+                    arrival_ms: 1.0,
+                    degraded: false,
+                },
+            ),
+        ];
+        let doc = chrome_trace(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let q = evs
+            .iter()
+            .find(|e| e.get("cat").and_then(Json::as_str) == Some("quarantine"))
+            .expect("quarantine span");
+        assert_eq!(q.get("ts").and_then(Json::as_f64), Some(5000.0));
+        assert_eq!(q.get("dur").and_then(Json::as_f64), Some(35000.0));
+    }
+}

@@ -139,6 +139,57 @@ impl Json {
         s
     }
 
+    /// Human-readable form: 2-space indentation, one element per line,
+    /// same escaping and number formatting as [`Json::to_string`].
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..indent + 2 {
+                        out.push(' ');
+                    }
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 2);
+                }
+                out.push('\n');
+                for _ in 0..indent {
+                    out.push(' ');
+                }
+                out.push('}');
+            }
+            // Scalars and empty containers render as in compact mode.
+            other => other.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -471,6 +522,15 @@ mod tests {
             Json::parse(r#""é😀""#).unwrap(),
             Json::Str("é😀".into())
         );
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_indents() {
+        let v = Json::parse(r#"{"arr":[1,2],"empty":{},"s":"x"}"#).unwrap();
+        let pretty = v.to_pretty_string();
+        assert!(pretty.contains("\n  \"arr\": [\n    1,\n    2\n  ]"));
+        assert!(pretty.contains("\"empty\": {}"));
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
     }
 
     #[test]

@@ -68,6 +68,35 @@ fn assert_reports_match(seq: &ServiceReport, shard: &ServiceReport) -> PropResul
     prop_assert_eq(shard.batches_dispatched, seq.batches_dispatched)?;
     prop_assert_eq(shard.plan_cache_hits, seq.plan_cache_hits)?;
     prop_assert_eq(shard.plan_cache_misses, seq.plan_cache_misses)?;
+    prop_assert_eq(shard.max_in_flight, seq.max_in_flight)?;
+    prop_assert_eq(shard.false_failovers(), seq.false_failovers())?;
+    prop_assert_eq(shard.degraded_drops(), seq.degraded_drops())?;
+    // The global last event belongs to some replica, and that replica's
+    // shard processes it at the same clock — spans agree exactly, and
+    // with them the derived counters.
+    prop_assert(
+        shard.sim_span_ms == seq.sim_span_ms,
+        &format!(
+            "sim span diverged: sequential {} vs sharded {}",
+            seq.sim_span_ms, shard.sim_span_ms
+        ),
+    )?;
+    prop_assert(
+        (shard.total_downtime_ms() - seq.total_downtime_ms()).abs() <= 1e-9,
+        &format!(
+            "downtime diverged: sequential {} vs sharded {}",
+            seq.total_downtime_ms(),
+            shard.total_downtime_ms()
+        ),
+    )?;
+    let rps_tol = 1e-9 * seq.throughput_rps.abs().max(1.0);
+    prop_assert(
+        (shard.throughput_rps - seq.throughput_rps).abs() <= rps_tol,
+        &format!(
+            "throughput diverged: sequential {} vs sharded {}",
+            seq.throughput_rps, shard.throughput_rps
+        ),
+    )?;
 
     // Bucket-for-bucket histogram equality (exact u64 adds commute).
     let (seq_low, seq_counts) = seq.latency_stream.hist().buckets();

@@ -1,0 +1,137 @@
+//! End-to-end properties of the Chrome `trace_event` export
+//! (`continuer trace`): schema validity, same-seed byte determinism,
+//! and Sequential-vs-Sharded span equivalence.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use continuer::coordinator::engine::Execution;
+use continuer::exper::trace_export::record_with;
+use continuer::obs::trace::chrome_trace;
+use continuer::util::json::Json;
+
+const REQUESTS: usize = 400;
+const REPLICAS: usize = 2;
+const SEED: u64 = 9;
+
+fn trace_events(doc: &Json) -> &[Json] {
+    doc.get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array")
+}
+
+fn ph(e: &Json) -> &str {
+    e.get("ph").and_then(Json::as_str).unwrap_or("")
+}
+
+fn num(e: &Json, key: &str) -> f64 {
+    e.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("event missing numeric '{key}': {e:?}"))
+}
+
+/// Every `ph:"X"` span carries finite, non-negative ts/dur, and spans
+/// on the same (pid, tid) track never overlap once time-ordered; every
+/// track referenced by a span has pid and tid metadata.
+#[test]
+fn spans_are_valid_and_non_overlapping_per_track() {
+    let events = record_with(REQUESTS, REPLICAS, SEED, Execution::Sequential).unwrap();
+    let doc = chrome_trace(&events);
+    let evs = trace_events(&doc);
+
+    let mut named_processes: BTreeSet<u64> = BTreeSet::new();
+    let mut named_threads: BTreeSet<(u64, u64)> = BTreeSet::new();
+    for e in evs.iter().filter(|e| ph(e) == "M") {
+        let pid = num(e, "pid") as u64;
+        match e.get("name").and_then(Json::as_str) {
+            Some("process_name") => {
+                named_processes.insert(pid);
+            }
+            Some("thread_name") => {
+                named_threads.insert((pid, num(e, "tid") as u64));
+            }
+            other => panic!("unexpected metadata record {other:?}"),
+        }
+    }
+    assert_eq!(named_processes.len(), REPLICAS, "one process per replica");
+
+    let mut tracks: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    let mut spans = 0usize;
+    for e in evs.iter().filter(|e| ph(e) == "X") {
+        let (ts, dur) = (num(e, "ts"), num(e, "dur"));
+        assert!(ts.is_finite() && ts >= 0.0, "bad ts in {e:?}");
+        assert!(dur.is_finite() && dur >= 0.0, "bad dur in {e:?}");
+        let track = (num(e, "pid") as u64, num(e, "tid") as u64);
+        assert!(
+            named_processes.contains(&track.0) && named_threads.contains(&track),
+            "span on unnamed track {track:?}"
+        );
+        tracks.entry(track).or_default().push((ts, dur));
+        spans += 1;
+    }
+    assert!(spans > 0, "the demo scenario must produce duration events");
+
+    for (track, ranges) in &mut tracks {
+        ranges.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in ranges.windows(2) {
+            let ((t0, d0), (t1, _)) = (w[0], w[1]);
+            assert!(
+                t0 + d0 <= t1 + 1e-6,
+                "overlapping spans on track {track:?}: [{t0}, {}] then start {t1}",
+                t0 + d0
+            );
+        }
+    }
+
+    // Instants are well-formed too (scoped, finite timestamp).
+    for e in evs.iter().filter(|e| ph(e) == "i") {
+        assert_eq!(e.get("s").and_then(Json::as_str), Some("t"));
+        assert!(num(e, "ts").is_finite());
+    }
+}
+
+/// The export is a pure function of (workload, seed): two independent
+/// recordings render byte-for-byte identical JSON.
+#[test]
+fn same_seed_traces_are_byte_identical() {
+    let a = chrome_trace(&record_with(REQUESTS, REPLICAS, SEED, Execution::Sequential).unwrap());
+    let b = chrome_trace(&record_with(REQUESTS, REPLICAS, SEED, Execution::Sequential).unwrap());
+    assert_eq!(a.to_string(), b.to_string());
+    assert_ne!(
+        a.to_string(),
+        chrome_trace(&record_with(REQUESTS, REPLICAS, SEED + 1, Execution::Sequential).unwrap())
+            .to_string(),
+        "different seeds must not collide"
+    );
+}
+
+/// Sharded execution buffers events per shard and merges them; the
+/// exported trace must contain the same work — equal span counts per
+/// category and equal stage-span counts per (replica, node) track —
+/// as the sequential reference.
+#[test]
+fn sequential_and_sharded_traces_carry_the_same_spans() {
+    let seq = chrome_trace(&record_with(REQUESTS, REPLICAS, SEED, Execution::Sequential).unwrap());
+    let shard =
+        chrome_trace(&record_with(REQUESTS, REPLICAS, SEED, Execution::Sharded(2)).unwrap());
+
+    let census = |doc: &Json| {
+        let mut by_cat: BTreeMap<String, usize> = BTreeMap::new();
+        let mut stage_tracks: BTreeMap<(u64, u64), usize> = BTreeMap::new();
+        for e in trace_events(doc).iter().filter(|e| ph(e) == "X") {
+            let cat = e.get("cat").and_then(Json::as_str).unwrap_or("").to_string();
+            if cat == "stage" {
+                *stage_tracks
+                    .entry((num(e, "pid") as u64, num(e, "tid") as u64))
+                    .or_insert(0) += 1;
+            }
+            *by_cat.entry(cat).or_insert(0) += 1;
+        }
+        (by_cat, stage_tracks)
+    };
+    let (seq_cats, seq_tracks) = census(&seq);
+    let (shard_cats, shard_tracks) = census(&shard);
+    assert!(seq_cats.get("stage").copied().unwrap_or(0) > 0);
+    assert!(seq_cats.get("failover").copied().unwrap_or(0) > 0);
+    assert_eq!(seq_cats, shard_cats);
+    assert_eq!(seq_tracks, shard_tracks);
+}
