@@ -1,22 +1,147 @@
-//! Bench: the failover decision path end-to-end (predictor queries +
-//! scheduler selection) — the measured basis of Table VIII. Needs
-//! `make artifacts`.
+//! Bench: downtime, both modeled and paid.
+//!
+//! Part 1 (synthetic, no artifacts — always runs, smoke-run in CI): the
+//! repartition deployment axis. The same 4-node pipeline, crash and
+//! request stream served under the three deployment modes —
+//! `Instantaneous` (the legacy free swap), `BreakBeforeMake` (the
+//! modeled transfer + warm-up span is paid as a dispatch stall) and
+//! `MakeBeforeBreak` (the span is hidden behind a repartition-free
+//! fallback; zero stall) — reporting the downtime split and the engine
+//! wall time per run for each. Emits `BENCH_downtime.json`.
+//!
+//! Part 2 (needs `make artifacts`): the failover decision path
+//! end-to-end (predictor queries + scheduler selection) — the measured
+//! basis of Table VIII.
 
+use continuer::baselines::AlwaysRepartition;
+use continuer::cluster::failure::{Detector, FailurePlan};
 use continuer::cluster::link::LinkModel;
 use continuer::config::Config;
-use continuer::coordinator::estimator::Estimator;
+use continuer::coordinator::batcher::BatcherConfig;
+use continuer::coordinator::engine::{
+    serve, DeploymentConfig, EngineConfig, Execution, HealthMode, SyntheticBackend,
+};
+use continuer::coordinator::estimator::{Estimator, StaticMetrics};
 use continuer::coordinator::failover::Failover;
 use continuer::coordinator::profiler::DowntimeTable;
+use continuer::coordinator::router::RoutePolicy;
+use continuer::coordinator::service::DeployMode;
 use continuer::exper::{default_artifacts_dir, require_artifacts};
 use continuer::predict::{AccuracyModel, GbdtParams, LatencyModel, LayerSample};
-use continuer::runtime::ArtifactStore;
+use continuer::runtime::{ArtifactStore, HostTensor};
 use continuer::util::bench::{bench, f, Table};
+use continuer::util::json::{obj, Json};
+use continuer::workload::{generate, Arrival};
+
+fn deploy_case(mode: DeployMode) -> (f64, f64, f64, f64) {
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1], 2.0, 1),
+        health: HealthMode::Oracle(Detector::default()),
+        deadline_ms: None,
+        pipeline_depth: 2,
+        route: RoutePolicy::RoundRobin,
+        decision_ms_override: Some(2.0),
+        record_completions: false,
+        execution: Execution::Sequential,
+        deployment: DeploymentConfig { mode, warmup_ms: 10.0 },
+    };
+    // 2 MB per block over 50 kB/ms: a 40 ms transfer + 10 ms warm-up
+    // when the crash re-hosts one block.
+    let backend = || {
+        SyntheticBackend::uniform(4, 5.0, 1.0).with_deployment(vec![2_000_000; 5], 50_000.0)
+    };
+    let mut backends = vec![backend()];
+    let mut failovers = vec![Failover::with_policy(Box::new(AlwaysRepartition))];
+    let requests = generate(500, Arrival::Poisson { rate_rps: 150.0 }, 16, 42);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let plans = [FailurePlan::crash(3, 200.0)];
+    let report = serve(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        &cfg,
+        &requests,
+        &inputs,
+        &plans,
+    )
+    .unwrap();
+    assert_eq!(
+        report.completed_count + report.dropped.len(),
+        500,
+        "bench must conserve requests"
+    );
+    let s = bench(2, 10, || {
+        let mut backends = vec![backend()];
+        let mut failovers = vec![Failover::with_policy(Box::new(AlwaysRepartition))];
+        std::hint::black_box(
+            serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &cfg,
+                &requests,
+                &inputs,
+                &plans,
+            )
+            .unwrap(),
+        );
+    });
+    (
+        report.total_downtime_ms(),
+        report.deploy_stall_ms(),
+        report.throughput_rps,
+        s.mean,
+    )
+}
+
+/// The deployment-mode axis: no artifacts needed, always runs.
+fn deploy_bench() -> Vec<Json> {
+    let mut t = Table::new(
+        "bench: repartition deployment modes — 4-node pipeline, crash @200ms, 40ms transfer + 10ms warm-up",
+        &["mode", "decision ms", "stall ms", "total ms", "rps", "run us"],
+    );
+    let mut out = Vec::new();
+    for mode in [
+        DeployMode::Instantaneous,
+        DeployMode::BreakBeforeMake,
+        DeployMode::MakeBeforeBreak,
+    ] {
+        let (decision_ms, stall_ms, rps, run_us) = deploy_case(mode);
+        t.row(&[
+            mode.as_str().to_string(),
+            f(decision_ms, 2),
+            f(stall_ms, 2),
+            f(decision_ms + stall_ms, 2),
+            f(rps, 1),
+            f(run_us, 1),
+        ]);
+        out.push(obj(&[
+            ("mode", mode.as_str().into()),
+            ("decision_downtime_ms", decision_ms.into()),
+            ("deploy_stall_ms", stall_ms.into()),
+            ("total_downtime_ms", (decision_ms + stall_ms).into()),
+            ("throughput_rps", rps.into()),
+            ("run_us", run_us.into()),
+        ]));
+    }
+    t.print();
+    out
+}
 
 fn main() {
+    let deploy = deploy_bench();
+    let out = obj(&[
+        ("bench", "downtime".into()),
+        ("deploy_modes", Json::Arr(deploy)),
+    ]);
+    let path = "BENCH_downtime.json";
+    std::fs::write(path, out.to_string()).unwrap();
+    println!("wrote {path}");
+
     let mut cfg = Config::default();
     cfg.artifacts_dir = default_artifacts_dir();
     if require_artifacts(&cfg.artifacts_dir).is_err() {
-        eprintln!("skipping downtime bench: run `make artifacts` first");
+        eprintln!("skipping decision-path bench: run `make artifacts` first");
         return;
     }
     let store = ArtifactStore::open(&cfg.artifacts_dir).unwrap();
@@ -39,13 +164,13 @@ fn main() {
     for name in ["resnet32", "mobilenetv2"] {
         let Ok(meta) = store.model(name) else { continue };
         let est = Estimator::new(
-        meta,
-        &lat_model,
-        &acc_model,
-        &link,
-        &downtime,
-        cfg.reinstate_ms,
-    );
+            meta,
+            &lat_model,
+            &acc_model,
+            &link,
+            &downtime,
+            cfg.reinstate_ms,
+        );
         let mut t = Table::new(
             &format!("bench: failover decision path — {name}"),
             &["failed node", "mean ms", "p95 ms", "p99 ms"],

@@ -125,6 +125,7 @@ fn scale_case(
         // The point of the bench: no per-request records at 1M scale.
         record_completions: false,
         execution,
+        deployment: Default::default(),
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -237,6 +238,7 @@ fn tracing_arm(n_requests: usize, record: bool) -> (f64, usize) {
         decision_ms_override: Some(1.5),
         record_completions: false,
         execution: Execution::Sequential,
+        deployment: Default::default(),
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -293,6 +295,7 @@ fn saturation_rung(rate_rps: f64, n_requests: usize, workers: usize) -> (Json, b
         decision_ms_override: Some(1.5),
         record_completions: false,
         execution: Execution::Sharded(workers),
+        deployment: Default::default(),
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);

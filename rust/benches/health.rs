@@ -97,6 +97,7 @@ fn serving_case(health: HealthMode) -> (f64, usize, usize) {
         decision_ms_override: Some(1.5),
         record_completions: false,
         execution: Execution::Sequential,
+        deployment: Default::default(),
     };
     let requests = generate(400, Arrival::Poisson { rate_rps: 500.0 }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);

@@ -77,6 +77,7 @@ fn serving_case(replicas: usize, depth: usize) -> ServingCase {
         decision_ms_override: Some(1.5),
         record_completions: false,
         execution: Execution::Sequential,
+        deployment: Default::default(),
     };
     // Saturating Poisson load: ~1 ms inter-arrival against a 23 ms path.
     let requests = generate(400, Arrival::Poisson { rate_rps: 1000.0 }, 16, 42);

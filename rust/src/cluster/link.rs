@@ -40,6 +40,16 @@ impl LinkModel {
     pub fn skip_extra_ms(&self) -> f64 {
         self.cfg.latency_ms
     }
+
+    /// Time to push `bytes` of partition weights onto a node during a
+    /// repartition *deployment*. Deliberately the deterministic expected
+    /// path, never the jittered sample: the engine schedules the
+    /// cut-over instant from this value up front, and consuming RNG
+    /// state here would desynchronise same-seed sequential and sharded
+    /// runs.
+    pub fn deploy_ms(&self, bytes: usize) -> f64 {
+        self.expected_ms(bytes)
+    }
 }
 
 #[cfg(test)]
@@ -71,6 +81,14 @@ mod tests {
             let s = m.sample_ms(50_000, &mut rng);
             assert!(s >= base * 0.9 - 1e-9 && s <= base * 1.1 + 1e-9);
         }
+    }
+
+    #[test]
+    fn deploy_is_deterministic_expected_time() {
+        let m = model();
+        assert_eq!(m.deploy_ms(100_000), m.expected_ms(100_000));
+        // Jitter never leaks into deployment scheduling.
+        assert_eq!(m.deploy_ms(100_000), m.deploy_ms(100_000));
     }
 
     #[test]

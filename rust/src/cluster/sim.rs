@@ -19,7 +19,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::config::LinkConfig;
-use crate::dnn::model::ModelMeta;
+use crate::dnn::model::{ExitMeta, ModelMeta, NodeMeta};
 use crate::dnn::variants::Technique;
 use crate::runtime::{ArtifactStore, Engine, HostTensor, UnitKind};
 use crate::util::rng::Rng;
@@ -228,6 +228,24 @@ impl<'a> EdgeCluster<'a> {
         let t0 = Instant::now();
         let y = unit.run(self.engine, x)?;
         Ok((y, t0.elapsed().as_secs_f64() * 1e3 * slowdown))
+    }
+
+    /// Serialized weight payload of a unit, bytes — what a repartition
+    /// deployment moves when the unit is re-hosted. Units the manifest
+    /// does not know cost nothing (they cannot be scheduled anyway).
+    pub fn unit_weight_bytes(&self, unit: UnitKind) -> usize {
+        match unit {
+            UnitKind::Node(n) => self.meta.node(n).map(NodeMeta::weight_bytes).unwrap_or(0),
+            UnitKind::Exit(e) => self.meta.exit(e).map(ExitMeta::weight_bytes).unwrap_or(0),
+        }
+    }
+
+    /// Modeled time to push `bytes` of weights onto a node during a
+    /// repartition deployment. Deterministic ([`LinkModel::deploy_ms`]):
+    /// the engine schedules cut-over instants from it, so it must not
+    /// consume RNG state the way [`Self::stage_transfer_ms`] does.
+    pub fn deploy_transfer_ms(&self, bytes: usize) -> f64 {
+        self.link.deploy_ms(bytes)
     }
 
     /// Modeled transfer time of `bytes` moving from host `from` to host

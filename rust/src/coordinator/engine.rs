@@ -106,7 +106,9 @@ use super::estimator::MetricsSource;
 use super::failover::Failover;
 use super::plan_cache::PlanCache;
 use super::router::{ReplicaLoad, RoutePolicy, Router, ShardRouter};
-use super::service::{Completion, DroppedRequest, FailoverWindow, ServiceReport};
+use super::service::{
+    Completion, DeployMode, DeployWindow, DroppedRequest, FailoverWindow, ServiceReport,
+};
 
 /// Per-stage compute backend: the engine schedules *when* stages run;
 /// the backend says *how long* they take (and produces the activation).
@@ -133,6 +135,19 @@ pub trait StageBackend {
     fn set_condition(&mut self, node: usize, condition: NodeCondition);
     fn is_up(&self, node: usize) -> bool {
         self.condition(node).is_up()
+    }
+    /// Size of a unit's weights in bytes — what a repartition deployment
+    /// must move onto a host that didn't already serve the unit. Zero
+    /// (the default) makes re-hosting that unit free.
+    fn unit_weight_bytes(&self, _unit: UnitKind) -> usize {
+        0
+    }
+    /// Modeled time to push `bytes` of weights onto `node` during a
+    /// deployment. Must be deterministic (no RNG): the engine schedules
+    /// the cut-over instant from it up front, and jitter here would
+    /// desynchronise same-seed sequential and sharded runs.
+    fn deploy_transfer_ms(&self, _node: usize, _bytes: usize) -> f64 {
+        0.0
     }
 }
 
@@ -161,6 +176,14 @@ impl StageBackend for EdgeCluster<'_> {
     fn set_condition(&mut self, node: usize, condition: NodeCondition) {
         EdgeCluster::set_condition(self, node, condition);
     }
+
+    fn unit_weight_bytes(&self, unit: UnitKind) -> usize {
+        EdgeCluster::unit_weight_bytes(self, unit)
+    }
+
+    fn deploy_transfer_ms(&self, _node: usize, bytes: usize) -> f64 {
+        EdgeCluster::deploy_transfer_ms(self, bytes)
+    }
 }
 
 /// Deterministic stand-in for the PJRT cluster: fixed per-stage service
@@ -175,6 +198,13 @@ pub struct SyntheticBackend {
     pub exit_ms: f64,
     /// Per-hop transfer time, ms (a skip reroute pays two).
     pub hop_ms: f64,
+    /// Per-node weight size in bytes (index 0 unused). All-zero by
+    /// default, which keeps deployments instantaneous unless a test or
+    /// experiment opts in via [`SyntheticBackend::with_deployment`].
+    pub weight_bytes: Vec<usize>,
+    /// Deterministic deployment link rate, bytes per millisecond. Zero
+    /// (the default) means weight transfers take no modeled time.
+    pub deploy_bytes_per_ms: f64,
     conditions: Vec<NodeCondition>,
 }
 
@@ -186,6 +216,8 @@ impl SyntheticBackend {
             node_ms,
             exit_ms,
             hop_ms,
+            weight_bytes: vec![0; n],
+            deploy_bytes_per_ms: 0.0,
             conditions: vec![NodeCondition::Up; n],
         }
     }
@@ -193,6 +225,19 @@ impl SyntheticBackend {
     /// `num_nodes` identical stages of `node_ms` ms each.
     pub fn uniform(num_nodes: usize, node_ms: f64, hop_ms: f64) -> SyntheticBackend {
         SyntheticBackend::new(vec![node_ms; num_nodes + 1], node_ms / 2.0, hop_ms)
+    }
+
+    /// Give the chain weight sizes and a deployment link rate, so
+    /// repartition deployments cost modeled transfer time.
+    pub fn with_deployment(mut self, weight_bytes: Vec<usize>, bytes_per_ms: f64) -> SyntheticBackend {
+        assert_eq!(
+            weight_bytes.len(),
+            self.node_ms.len(),
+            "weight_bytes must be per-node (index 0 unused), same length as node_ms"
+        );
+        self.weight_bytes = weight_bytes;
+        self.deploy_bytes_per_ms = bytes_per_ms;
+        self
     }
 }
 
@@ -241,6 +286,23 @@ impl StageBackend for SyntheticBackend {
     fn set_condition(&mut self, node: usize, condition: NodeCondition) {
         self.conditions[node] = condition;
     }
+
+    fn unit_weight_bytes(&self, unit: UnitKind) -> usize {
+        match unit {
+            UnitKind::Node(n) => self.weight_bytes.get(n).copied().unwrap_or(0),
+            // Exit heads ride along with their host's block in this
+            // synthetic model: re-hosting one is free.
+            UnitKind::Exit(_) => 0,
+        }
+    }
+
+    fn deploy_transfer_ms(&self, _node: usize, bytes: usize) -> f64 {
+        if self.deploy_bytes_per_ms <= 0.0 {
+            0.0
+        } else {
+            bytes as f64 / self.deploy_bytes_per_ms
+        }
+    }
 }
 
 /// How the engine learns about node failures.
@@ -276,6 +338,27 @@ pub enum Execution {
     Sharded(usize),
 }
 
+/// How repartition deployments are modeled (see
+/// [`DeployMode`](super::service::DeployMode) for the three modes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeploymentConfig {
+    pub mode: DeployMode,
+    /// Warm-up delay each newly assigned host pays after its weights
+    /// land (allocator/compile/cache warm-up) before its units count as
+    /// live.
+    pub warmup_ms: f64,
+}
+
+impl Default for DeploymentConfig {
+    /// The pre-deployment-model engine: repartition is a free swap.
+    fn default() -> DeploymentConfig {
+        DeploymentConfig {
+            mode: DeployMode::Instantaneous,
+            warmup_ms: 0.0,
+        }
+    }
+}
+
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -301,6 +384,11 @@ pub struct EngineConfig {
     pub record_completions: bool,
     /// Sequential reference loop or per-replica shards on real threads.
     pub execution: Execution,
+    /// Repartition deployment model: instantaneous swap (the legacy
+    /// behaviour), break-before-make (serving stalls through the
+    /// transfer + warm-up window) or make-before-break (a fallback
+    /// technique keeps the replica serving until the cut-over).
+    pub deployment: DeploymentConfig,
 }
 
 impl EngineConfig {
@@ -316,6 +404,7 @@ impl EngineConfig {
             decision_ms_override: None,
             record_completions: true,
             execution: Execution::Sequential,
+            deployment: DeploymentConfig::default(),
         }
     }
 
@@ -346,6 +435,15 @@ enum EventKind {
     BatcherTimeout { replica: usize },
     StageStart { replica: usize, batch: SlabKey },
     StageDone { replica: usize, batch: SlabKey },
+    /// One host finished receiving re-hosted weights for deployment
+    /// `deploy_id`. Stale ids (superseded or cancelled deployments) are
+    /// ignored.
+    DeployTransferDone { replica: usize, deploy_id: u64, node: usize },
+    /// One host finished warming the units it received.
+    DeployWarmupDone { replica: usize, deploy_id: u64, node: usize },
+    /// Every transfer + warm-up finished: switch dispatch to the new
+    /// partition atomically.
+    DeployCutover { replica: usize, deploy_id: u64 },
 }
 
 #[derive(Debug)]
@@ -493,6 +591,29 @@ struct Engine<'a, B: StageBackend, S: EventSink> {
     /// Observability stream. Monomorphized: with [`NoopSink`] every
     /// emission compiles to nothing, keeping the hot path zero-cost.
     sink: &'a mut S,
+    /// In-flight repartition deployment per replica (at most one: a new
+    /// failure supersedes the old deployment).
+    deploys: Vec<Option<DeployState>>,
+    /// Monotone deployment id: stale Transfer/Warmup/Cutover heap events
+    /// for cancelled or superseded deployments miss by id.
+    deploy_seq: u64,
+    deploy_windows: Vec<DeployWindow>,
+}
+
+/// One in-flight repartition deployment on a replica: weights are in
+/// transit / warming toward the repartitioned plan, dispatch runs on
+/// `fallback` (make-before-break) or stalls (`None`, break-before-make)
+/// until the cut-over event fires.
+#[derive(Debug, Clone, Copy)]
+struct DeployState {
+    id: u64,
+    /// The failed node the deployment routes around.
+    node: usize,
+    start_ms: f64,
+    fallback: Option<Technique>,
+    /// Index of this deployment's window in `deploy_windows`, patched
+    /// on cut-over or cancellation.
+    window_idx: usize,
 }
 
 /// A shard's live arrival feed, with the watermark that makes it safe:
@@ -1008,6 +1129,7 @@ struct ShardOutcome {
     clock_ms: f64,
     plan_hits: usize,
     plan_misses: usize,
+    deploy_windows: Vec<DeployWindow>,
     /// Observability stream buffered by this shard's sink (empty when
     /// the run used [`NoopSink`] or streamed live to the caller).
     events: Vec<EngineEvent>,
@@ -1036,6 +1158,7 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         clock_ms: 0.0,
         plan_hits: 0,
         plan_misses: 0,
+        deploy_windows: Vec::new(),
         events: Vec::new(),
     };
     for (r, mut o) in shards.into_iter().enumerate() {
@@ -1046,6 +1169,9 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
             d.replica = r;
         }
         for w in &mut o.windows {
+            w.replica = r;
+        }
+        for w in &mut o.deploy_windows {
             w.replica = r;
         }
         for e in &mut o.events {
@@ -1062,10 +1188,14 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         merged.clock_ms = merged.clock_ms.max(o.clock_ms);
         merged.plan_hits += o.plan_hits;
         merged.plan_misses += o.plan_misses;
+        merged.deploy_windows.extend(o.deploy_windows);
         merged.events.extend(o.events);
     }
     merged
         .windows
+        .sort_by(|a, b| a.start_ms.total_cmp(&b.start_ms).then(a.replica.cmp(&b.replica)));
+    merged
+        .deploy_windows
         .sort_by(|a, b| a.start_ms.total_cmp(&b.start_ms).then(a.replica.cmp(&b.replica)));
     merged.events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
     merged
@@ -1087,6 +1217,7 @@ fn finalize(o: ShardOutcome) -> ServiceReport {
         batches_dispatched: o.batches_dispatched,
         plan_cache_hits: o.plan_hits,
         plan_cache_misses: o.plan_misses,
+        deploy_windows: o.deploy_windows,
     }
 }
 
@@ -1104,6 +1235,7 @@ impl<'a, B: StageBackend, S: EventSink> Engine<'a, B, S> {
             .map(|b| ReplicaState::new(b.num_nodes()))
             .collect();
         let plan_caches: Vec<PlanCache> = backends.iter().map(|_| PlanCache::new()).collect();
+        let deploys = backends.iter().map(|_| None).collect();
         Engine {
             backends,
             failovers,
@@ -1130,6 +1262,9 @@ impl<'a, B: StageBackend, S: EventSink> Engine<'a, B, S> {
             intake: None,
             outstanding: None,
             sink,
+            deploys,
+            deploy_seq: 0,
+            deploy_windows: Vec::new(),
         }
     }
 }
@@ -1295,7 +1430,22 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                     }
                 }
                 EventKind::DetectFailover { replica, node, false_positive } => {
-                    let report = self.failovers[replica].on_failure(self.est, node)?;
+                    // With a deployment model active, compute the weight
+                    // movement repartitioning would need *before* the
+                    // decision, so the policy prices its downtime: the
+                    // full transfer + warm-up span under break-before-make
+                    // (serving stalls through it), nothing under
+                    // make-before-break (a fallback keeps serving).
+                    let deploy_plan = if self.cfg.deployment.mode != DeployMode::Instantaneous {
+                        Some(self.plan_deploy(replica, node))
+                    } else {
+                        None
+                    };
+                    let extra = match &deploy_plan {
+                        Some((_, span)) if self.cfg.deployment.mode == DeployMode::BreakBeforeMake => *span,
+                        _ => 0.0,
+                    };
+                    let report = self.failovers[replica].on_failure_priced(self.est, node, extra)?;
                     let downtime = self
                         .cfg
                         .decision_ms_override
@@ -1319,13 +1469,29 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                             end_ms: t + downtime,
                         },
                     );
+                    match deploy_plan {
+                        Some((transfers, span))
+                            if technique == Technique::Repartition && span > 0.0 =>
+                        {
+                            self.start_deploy(replica, node, transfers, span, t)?;
+                        }
+                        // The chosen technique needs no weight movement
+                        // (early-exit/skip, or the new plan's units all
+                        // sit where they already were): live immediately.
+                        _ => self.cancel_deploy(replica, t),
+                    }
                     self.try_dispatch(replica, t)?;
                 }
                 EventKind::DetectRecovery { replica, node } => {
                     // `on_recovery` reports whether the failover mode
                     // actually cleared — only then did the node leave
-                    // the path (and any quarantine window close).
+                    // the path (and any quarantine window close). The
+                    // rollback itself is a routing flip, not a weight
+                    // move — the recovered node kept its weights — so
+                    // it stays instantaneous, and any deployment still
+                    // in flight for the failure is moot.
                     if self.failovers[replica].on_recovery(node) {
+                        self.cancel_deploy(replica, t);
                         self.emit(t, replica, EngineEventKind::QuarantineExit { node });
                         self.emit(t, replica, EngineEventKind::Recovery { node });
                     }
@@ -1340,6 +1506,33 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                 }
                 EventKind::StageDone { replica, batch } => {
                     self.on_stage_done(replica, batch, t)?;
+                }
+                EventKind::DeployTransferDone { replica, deploy_id, node } => {
+                    if self.deploys[replica].as_ref().is_some_and(|d| d.id == deploy_id) {
+                        self.emit(t, replica, EngineEventKind::TransferDone { node });
+                    }
+                }
+                EventKind::DeployWarmupDone { replica, deploy_id, node } => {
+                    if self.deploys[replica].as_ref().is_some_and(|d| d.id == deploy_id) {
+                        self.emit(t, replica, EngineEventKind::WarmupDone { node });
+                    }
+                }
+                EventKind::DeployCutover { replica, deploy_id } => {
+                    if self.deploys[replica].as_ref().is_some_and(|d| d.id == deploy_id) {
+                        let d = self.deploys[replica].take().unwrap();
+                        let w = &mut self.deploy_windows[d.window_idx];
+                        w.cutover_ms = t;
+                        w.completed = true;
+                        // Break-before-make stalled dispatch for the whole
+                        // window; make-before-break served on the fallback
+                        // and stalls nothing.
+                        let stalled_ms = if d.fallback.is_none() { t - d.start_ms } else { 0.0 };
+                        self.emit(t, replica, EngineEventKind::Cutover { node: d.node, stalled_ms });
+                        // The atomic switch: dispatch now uses the failover
+                        // mode's repartitioned plan. In-flight fallback
+                        // batches drain untouched; nothing requeues.
+                        self.try_dispatch(replica, t)?;
+                    }
                 }
             }
         }
@@ -1386,8 +1579,127 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             clock_ms: self.clock_ms,
             plan_hits,
             plan_misses,
+            deploy_windows: self.deploy_windows,
             events: Vec::new(),
         })
+    }
+
+    /// Compute the weight movement repartitioning around `failed` needs
+    /// on replica `r`: every unit of the new plan not already hosted on
+    /// the same node under the plan being served *now* must have its
+    /// weights pushed to its new host. Returns per-host transfer times
+    /// and the deployment span (slowest transfer plus warm-up; zero when
+    /// nothing moves — then no host warms up either).
+    ///
+    /// Plans are computed directly from the backend, NOT through the
+    /// replica's [`PlanCache`]: deployment planning must never perturb
+    /// the cache hit/miss counters the report surfaces, or the
+    /// instantaneous-swap degenerate config would stop reproducing
+    /// pre-deployment reports byte-for-byte.
+    fn plan_deploy(&self, r: usize, failed: usize) -> (Vec<(usize, f64)>, f64) {
+        let backend = &self.backends[r];
+        let prev_tech = self.failovers[r].technique().unwrap_or(Technique::Repartition);
+        let prev_failed = self.failovers[r].failed_node();
+        let old = backend.steps(prev_tech, prev_failed);
+        let new = backend.steps(Technique::Repartition, Some(failed));
+        let mut per_host: Vec<(usize, usize)> = Vec::new();
+        for step in &new {
+            let already_there = old.iter().any(|o| o.unit == step.unit && o.host == step.host);
+            if already_there {
+                continue;
+            }
+            let bytes = backend.unit_weight_bytes(step.unit);
+            if bytes == 0 {
+                continue;
+            }
+            match per_host.iter_mut().find(|(h, _)| *h == step.host) {
+                Some((_, b)) => *b += bytes,
+                None => per_host.push((step.host, bytes)),
+            }
+        }
+        let mut transfers: Vec<(usize, f64)> = Vec::with_capacity(per_host.len());
+        let mut slowest: f64 = 0.0;
+        for (host, bytes) in per_host {
+            let ms = backend.deploy_transfer_ms(host, bytes);
+            slowest = slowest.max(ms);
+            transfers.push((host, ms));
+        }
+        if transfers.is_empty() {
+            (transfers, 0.0)
+        } else {
+            let span = slowest + self.cfg.deployment.warmup_ms;
+            (transfers, span)
+        }
+    }
+
+    /// Begin a repartition deployment on replica `r` around failed
+    /// `node`: schedule per-host transfer/warm-up completions and the
+    /// cut-over, pick the make-before-break fallback (if the mode asks
+    /// for one and a repartition-free candidate exists), and open the
+    /// report's deployment window. A deployment already in flight is
+    /// superseded — the newer failure's plan wins.
+    fn start_deploy(
+        &mut self,
+        r: usize,
+        node: usize,
+        transfers: Vec<(usize, f64)>,
+        span: f64,
+        t: f64,
+    ) -> Result<()> {
+        self.cancel_deploy(r, t);
+        self.deploy_seq += 1;
+        let id = self.deploy_seq;
+        let fallback = match self.cfg.deployment.mode {
+            DeployMode::MakeBeforeBreak => self.failovers[r].fallback_technique(self.est, node)?,
+            _ => None,
+        };
+        let cutover_ms = t + span;
+        self.emit(
+            t,
+            r,
+            EngineEventKind::DeployStart {
+                node,
+                make_before_break: fallback.is_some(),
+                transfers: transfers.len(),
+                cutover_ms,
+            },
+        );
+        let warmup = self.cfg.deployment.warmup_ms;
+        for &(host, ms) in &transfers {
+            self.push(t + ms, EventKind::DeployTransferDone { replica: r, deploy_id: id, node: host });
+            self.push(
+                t + ms + warmup,
+                EventKind::DeployWarmupDone { replica: r, deploy_id: id, node: host },
+            );
+        }
+        self.push(cutover_ms, EventKind::DeployCutover { replica: r, deploy_id: id });
+        let window_idx = self.deploy_windows.len();
+        self.deploy_windows.push(DeployWindow {
+            replica: r,
+            node,
+            mode: self.cfg.deployment.mode,
+            start_ms: t,
+            transfer_ms: span - warmup,
+            warmup_ms: warmup,
+            cutover_ms,
+            fallback,
+            completed: false,
+        });
+        self.deploys[r] = Some(DeployState { id, node, start_ms: t, fallback, window_idx });
+        Ok(())
+    }
+
+    /// Abandon replica `r`'s in-flight deployment, if any: the failed
+    /// node recovered first, a newer failure superseded it, or the new
+    /// decision needs no deployment. The window keeps `completed: false`
+    /// and records the abandonment time as its end; stale heap events
+    /// for it miss by id.
+    fn cancel_deploy(&mut self, r: usize, t: f64) {
+        if let Some(d) = self.deploys[r].take() {
+            let w = &mut self.deploy_windows[d.window_idx];
+            w.cutover_ms = t;
+            w.completed = false;
+        }
     }
 
     /// The run is over when no arrival can still come in (heap arrivals
@@ -1570,11 +1882,20 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             if self.states[r].queue.is_empty() {
                 return Ok(());
             }
-            let technique = self
-                .failovers[r]
-                .technique()
-                .unwrap_or(Technique::Repartition);
-            let failed = self.failovers[r].failed_node();
+            // An in-flight deployment overrides the dispatch plan: the
+            // repartitioned plan is not live until its cut-over, so serve
+            // on the fallback technique (make-before-break) or stall
+            // dispatch entirely (break-before-make — requests queue or
+            // expire against their deadlines; the cut-over event resumes).
+            let (technique, failed, technique_tag) = match self.deploys[r] {
+                Some(DeployState { fallback: Some(fb), node, .. }) => (fb, Some(node), Some(fb)),
+                Some(DeployState { fallback: None, .. }) => return Ok(()),
+                None => (
+                    self.failovers[r].technique().unwrap_or(Technique::Repartition),
+                    self.failovers[r].failed_node(),
+                    self.failovers[r].technique(),
+                ),
+            };
             // Cached: after warm-up this is a pointer copy, not a fresh
             // Vec<Step> per batch.
             let steps = self.plan_caches[r].plan(&self.backends[r], technique, failed);
@@ -1616,7 +1937,6 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                             row_elems: self.inputs.row_elems(),
                         })
                     };
-                    let technique_tag = self.failovers[r].technique();
                     self.states[r].in_flight_batches += 1;
                     self.states[r].in_flight_reqs += reqs.len();
                     if self.states[r].in_flight_batches > self.max_in_flight {
@@ -1710,6 +2030,7 @@ mod tests {
             decision_ms_override: Some(1.5),
             record_completions: true,
             execution: Execution::Sequential,
+            deployment: DeploymentConfig::default(),
         }
     }
 
@@ -1724,6 +2045,7 @@ mod tests {
             decision_ms_override: Some(1.5),
             record_completions: true,
             execution: Execution::Sequential,
+            deployment: DeploymentConfig::default(),
         }
     }
 

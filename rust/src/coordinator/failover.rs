@@ -77,8 +77,26 @@ impl Failover {
     /// Handle the failure of `failed`: query predictions, let the policy
     /// select, switch mode. Returns the report (also kept in history).
     pub fn on_failure(&mut self, est: &dyn MetricsSource, failed: usize) -> Result<FailoverReport> {
+        // `x + 0.0` is bit-identical for every finite candidate downtime,
+        // so delegating keeps unpriced runs byte-equal to the pre-pricing
+        // controller.
+        self.on_failure_priced(est, failed, 0.0)
+    }
+
+    /// [`Self::on_failure`] with the repartition candidate's downtime
+    /// raised by `extra_repartition_downtime_ms` before the policy
+    /// decides — how the engine charges repartition for its modeled
+    /// weight-transfer + warm-up window (break-before-make), so the
+    /// selection prices deployment cost like any other downtime.
+    pub fn on_failure_priced(
+        &mut self,
+        est: &dyn MetricsSource,
+        failed: usize,
+        extra_repartition_downtime_ms: f64,
+    ) -> Result<FailoverReport> {
         let t0 = Instant::now();
-        let candidates = est.candidate_metrics(failed)?;
+        let mut candidates = est.candidate_metrics(failed)?;
+        super::scheduler::price_repartition_deploy(&mut candidates, extra_repartition_downtime_ms);
         let predict_ms = t0.elapsed().as_secs_f64() * 1e3;
 
         let t1 = Instant::now();
@@ -134,6 +152,38 @@ impl Failover {
             Mode::Healthy => None,
             Mode::Degraded { failed, .. } => Some(failed),
         }
+    }
+
+    /// Pick the technique that keeps the replica serving *while* a
+    /// repartition deploys (make-before-break): the policy's choice over
+    /// the repartition-free candidates only — those need no weight
+    /// movement, so they are live immediately. Returns `None` when no
+    /// such candidate exists (the deployment then stalls like
+    /// break-before-make). Does not switch mode, time itself, or touch
+    /// history: this is a side query, not a failover.
+    pub fn fallback_technique(
+        &self,
+        est: &dyn MetricsSource,
+        failed: usize,
+    ) -> Result<Option<Technique>> {
+        let candidates: Vec<CandidateMetrics> = est
+            .candidate_metrics(failed)?
+            .into_iter()
+            .filter(|c| c.technique != Technique::Repartition)
+            .collect();
+        if candidates.is_empty() {
+            return Ok(None);
+        }
+        // A fixed policy can "choose" a technique outside the filtered
+        // set or refuse to decide at all without its pet candidate
+        // (always-repartition); fall back to the first repartition-free
+        // candidate rather than deploy-blocking on a plan that is not
+        // live yet.
+        let chosen = match self.policy.decide(&candidates) {
+            Ok(d) if candidates.iter().any(|c| c.technique == d.chosen) => d.chosen,
+            _ => candidates[0].technique,
+        };
+        Ok(Some(chosen))
     }
 }
 

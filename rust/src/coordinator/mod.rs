@@ -26,6 +26,31 @@
 //! - [`service`] holds the report types and the seed-compatible
 //!   single-pipeline entry point.
 //!
+//! # Repartition deployment
+//!
+//! Repartitioning after a failure is not a free swap: the re-hosted
+//! block's weights must move over the cluster's links and the receiving
+//! node pays a warm-up before the new partition serves. The engine
+//! models this as a deployment state machine
+//! ([`engine::DeploymentConfig`], [`service::DeployMode`]): when the
+//! failover decision picks repartition, per-host weight transfers are
+//! scheduled from [`engine::StageBackend::unit_weight_bytes`] and
+//! [`engine::StageBackend::deploy_transfer_ms`], and the new plan only
+//! becomes live at the cut-over event. Under
+//! [`service::DeployMode::BreakBeforeMake`] dispatch stalls through the
+//! window (requests queue or expire against their deadlines, and the
+//! stall is priced into the decision via
+//! [`scheduler::price_repartition_deploy`]); under
+//! [`service::DeployMode::MakeBeforeBreak`] the replica keeps serving
+//! on a repartition-free fallback (early-exit/skip, chosen by
+//! [`failover::Failover::fallback_technique`]) and cuts over atomically
+//! — nothing stalls, nothing requeues. Every deployment lands in
+//! [`service::ServiceReport::deploy_windows`], and
+//! [`service::DeployMode::Instantaneous`] (the default) reproduces the
+//! pre-deployment engine byte-for-byte. Reintegration stays
+//! instantaneous by design: the recovered node kept its weights, so
+//! rolling back is a routing flip, not a deployment.
+//!
 //! The engine's steady-state hot path allocates nothing per event: step
 //! plans are memoized per replica in a [`plan_cache::PlanCache`]
 //! (`Arc<[Step]>`, one miss per distinct technique/failure pair),
@@ -90,7 +115,8 @@ pub mod service;
 
 pub use engine::{
     serve, serve_routed, serve_routed_with_sink, serve_sequential, serve_sequential_with_sink,
-    serve_with_sink, EngineConfig, Execution, HealthMode, StageBackend, SyntheticBackend,
+    serve_with_sink, DeploymentConfig, EngineConfig, Execution, HealthMode, StageBackend,
+    SyntheticBackend,
 };
 pub use plan_cache::PlanCache;
 pub use estimator::{Estimator, MetricsSource, StaticMetrics};
@@ -99,4 +125,7 @@ pub use policy::{Continuer, RecoveryPolicy};
 pub use profiler::{fit_platform, platform_transform, DowntimeTable, LayerProfiler, PlatformLatencyModel};
 pub use router::{ReplicaLoad, RoutePolicy, Router, ShardRouter};
 pub use scheduler::{select, weight_sweep, CandidateMetrics, Decision};
-pub use service::{Completion, DroppedRequest, FailoverWindow, ServiceConfig, ServiceReport};
+pub use service::{
+    Completion, DeployMode, DeployWindow, DroppedRequest, FailoverWindow, ServiceConfig,
+    ServiceReport,
+};

@@ -77,6 +77,25 @@ pub fn select(candidates: &[CandidateMetrics], weights: &Objectives) -> Result<D
     })
 }
 
+/// Charge the repartition candidate(s) for a modeled deployment window:
+/// `extra_downtime_ms` of weight-transfer + warm-up time that
+/// break-before-make repartitioning would stall serving for. Applied
+/// *before* [`select`] min-max-normalises, so deployment cost competes
+/// with the other candidates' downtime on equal terms.
+///
+/// Note the normalisation consequence: with only two candidates the
+/// normalised downtimes are always {0, 1} whatever the raw gap, so a
+/// constant surcharge can never flip a two-candidate decision — pricing
+/// only bites when at least three candidates spread the scale (see
+/// `deploy_pricing_flips_three_candidate_decision`).
+pub fn price_repartition_deploy(candidates: &mut [CandidateMetrics], extra_downtime_ms: f64) {
+    for c in candidates {
+        if c.technique == Technique::Repartition {
+            c.downtime_ms += extra_downtime_ms;
+        }
+    }
+}
+
 /// Sweep helper for Table VII: all weight combinations in {lo..hi} steps.
 pub fn weight_sweep(lo: f64, hi: f64, step: f64) -> Vec<Objectives> {
     let mut out = Vec::new();
@@ -172,6 +191,40 @@ mod tests {
             .collect();
         let b = select(&scaled, &Objectives::default()).unwrap();
         assert_eq!(a.chosen, b.chosen);
+    }
+
+    #[test]
+    fn deploy_pricing_leaves_other_candidates_untouched() {
+        let mut cands = three();
+        price_repartition_deploy(&mut cands, 25.0);
+        assert_eq!(cands[0].downtime_ms, 29.0);
+        assert_eq!(cands[1].downtime_ms, 1.0);
+        assert_eq!(cands[2].downtime_ms, 3.0);
+        // Zero surcharge is bit-exact identity.
+        let mut cands = three();
+        price_repartition_deploy(&mut cands, 0.0);
+        assert_eq!(cands, three());
+    }
+
+    #[test]
+    fn deploy_pricing_flips_three_candidate_decision() {
+        // Accuracy-leaning weights pick repartition when its deployment
+        // is free, but a large modeled transfer window re-ranks it below
+        // skip. Needs >= 3 candidates: with two, min-max normalisation
+        // maps downtimes to {0, 1} regardless of the surcharge.
+        let w = Objectives::new(0.75, 0.1, 0.15);
+        let cands = vec![
+            cand(Technique::Repartition, 90.0, 30.0, 4.0),
+            cand(Technique::EarlyExit(3), 60.0, 8.0, 1.0),
+            cand(Technique::SkipConnection(4), 85.0, 25.0, 3.0),
+        ];
+        assert_eq!(select(&cands, &w).unwrap().chosen, Technique::Repartition);
+        let mut priced = cands.clone();
+        price_repartition_deploy(&mut priced, 100.0);
+        assert_eq!(
+            select(&priced, &w).unwrap().chosen,
+            Technique::SkipConnection(4)
+        );
     }
 
     #[test]

@@ -77,6 +77,80 @@ impl FailoverWindow {
     }
 }
 
+/// How a repartition becomes live after the failover decision picks it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeployMode {
+    /// The legacy model: the repartitioned plan is live the instant the
+    /// decision lands — weight movement and warm-up are free. The
+    /// engine's behaviour (and reports) are byte-identical to before the
+    /// deployment model existed.
+    Instantaneous,
+    /// The new partition deploys while serving is stalled: requests
+    /// queue (or expire against their deadlines) from the decision until
+    /// the cut-over at the end of transfer + warm-up.
+    BreakBeforeMake,
+    /// The old pipeline keeps draining on the surviving nodes via a
+    /// repartition-free fallback (early-exit or skip) while the new
+    /// partition transfers and warms in the background; dispatch cuts
+    /// over atomically when it is live. Nothing stalls, nothing
+    /// requeues.
+    MakeBeforeBreak,
+}
+
+impl DeployMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeployMode::Instantaneous => "instantaneous",
+            DeployMode::BreakBeforeMake => "break-before-make",
+            DeployMode::MakeBeforeBreak => "make-before-break",
+        }
+    }
+}
+
+/// One repartition deployment: the window between the failover decision
+/// choosing repartition and that partition going live (or being
+/// abandoned).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeployWindow {
+    pub replica: usize,
+    /// The failed node the deployment routes around.
+    pub node: usize,
+    pub mode: DeployMode,
+    /// When the deployment began (the failover decision instant), ms.
+    pub start_ms: f64,
+    /// Slowest per-host weight transfer in the plan, ms.
+    pub transfer_ms: f64,
+    /// Warm-up each newly assigned host pays after its weights land, ms.
+    pub warmup_ms: f64,
+    /// When the new partition went live — or, for an abandoned
+    /// deployment (`completed: false`), when it was cancelled.
+    pub cutover_ms: f64,
+    /// Technique that kept the replica serving through the window
+    /// (make-before-break); `None` means dispatch stalled
+    /// (break-before-make, or no repartition-free candidate existed).
+    pub fallback: Option<Technique>,
+    /// Whether the cut-over actually happened (false = superseded by a
+    /// newer failure, or the failed node recovered first).
+    pub completed: bool,
+}
+
+impl DeployWindow {
+    /// Wall time from decision to cut-over (or abandonment).
+    pub fn duration_ms(&self) -> f64 {
+        self.cutover_ms - self.start_ms
+    }
+
+    /// How long dispatch was stalled by this deployment: its whole
+    /// duration when no fallback served through it, zero otherwise.
+    pub fn stalled_ms(&self) -> f64 {
+        if self.fallback.is_none() {
+            self.duration_ms()
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Aggregate report of one serving run.
 #[derive(Debug, Clone)]
 pub struct ServiceReport {
@@ -118,6 +192,9 @@ pub struct ServiceReport {
     /// Step plans actually derived and allocated (one per distinct
     /// technique/failed-node pair per replica — the warm-up cost).
     pub plan_cache_misses: usize,
+    /// Repartition deployments (empty under
+    /// [`DeployMode::Instantaneous`], where repartition is a free swap).
+    pub deploy_windows: Vec<DeployWindow>,
 }
 
 impl ServiceReport {
@@ -139,6 +216,30 @@ impl ServiceReport {
     /// Total decision downtime across all failover windows, ms.
     pub fn total_downtime_ms(&self) -> f64 {
         self.failovers.iter().map(|w| w.downtime_ms()).sum()
+    }
+
+    /// Dispatch time stalled by break-before-make deployments, ms
+    /// (zero under make-before-break with a feasible fallback — the
+    /// headline the deployment model exists to show).
+    pub fn deploy_stall_ms(&self) -> f64 {
+        self.deploy_windows.iter().map(|w| w.stalled_ms()).sum()
+    }
+
+    /// Downtime attributed per technique: each failover window's
+    /// decision downtime under its chosen technique's name, plus
+    /// deployment stalls (which only repartition incurs) under
+    /// `"repartition"`.
+    pub fn downtime_by_technique(&self) -> std::collections::BTreeMap<&'static str, f64> {
+        let mut by_tech: std::collections::BTreeMap<&'static str, f64> =
+            std::collections::BTreeMap::new();
+        for w in &self.failovers {
+            *by_tech.entry(w.technique.kind_name()).or_insert(0.0) += w.downtime_ms();
+        }
+        let stall = self.deploy_stall_ms();
+        if stall > 0.0 {
+            *by_tech.entry("repartition").or_insert(0.0) += stall;
+        }
+        by_tech
     }
 }
 

@@ -64,6 +64,17 @@ impl NodeMeta {
     pub fn flops(&self) -> usize {
         self.layers.iter().map(|l| l.flops()).sum()
     }
+
+    /// Serialized size of this node's weights (f32), bytes — what a
+    /// repartition deployment must move to re-host the block.
+    pub fn weight_bytes(&self) -> usize {
+        weight_bytes(&self.weights)
+    }
+}
+
+/// Total f32 payload of a weight-entry list, bytes.
+fn weight_bytes(weights: &[WeightEntry]) -> usize {
+    weights.iter().map(|w| 4 * w.elems()).sum()
 }
 
 /// One early-exit head.
@@ -74,6 +85,13 @@ pub struct ExitMeta {
     pub artifacts: BTreeMap<usize, String>,
     pub weights: Vec<WeightEntry>,
     pub layers: Vec<LayerSpec>,
+}
+
+impl ExitMeta {
+    /// Serialized size of this exit head's weights (f32), bytes.
+    pub fn weight_bytes(&self) -> usize {
+        weight_bytes(&self.weights)
+    }
 }
 
 /// Final (full-test-set) accuracies measured at build time.

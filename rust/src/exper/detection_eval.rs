@@ -97,6 +97,7 @@ fn run_point_with(
         // The sweep reads only aggregates — stream, keep no records.
         record_completions: false,
         execution: Execution::Sequential,
+        deployment: Default::default(),
     };
     let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
     let mut failovers = vec![Failover::new(Objectives::default())];

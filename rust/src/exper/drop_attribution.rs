@@ -106,6 +106,7 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
         // completions instead of recording them.
         record_completions: false,
         execution: Execution::Sequential,
+        deployment: Default::default(),
     };
     let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
     let mut failovers = vec![Failover::new(Objectives::default())];

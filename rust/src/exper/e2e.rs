@@ -11,15 +11,20 @@ use anyhow::Result;
 use crate::cluster::failure::{Detector, FailurePlan};
 use crate::cluster::sim::EdgeCluster;
 use crate::coordinator::batcher::BatcherConfig;
-use crate::coordinator::engine::{serve_sequential, EngineConfig, Execution, HealthMode};
+use crate::coordinator::engine::{
+    serve_sequential_with_sink, EngineConfig, Execution, HealthMode,
+};
 use crate::coordinator::estimator::Estimator;
 use crate::coordinator::failover::Failover;
 use crate::coordinator::profiler::DowntimeTable;
 use crate::coordinator::router::RoutePolicy;
 use crate::coordinator::service::{ServiceConfig, ServiceReport};
 use crate::health::HealthConfig;
+use crate::obs::report::{replay, EventCounts, ReportModule};
+use crate::obs::{EngineEvent, EventBuffer, EventSink, NoopSink};
 use crate::predict::{AccuracyModel, GbdtParams};
 use crate::util::bench::{f, Table};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::workload::{generate, Arrival};
 
@@ -59,6 +64,27 @@ impl E2eParams {
 }
 
 pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
+    run_e2e_with_sink(ctx, p, &mut NoopSink)
+}
+
+/// [`run_e2e`] with the engine's observability stream recorded. The sink
+/// never influences scheduling, so the report is identical to an
+/// unrecorded run; the buffered events feed smoke summaries like the
+/// per-kind counts `continuer serve` prints.
+pub fn run_e2e_recorded(
+    ctx: &ExpContext,
+    p: &E2eParams,
+) -> Result<(ServiceReport, Vec<EngineEvent>)> {
+    let mut sink = EventBuffer::default();
+    let report = run_e2e_with_sink(ctx, p, &mut sink)?;
+    Ok((report, sink.take_events()))
+}
+
+fn run_e2e_with_sink<S: EventSink>(
+    ctx: &ExpContext,
+    p: &E2eParams,
+    sink: &mut S,
+) -> Result<ServiceReport> {
     anyhow::ensure!(p.replicas >= 1, "need >= 1 replica");
     let meta = ctx.store.model(&p.model)?;
     let samples = layer_samples(ctx)?;
@@ -119,21 +145,24 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         p.n_requests, p.rate_rps, p.replicas, p.pipeline_depth, p.fail_node, p.fail_at_ms
     );
     if p.replicas == 1 && p.pipeline_depth == 1 && !p.monitored {
-        // The paper's deployment goes through the seed-compatible
-        // single-pipeline entry point (same engine underneath).
+        // The paper's deployment uses the seed-compatible single-pipeline
+        // configuration (`ServiceConfig::engine_config`, exactly what
+        // `service::run` drives) — gone through the sink-aware entry
+        // point so recorded runs stay byte-identical to unrecorded ones.
         let scfg = ServiceConfig {
             batcher,
             detector: Detector::default(),
             deadline_ms: None,
         };
-        return crate::coordinator::service::run(
-            &mut clusters[0],
+        return serve_sequential_with_sink(
+            std::slice::from_mut(&mut clusters[0]),
             &est,
-            &mut failovers[0],
-            &scfg,
+            std::slice::from_mut(&mut failovers[0]),
+            &scfg.engine_config(),
             &requests,
             &images,
-            &plans[0],
+            std::slice::from_ref(&plans[0]),
+            sink,
         );
     }
     let health = if p.monitored {
@@ -156,8 +185,9 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         record_completions: true,
         // PJRT clusters hold RefCell caches and cannot cross threads.
         execution: Execution::Sequential,
+        deployment: Default::default(),
     };
-    serve_sequential(
+    serve_sequential_with_sink(
         &mut clusters,
         &est,
         &mut failovers,
@@ -165,6 +195,7 @@ pub fn run_e2e(ctx: &ExpContext, p: &E2eParams) -> Result<ServiceReport> {
         &requests,
         &images,
         &plans,
+        sink,
     )
 }
 
@@ -267,7 +298,20 @@ pub fn run_n(ctx: &ExpContext, n_requests: usize) -> Result<()> {
         .copied()
         .unwrap_or(meta.num_nodes / 2);
     let p = E2eParams::single(model, n_requests, 6.0, fail_node, 4000.0);
-    let report = run_e2e(ctx, &p)?;
+    let (report, events) = run_e2e_recorded(ctx, &p)?;
     print_report(&p, &report);
+    // Live smoke signal: per-kind event counts over the recorded stream,
+    // deployment events included — a scenario that promises a failover
+    // (or a deployment) and produces zero such events fails loudly here.
+    let mut modules: Vec<Box<dyn ReportModule>> = vec![Box::new(EventCounts::new())];
+    let counts = replay(&events, &mut modules);
+    if let Some(c) = counts.get("event_counts") {
+        println!("event counts: {}", c.to_string());
+    }
+    for key in ["deploy_start", "transfer_done", "warmup_done", "cutover"] {
+        if let Some(n) = counts.path(&format!("event_counts.{key}")).and_then(Json::as_usize) {
+            println!("deployment: {key} x{n}");
+        }
+    }
     Ok(())
 }

@@ -5,6 +5,7 @@
 //! reuse measured data instead of re-measuring.
 
 pub mod accuracy_eval;
+pub mod deploy_eval;
 pub mod detection_eval;
 pub mod drop_attribution;
 pub mod e2e;
@@ -82,6 +83,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
         // Synthetic (artifact-free) drivers; also runnable without any
         // artifacts via `continuer detection-eval` / `drop-attribution`.
         "detection" => detection_eval::run(ctx),
+        "deploy" => deploy_eval::run(ctx),
         "drops" => drop_attribution::run(ctx),
         "all" => {
             for id in [
@@ -94,7 +96,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
             Ok(())
         }
         other => Err(anyhow!(
-            "unknown experiment '{other}' (try fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8 table7 table8 e2e detection drops all)"
+            "unknown experiment '{other}' (try fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8 table7 table8 e2e detection deploy drops all)"
         )),
     }
 }

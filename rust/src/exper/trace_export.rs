@@ -68,6 +68,7 @@ pub fn record_with(
         decision_ms_override: Some(2.0),
         record_completions: false,
         execution,
+        deployment: Default::default(),
     };
     let mut backends: Vec<SyntheticBackend> = (0..replicas)
         .map(|_| SyntheticBackend::uniform(4, 5.0, 1.0))

@@ -32,7 +32,15 @@
 //!   `pipeline_depth` batches in flight per replica, throughput set by
 //!   the bottleneck stage) across `R` pipeline replicas behind a
 //!   round-robin / join-shortest-queue router, with per-replica failure
-//!   injection and failover. The engine's steady-state hot path is
+//!   injection and failover. Repartitioning is a first-class, time-costed
+//!   deployment ([`coordinator::DeploymentConfig`]): re-hosted blocks pay
+//!   weight transfer over link bandwidth plus warm-up, served either
+//!   break-before-make (dispatch stalls through the window, and the
+//!   scheduler prices that stall into the decision) or
+//!   make-before-break (a repartition-free fallback keeps serving until
+//!   an atomic cut-over — zero stall, nothing requeued); the
+//!   instantaneous legacy swap remains the byte-compatible default. The
+//!   engine's steady-state hot path is
 //!   allocation-free: step plans are cached (`PlanCache`, `Arc<[Step]>`),
 //!   in-flight batches live in a generational slab with free-list slot
 //!   reuse, synthetic activations are shape-only handles (the real PJRT

@@ -5,11 +5,14 @@
 //!   exp <id>                     regenerate a paper table/figure
 //!                                (fig2 fig3 fig4 fig6 table2 table5 fig7
 //!                                 table6 fig8 table7 table8 e2e detection
-//!                                 drops all)
+//!                                 deploy drops all)
 //!   serve                        e2e serving demo with failure injection
 //!   profile                      run the layer profiler sweep
 //!   detection-eval               detector-aggressiveness sweep (synthetic,
 //!                                no artifacts needed)
+//!   deploy-eval                  repartition deployment cost: break-before-make
+//!                                vs make-before-break vs deployment-free
+//!                                techniques (synthetic)
 //!   drop-attribution             deadline sweep classifying drops inside
 //!                                vs outside failure windows (synthetic)
 //!   trace                        record a synthetic failure scenario and
@@ -104,6 +107,11 @@ fn main() -> Result<()> {
             let out = args.get("out");
             continuer::exper::detection_eval::run_standalone(seed, out, args.flag("pretty"))
         }
+        "deploy-eval" => {
+            let seed = args.get_usize("seed", 0)? as u64;
+            let out = args.get("out");
+            continuer::exper::deploy_eval::run_standalone(seed, out, args.flag("pretty"))
+        }
         "drop-attribution" => {
             let seed = args.get_usize("seed", 0)? as u64;
             let out = args.get("out");
@@ -144,10 +152,12 @@ SUBCOMMANDS
   info              summarize the artifact manifest
   exp <id>          regenerate a paper table/figure:
                     fig2 fig3 fig4 fig6 table2 table5 fig7 table6 fig8
-                    table7 table8 e2e detection drops all
+                    table7 table8 e2e detection deploy drops all
   serve             end-to-end serving demo with failure injection
   profile           layer-latency profiling sweep (= exp table2)
   detection-eval    detector sweep: downtime vs false failovers (synthetic)
+  deploy-eval       repartition deployment cost: BBM vs MBB vs early-exit/skip
+                    (synthetic)
   drop-attribution  deadline sweep: drops inside vs outside outages (synthetic)
   trace             export a Chrome trace_event JSON of a synthetic failure
                     scenario — stage spans per (replica, node), failover and
@@ -160,7 +170,8 @@ OPTIONS
   --model <name>     resnet32 | mobilenetv2 (for serve)
   --requests <n>     request count for serve (default 60) / trace (default 2000)
   --replicas <n>     pipeline replicas for trace (default 2)
-  --out <file>       output path for trace / detection-eval / drop-attribution
+  --out <file>       output path for trace / detection-eval / deploy-eval /
+                     drop-attribution
   --pretty           pretty-print emitted JSON
   --seed <n>         simulation seed
   --reps <n>         profiling repetitions";

@@ -12,7 +12,9 @@
 //!    engine in `coordinator/engine.rs` emits one event per observable
 //!    transition — request arrival, batch dispatch, stage start/done,
 //!    raw node-condition change, detected failover/recovery,
-//!    quarantine enter/exit, deadline drop, request completion. The
+//!    quarantine enter/exit, deadline drop, request completion, and the
+//!    repartition-deployment state machine (deploy start, per-node
+//!    transfer/warm-up completion, cut-over). The
 //!    engine is generic over the sink (monomorphized, never boxed), so
 //!    the default [`NoopSink`] is genuinely zero-cost: its `on_event`
 //!    is an empty `#[inline(always)]` body and the dead event
@@ -97,6 +99,27 @@ pub enum EngineEventKind {
     },
     /// A request completed end-to-end.
     Completion { id: usize, latency_ms: f64 },
+    /// A repartition deployment began after `node` failed: the new
+    /// partition's weights start moving toward `transfers` hosts and
+    /// the cut-over is projected for `cutover_ms`. `make_before_break`
+    /// says whether the replica keeps serving through the window on a
+    /// fallback technique (else it stalls, break-before-make).
+    DeployStart {
+        node: usize,
+        make_before_break: bool,
+        transfers: usize,
+        cutover_ms: f64,
+    },
+    /// One host finished receiving the weights of the units re-hosted
+    /// onto it.
+    TransferDone { node: usize },
+    /// One host finished warming the units it received.
+    WarmupDone { node: usize },
+    /// The deployment went live: dispatch switched to the repartitioned
+    /// plan atomically (in-flight fallback batches drain untouched).
+    /// `stalled_ms` is how long serving was stalled waiting for it
+    /// (zero under make-before-break with a feasible fallback).
+    Cutover { node: usize, stalled_ms: f64 },
 }
 
 /// Receiver for the engine's event stream. The engine is generic over

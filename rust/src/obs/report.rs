@@ -149,6 +149,8 @@ pub struct Downtime {
     recoveries: usize,
     quarantine_open: BTreeMap<(usize, usize), f64>,
     quarantine_ms: f64,
+    deploys: usize,
+    deploy_stall_ms: f64,
 }
 
 impl Downtime {
@@ -180,6 +182,16 @@ impl Downtime {
     pub fn detection_ms(&self) -> Option<f64> {
         self.detection_ms
     }
+
+    /// Repartition deployments that cut over.
+    pub fn deploys(&self) -> usize {
+        self.deploys
+    }
+
+    /// Serving time stalled behind break-before-make deployments, ms.
+    pub fn deploy_stall_ms(&self) -> f64 {
+        self.deploy_stall_ms
+    }
 }
 
 impl ReportModule for Downtime {
@@ -209,6 +221,14 @@ impl ReportModule for Downtime {
                 }
             }
             EngineEventKind::Recovery { .. } => self.recoveries += 1,
+            // Deployment stalls are downtime the failover window does
+            // not carry: under break-before-make the replica serves
+            // nothing until the cut-over, and the Cutover event reports
+            // exactly that stall.
+            EngineEventKind::Cutover { stalled_ms, .. } => {
+                self.deploys += 1;
+                self.deploy_stall_ms += stalled_ms;
+            }
             EngineEventKind::QuarantineEnter { node } => {
                 self.quarantine_open.insert((ev.replica, node), ev.at_ms);
             }
@@ -232,6 +252,8 @@ impl ReportModule for Downtime {
             ),
             ("recoveries", self.recoveries.into()),
             ("quarantine_ms", self.quarantine_ms.into()),
+            ("deploys", self.deploys.into()),
+            ("deploy_stall_ms", self.deploy_stall_ms.into()),
         ])
     }
 }
@@ -300,6 +322,10 @@ fn kind_key(kind: &EngineEventKind) -> &'static str {
         EngineEventKind::QuarantineExit { .. } => "quarantine_exit",
         EngineEventKind::Drop { .. } => "drop",
         EngineEventKind::Completion { .. } => "completion",
+        EngineEventKind::DeployStart { .. } => "deploy_start",
+        EngineEventKind::TransferDone { .. } => "transfer_done",
+        EngineEventKind::WarmupDone { .. } => "warmup_done",
+        EngineEventKind::Cutover { .. } => "cutover",
     }
 }
 

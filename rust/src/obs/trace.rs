@@ -14,9 +14,22 @@
 //! so `ts = at_ms * 1000`.
 //!
 //! High-rate per-request events (arrival, completion, batch dispatch)
-//! are deliberately not serialized — they would dominate the file
-//! without adding timeline structure; use a [`crate::obs::report`]
-//! module for those.
+//! are deliberately not serialized as spans — they would dominate the
+//! file without adding timeline structure; use a [`crate::obs::report`]
+//! module for exact counts. They *are* folded into one `ph:"C"`
+//! counter track per replica ("outstanding": arrivals minus
+//! completions minus drops), which is how drain-while-deploying reads
+//! in ui.perfetto.dev: under a break-before-make deployment the
+//! counter climbs across the deployment span; under make-before-break
+//! it keeps draining on the fallback path. (Queue depth proper is
+//! ill-defined at this layer — a requeue after a mid-flight host
+//! failure re-dispatches the same requests — so the counter tracks
+//! outstanding work, which is conservation-exact.)
+//!
+//! Repartition deployments appear on the controller track as
+//! `ph:"X"` spans paired from `DeployStart` to `Cutover`, with
+//! per-host transfer/warm-up completion instants on the receiving
+//! node's track.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -65,6 +78,16 @@ fn instant(name: &str, cat: &str, pid: usize, tid: usize, ts_ms: f64, args: Json
     ])
 }
 
+fn counter(name: &str, pid: usize, ts_ms: f64, key: &str, value: f64) -> Json {
+    obj(&[
+        ("ph", Json::from("C")),
+        ("name", Json::from(name)),
+        ("pid", Json::from(pid as f64)),
+        ("ts", Json::from(ts_ms * MS_TO_US)),
+        ("args", obj(&[(key, Json::from(value))])),
+    ])
+}
+
 fn condition_label(c: NodeCondition) -> (&'static str, f64) {
     match c {
         NodeCondition::Up => ("up", 1.0),
@@ -91,7 +114,9 @@ pub fn chrome_trace(events: &[EngineEvent]) -> Json {
             | EngineEventKind::Failover { node, .. }
             | EngineEventKind::Recovery { node }
             | EngineEventKind::QuarantineEnter { node }
-            | EngineEventKind::QuarantineExit { node } => {
+            | EngineEventKind::QuarantineExit { node }
+            | EngineEventKind::TransferDone { node }
+            | EngineEventKind::WarmupDone { node } => {
                 node_tracks.insert((ev.replica, node));
             }
             _ => {}
@@ -108,9 +133,13 @@ pub fn chrome_trace(events: &[EngineEvent]) -> Json {
     }
 
     // Span pairing state. Stage spans key on (replica, batch, stage);
-    // quarantine windows on (replica, node).
+    // quarantine and deployment windows on (replica, node).
     let mut open_stage: BTreeMap<(usize, usize, usize), (f64, usize)> = BTreeMap::new();
     let mut open_quarantine: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let mut open_deploy: BTreeMap<(usize, usize), (f64, bool)> = BTreeMap::new();
+    // Per-replica outstanding-request counter (ph:"C" track): arrivals
+    // minus completions minus drops.
+    let mut outstanding: BTreeMap<usize, f64> = BTreeMap::new();
     let mut last_ms: f64 = 0.0;
 
     for ev in events {
@@ -235,10 +264,84 @@ pub fn chrome_trace(events: &[EngineEvent]) -> Json {
                         ("degraded", Json::from(degraded)),
                     ]),
                 ));
+                let v = outstanding.entry(r).or_insert(0.0);
+                *v -= 1.0;
+                out.push(counter("outstanding", r, ev.at_ms, "requests", *v));
             }
-            EngineEventKind::Arrival { .. }
-            | EngineEventKind::BatchDispatch { .. }
-            | EngineEventKind::Completion { .. } => {}
+            EngineEventKind::DeployStart {
+                node,
+                make_before_break,
+                transfers,
+                cutover_ms,
+            } => {
+                open_deploy.insert((r, node), (ev.at_ms, make_before_break));
+                out.push(instant(
+                    &format!("deploy start (node {node})"),
+                    "deployment",
+                    r,
+                    0,
+                    ev.at_ms,
+                    obj(&[
+                        ("node", Json::from(node as f64)),
+                        ("make_before_break", Json::from(make_before_break)),
+                        ("transfers", Json::from(transfers as f64)),
+                        ("cutover_ms", Json::from(cutover_ms)),
+                    ]),
+                ));
+            }
+            EngineEventKind::TransferDone { node } => {
+                out.push(instant(
+                    &format!("weights landed (node {node})"),
+                    "deployment",
+                    r,
+                    node + 1,
+                    ev.at_ms,
+                    obj(&[("node", Json::from(node as f64))]),
+                ));
+            }
+            EngineEventKind::WarmupDone { node } => {
+                out.push(instant(
+                    &format!("warm (node {node})"),
+                    "deployment",
+                    r,
+                    node + 1,
+                    ev.at_ms,
+                    obj(&[("node", Json::from(node as f64))]),
+                ));
+            }
+            EngineEventKind::Cutover { node, stalled_ms } => {
+                if let Some((start_ms, mbb)) = open_deploy.remove(&(r, node)) {
+                    let style = if mbb {
+                        "make-before-break"
+                    } else {
+                        "break-before-make"
+                    };
+                    out.push(span(
+                        &format!("deploy repartition {style} (node {node})"),
+                        "deployment",
+                        r,
+                        0,
+                        start_ms,
+                        ev.at_ms - start_ms,
+                        obj(&[
+                            ("node", Json::from(node as f64)),
+                            ("make_before_break", Json::from(mbb)),
+                            ("stalled_ms", Json::from(stalled_ms)),
+                        ]),
+                    ));
+                }
+            }
+            EngineEventKind::Arrival { .. } => {
+                let v = outstanding.entry(r).or_insert(0.0);
+                *v += 1.0;
+                out.push(counter("outstanding", r, ev.at_ms, "requests", *v));
+            }
+            EngineEventKind::Completion { .. } => {
+                let v = outstanding.entry(r).or_insert(0.0);
+                *v -= 1.0;
+                out.push(counter("outstanding", r, ev.at_ms, "requests", *v));
+            }
+            EngineEventKind::BatchDispatch { .. } => {}
         }
     }
 
@@ -253,6 +356,23 @@ pub fn chrome_trace(events: &[EngineEvent]) -> Json {
             start_ms,
             last_ms - start_ms,
             obj(&[("node", Json::from(node as f64)), ("open", Json::from(true))]),
+        ));
+    }
+    // Same for deployments the run ended (or a recovery canceled)
+    // before their cut-over fired.
+    for (&(r, node), &(start_ms, mbb)) in &open_deploy {
+        out.push(span(
+            &format!("deploy repartition (node {node}) (open)"),
+            "deployment",
+            r,
+            0,
+            start_ms,
+            last_ms - start_ms,
+            obj(&[
+                ("node", Json::from(node as f64)),
+                ("make_before_break", Json::from(mbb)),
+                ("open", Json::from(true)),
+            ]),
         ));
     }
 
@@ -333,6 +453,95 @@ mod tests {
             .expect("failover window span");
         assert_eq!(window.get("dur").and_then(Json::as_f64), Some(8000.0));
         assert_eq!(window.get("tid").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn deployment_pairs_start_with_cutover_and_marks_hosts() {
+        let events = vec![
+            ev(
+                100.0,
+                0,
+                EngineEventKind::DeployStart {
+                    node: 3,
+                    make_before_break: true,
+                    transfers: 1,
+                    cutover_ms: 160.0,
+                },
+            ),
+            ev(150.0, 0, EngineEventKind::TransferDone { node: 2 }),
+            ev(160.0, 0, EngineEventKind::WarmupDone { node: 2 }),
+            ev(
+                160.0,
+                0,
+                EngineEventKind::Cutover {
+                    node: 3,
+                    stalled_ms: 0.0,
+                },
+            ),
+        ];
+        let doc = chrome_trace(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let dep = evs
+            .iter()
+            .find(|e| {
+                e.get("cat").and_then(Json::as_str) == Some("deployment")
+                    && e.get("ph").and_then(Json::as_str) == Some("X")
+            })
+            .expect("deployment span");
+        assert_eq!(dep.get("ts").and_then(Json::as_f64), Some(100_000.0));
+        assert_eq!(dep.get("dur").and_then(Json::as_f64), Some(60_000.0));
+        assert_eq!(dep.get("tid").and_then(Json::as_f64), Some(0.0));
+        // Transfer/warm-up instants land on the receiving host's track.
+        let instants: Vec<&Json> = evs
+            .iter()
+            .filter(|e| {
+                e.get("cat").and_then(Json::as_str) == Some("deployment")
+                    && e.get("ph").and_then(Json::as_str) == Some("i")
+            })
+            .collect();
+        assert_eq!(instants.len(), 3); // deploy start + transfer + warm-up
+        assert!(instants
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) != Some("deploy start (node 3)"))
+            .all(|e| e.get("tid").and_then(Json::as_f64) == Some(3.0)));
+    }
+
+    #[test]
+    fn outstanding_counter_tracks_arrivals_completions_and_drops() {
+        let events = vec![
+            ev(1.0, 0, EngineEventKind::Arrival { id: 0 }),
+            ev(2.0, 0, EngineEventKind::Arrival { id: 1 }),
+            ev(
+                5.0,
+                0,
+                EngineEventKind::Completion {
+                    id: 0,
+                    latency_ms: 4.0,
+                },
+            ),
+            ev(
+                9.0,
+                0,
+                EngineEventKind::Drop {
+                    id: 1,
+                    arrival_ms: 2.0,
+                    degraded: false,
+                },
+            ),
+        ];
+        let doc = chrome_trace(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let samples: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+            .map(|e| {
+                e.get("args")
+                    .and_then(|a| a.get("requests"))
+                    .and_then(Json::as_f64)
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(samples, vec![1.0, 2.0, 1.0, 0.0]);
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Integration properties of the repartition deployment model.
+//!
+//! 1. Make-before-break conserves every request across the cut-over:
+//!    nothing drops, nothing requeues, and completions carry the
+//!    fallback technique through the window then the repartitioned plan
+//!    after it.
+//! 2. Break-before-make's dispatch stall equals the modeled
+//!    transfer + warm-up span exactly — downtime is the model, not an
+//!    emergent accident.
+//! 3. Sequential and sharded execution agree on the same seeded
+//!    deployment scenario, deployment windows included.
+//! 4. The zero-movement degenerate configuration (no weight bytes)
+//!    reproduces the `Instantaneous` engine byte-for-byte, whatever the
+//!    configured mode.
+//! 5. A recovery that lands mid-deployment abandons it: the window
+//!    closes uncompleted at the rollback instant.
+
+use continuer::baselines::AlwaysRepartition;
+use continuer::cluster::failure::{Detector, FailurePlan};
+use continuer::coordinator::batcher::BatcherConfig;
+use continuer::coordinator::engine::{
+    serve, serve_routed, DeploymentConfig, EngineConfig, Execution, HealthMode, SyntheticBackend,
+};
+use continuer::coordinator::estimator::StaticMetrics;
+use continuer::coordinator::router::RoutePolicy;
+use continuer::coordinator::service::{DeployMode, ServiceReport};
+use continuer::coordinator::Failover;
+use continuer::dnn::variants::Technique;
+use continuer::runtime::HostTensor;
+use continuer::workload::{generate, generate_per_replica, Arrival, Request};
+
+const NODES: usize = 4;
+const CRASH_NODE: usize = 3;
+/// 1 MB over 25 kB/ms: a 40 ms transfer for the one re-hosted block.
+const WEIGHT_BYTES: usize = 1_000_000;
+const BYTES_PER_MS: f64 = 25_000.0;
+const WARMUP_MS: f64 = 10.0;
+const SPAN_MS: f64 = WEIGHT_BYTES as f64 / BYTES_PER_MS + WARMUP_MS;
+
+fn cfg(mode: DeployMode, warmup_ms: f64, deadline_ms: Option<f64>) -> EngineConfig {
+    EngineConfig {
+        batcher: BatcherConfig::new(vec![1], 2.0, 1),
+        health: HealthMode::Oracle(Detector::default()),
+        deadline_ms,
+        pipeline_depth: 1,
+        route: RoutePolicy::RoundRobin,
+        decision_ms_override: Some(1.5),
+        record_completions: true,
+        execution: Execution::Sequential,
+        deployment: DeploymentConfig { mode, warmup_ms },
+    }
+}
+
+fn deploy_backend() -> SyntheticBackend {
+    SyntheticBackend::uniform(NODES, 5.0, 1.0)
+        .with_deployment(vec![WEIGHT_BYTES; NODES + 1], BYTES_PER_MS)
+}
+
+/// One replica, repartition forced, crash per `plan`.
+fn run_one(cfg: &EngineConfig, backend: SyntheticBackend, plan: FailurePlan) -> ServiceReport {
+    let mut backends = vec![backend];
+    let mut failovers = vec![Failover::with_policy(Box::new(AlwaysRepartition))];
+    let requests = generate(300, Arrival::Poisson { rate_rps: 150.0 }, 8, 11);
+    let inputs = HostTensor::zeros(vec![8, 4]);
+    serve(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        cfg,
+        &requests,
+        &inputs,
+        &[plan],
+    )
+    .unwrap()
+}
+
+#[test]
+fn make_before_break_conserves_requests_across_cutover() {
+    let report = run_one(
+        &cfg(DeployMode::MakeBeforeBreak, WARMUP_MS, None),
+        deploy_backend(),
+        FailurePlan::crash(CRASH_NODE, 200.0),
+    );
+    // Conservation: every offered request completes, nothing drops or
+    // requeues at the cut-over.
+    assert_eq!(report.completed_count, 300);
+    assert!(report.dropped.is_empty(), "dropped: {:?}", report.dropped);
+    // One deployment, completed, served through by the repartition-free
+    // fallback (StaticMetrics offers skip-connection), zero stall.
+    assert_eq!(report.deploy_windows.len(), 1);
+    let w = &report.deploy_windows[0];
+    assert_eq!(w.mode, DeployMode::MakeBeforeBreak);
+    assert!(w.completed);
+    assert_eq!(w.fallback, Some(Technique::SkipConnection(CRASH_NODE)));
+    assert_eq!(report.deploy_stall_ms(), 0.0);
+    // Completions walk healthy -> fallback -> repartitioned: the window
+    // is long enough (50 ms at 150 rps) that the fallback must serve.
+    let tagged =
+        |t: Option<Technique>| report.completed.iter().filter(|c| c.technique == t).count();
+    assert!(tagged(None) > 0, "healthy completions before the crash");
+    assert!(
+        tagged(Some(Technique::SkipConnection(CRASH_NODE))) > 0,
+        "fallback must serve through the deployment window"
+    );
+    assert!(
+        tagged(Some(Technique::Repartition)) > 0,
+        "repartitioned plan must serve after the cut-over"
+    );
+}
+
+#[test]
+fn break_before_make_stall_is_exactly_the_modeled_span() {
+    let report = run_one(
+        &cfg(DeployMode::BreakBeforeMake, WARMUP_MS, None),
+        deploy_backend(),
+        FailurePlan::crash(CRASH_NODE, 200.0),
+    );
+    assert_eq!(report.deploy_windows.len(), 1);
+    let w = &report.deploy_windows[0];
+    assert_eq!(w.mode, DeployMode::BreakBeforeMake);
+    assert!(w.completed);
+    assert_eq!(w.fallback, None, "break-before-make has no fallback");
+    assert!((w.transfer_ms - WEIGHT_BYTES as f64 / BYTES_PER_MS).abs() < 1e-9);
+    assert!((w.warmup_ms - WARMUP_MS).abs() < 1e-9);
+    assert!(
+        (w.duration_ms() - SPAN_MS).abs() < 1e-9,
+        "window duration {} != modeled span {SPAN_MS}",
+        w.duration_ms()
+    );
+    assert!((report.deploy_stall_ms() - SPAN_MS).abs() < 1e-9);
+    // No deadline: the stall queues requests, it does not shed them.
+    assert_eq!(report.completed_count, 300);
+    assert!(report.dropped.is_empty());
+}
+
+fn run_routed_deploy(streams: &[Vec<Request>], cfg: &EngineConfig) -> ServiceReport {
+    let replicas = streams.len();
+    let mut backends: Vec<SyntheticBackend> = (0..replicas).map(|_| deploy_backend()).collect();
+    let mut failovers: Vec<Failover> = (0..replicas)
+        .map(|_| Failover::with_policy(Box::new(AlwaysRepartition)))
+        .collect();
+    let inputs = HostTensor::zeros(vec![8, 4]);
+    // Both replicas crash mid-stream, well inside their arrival spans.
+    let plans = vec![FailurePlan::crash(2, 80.0), FailurePlan::crash(3, 120.0)];
+    serve_routed(
+        &mut backends,
+        &StaticMetrics,
+        &mut failovers,
+        cfg,
+        streams,
+        &inputs,
+        &plans,
+    )
+    .unwrap()
+}
+
+#[test]
+fn sharded_execution_reproduces_deployments() {
+    let streams = generate_per_replica(120, Arrival::Poisson { rate_rps: 300.0 }, 8, 0xD3, 2);
+    let mut c = cfg(DeployMode::MakeBeforeBreak, 5.0, None);
+    let seq = run_routed_deploy(&streams, &c);
+    c.execution = Execution::Sharded(2);
+    let shard = run_routed_deploy(&streams, &c);
+
+    assert_eq!(shard.completed_count, seq.completed_count);
+    let (seq_low, seq_counts) = seq.latency_stream.hist().buckets();
+    let (shard_low, shard_counts) = shard.latency_stream.hist().buckets();
+    assert_eq!(shard_low, seq_low);
+    assert_eq!(shard_counts, seq_counts);
+
+    // Deployment windows are plan-driven state: the merged sharded
+    // report must carry the sequential run's windows exactly.
+    let key = |r: &ServiceReport| {
+        let mut w = r.deploy_windows.clone();
+        w.sort_by_key(|w| (w.start_ms.to_bits(), w.replica));
+        w
+    };
+    assert_eq!(seq.deploy_windows.len(), 2, "one deployment per replica");
+    assert_eq!(key(&shard), key(&seq));
+    let windows = |r: &ServiceReport| {
+        let mut w: Vec<String> = r.failovers.iter().map(|w| format!("{w:?}")).collect();
+        w.sort();
+        w
+    };
+    assert_eq!(windows(&shard), windows(&seq));
+}
+
+#[test]
+fn zero_movement_deployment_degenerates_to_instantaneous() {
+    // No weight bytes configured: repartitioning moves nothing, so a
+    // deployment-aware engine must behave exactly like the legacy
+    // instantaneous swap — same completions, drops, windows, cache
+    // counters, bit-identical aggregates — in either mode.
+    let plan = || FailurePlan::crash_recover(CRASH_NODE, 100.0, 160.0);
+    let base = run_one(
+        &cfg(DeployMode::Instantaneous, 0.0, Some(80.0)),
+        SyntheticBackend::uniform(NODES, 5.0, 1.0),
+        plan(),
+    );
+    for mode in [DeployMode::BreakBeforeMake, DeployMode::MakeBeforeBreak] {
+        // A nonzero warm-up must be irrelevant when nothing transfers.
+        let r = run_one(
+            &cfg(mode, 25.0, Some(80.0)),
+            SyntheticBackend::uniform(NODES, 5.0, 1.0),
+            plan(),
+        );
+        assert!(r.deploy_windows.is_empty(), "{mode:?} deployed nothing");
+        assert_eq!(r.completed, base.completed);
+        assert_eq!(r.dropped, base.dropped);
+        assert_eq!(r.failovers, base.failovers);
+        assert_eq!(r.completed_count, base.completed_count);
+        assert_eq!(r.plan_cache_hits, base.plan_cache_hits);
+        assert_eq!(r.plan_cache_misses, base.plan_cache_misses);
+        assert_eq!(r.latency.mean.to_bits(), base.latency.mean.to_bits());
+        assert_eq!(r.latency.std.to_bits(), base.latency.std.to_bits());
+        assert_eq!(r.throughput_rps.to_bits(), base.throughput_rps.to_bits());
+        assert_eq!(r.sim_span_ms.to_bits(), base.sim_span_ms.to_bits());
+        let (low, counts) = base.latency_stream.hist().buckets();
+        let (rlow, rcounts) = r.latency_stream.hist().buckets();
+        assert_eq!(rlow, low);
+        assert_eq!(rcounts, counts);
+    }
+}
+
+#[test]
+fn recovery_mid_deployment_abandons_the_window() {
+    // Crash at 100 ms, recovery at 130 ms — inside the 50 ms deployment
+    // span, so the cut-over never happens: the rollback is a routing
+    // flip and the half-transferred partition is abandoned.
+    let report = run_one(
+        &cfg(DeployMode::BreakBeforeMake, WARMUP_MS, None),
+        deploy_backend(),
+        FailurePlan::crash_recover(CRASH_NODE, 100.0, 130.0),
+    );
+    assert_eq!(report.deploy_windows.len(), 1);
+    let w = &report.deploy_windows[0];
+    assert!(!w.completed, "recovery must abandon the deployment");
+    assert!(
+        w.duration_ms() < SPAN_MS,
+        "abandoned window {} must close before the span {SPAN_MS}",
+        w.duration_ms()
+    );
+    // The abandoned break-before-make window still stalled dispatch for
+    // its (truncated) duration.
+    assert!((report.deploy_stall_ms() - w.duration_ms()).abs() < 1e-12);
+    // Dispatch stalled through the whole (abandoned) window, so the
+    // repartitioned plan never served a single request — the rollback
+    // put the replica straight back on the healthy full pipeline.
+    assert!(!report
+        .completed
+        .iter()
+        .any(|c| c.technique == Some(Technique::Repartition)));
+    assert_eq!(report.completed_count, 300);
+    assert!(report.dropped.is_empty());
+    let healthy = report.completed.iter().filter(|c| c.technique.is_none()).count();
+    assert!(healthy > 0, "healthy completions resume after recovery");
+}

@@ -105,6 +105,7 @@ fn engine_conserves_requests_under_arbitrary_health_schedules() {
             // The property inspects per-request ids below.
             record_completions: true,
             execution: Execution::Sequential,
+            deployment: Default::default(),
         };
         let requests = generate(
             n_requests,
@@ -176,6 +177,7 @@ fn oracle_mode_conserves_requests_too() {
             decision_ms_override: Some(1.5),
             record_completions: true,
             execution: Execution::Sequential,
+            deployment: Default::default(),
         };
         let requests = generate(
             n_requests,

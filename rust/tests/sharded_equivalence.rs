@@ -190,6 +190,7 @@ fn sharded_matches_sequential_on_any_routed_workload() {
             decision_ms_override: Some(1.5),
             record_completions: false,
             execution: Execution::Sequential,
+            deployment: Default::default(),
         };
         let seq = run_routed(replicas, nodes, stage_ms, &streams, &plans, &cfg);
         prop_assert(
@@ -236,6 +237,7 @@ fn jsq_sharded_conserves_requests_for_any_worker_count() {
             // The property inspects per-request ids below.
             record_completions: true,
             execution: Execution::Sharded(g.usize(1, 4)),
+            deployment: Default::default(),
         };
         let requests = generate(
             n_requests,

@@ -79,6 +79,7 @@ fn engine_run(record_completions: bool, seed: u64) -> ServiceReport {
         decision_ms_override: Some(1.5),
         record_completions,
         execution: Execution::Sequential,
+        deployment: Default::default(),
     };
     let requests = generate(120, Arrival::Poisson { rate_rps: 600.0 }, 8, seed);
     let inputs = HostTensor::zeros(vec![8, 4]);
