@@ -14,6 +14,8 @@
 #   REQUESTS=100000 bench/run.sh # smaller scale
 #   WORKERS=8 bench/run.sh       # pin the sharded worker count
 #   QUICK=1 bench/run.sh         # ~20k-request smoke (CI-sized)
+#   SKEW=1 bench/run.sh          # add the heterogeneous-fleet skew axis
+#                                # (JSQ vs weighted JSQ vs + stealing)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -26,6 +28,9 @@ else
 fi
 if [[ -n "${WORKERS:-}" ]]; then
   ARGS+=(--workers "$WORKERS")
+fi
+if [[ -n "${SKEW:-}" ]]; then
+  ARGS+=(--skew)
 fi
 
 cargo bench --bench engine_scale -- "${ARGS[@]}"

@@ -42,6 +42,8 @@ fn deploy_case(mode: DeployMode) -> (f64, f64, f64, f64) {
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(2.0),
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: DeploymentConfig { mode, warmup_ms: 10.0 },
     };

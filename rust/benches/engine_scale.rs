@@ -20,6 +20,12 @@
 //! - **Saturation sweep**: offered load ramps across the bottleneck
 //!   capacity until p99 exceeds the 50 ms SLO; the knee (highest offered
 //!   rate still inside the SLO) lands in the JSON.
+//! - **Skew axis** (`--skew`): a heterogeneous fleet (speed factors
+//!   [1.0, 0.6, 1.4, 1.0]) with one replica suffering a 3× node
+//!   degradation mid-run, served three ways — plain JSQ, speed-weighted
+//!   JSQ, and weighted JSQ + cross-replica work stealing — reporting
+//!   virtual throughput and p99 per arm (the fleet-aware routing win,
+//!   recorded under the JSON's `skew` key).
 //!
 //! A **tracing axis** guards the observability layer: the 4-replica
 //! round-robin workload run with the default `NoopSink` (must hold the
@@ -124,6 +130,8 @@ fn scale_case(
         decision_ms_override: Some(1.5),
         // The point of the bench: no per-request records at 1M scale.
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution,
         deployment: Default::default(),
     };
@@ -168,6 +176,8 @@ fn scale_case(
     let route_label = match route {
         RoutePolicy::RoundRobin => "round_robin",
         RoutePolicy::JoinShortestQueue => "jsq",
+        RoutePolicy::WeightedRoundRobin => "weighted_round_robin",
+        RoutePolicy::WeightedJoinShortestQueue => "weighted_jsq",
     };
     let label = format!("{replicas}r/{exec_label}");
     let events_per_sec = report.events_processed as f64 / wall_s.max(1e-9);
@@ -237,6 +247,8 @@ fn tracing_arm(n_requests: usize, record: bool) -> (f64, usize) {
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(1.5),
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: Default::default(),
     };
@@ -294,6 +306,8 @@ fn saturation_rung(rate_rps: f64, n_requests: usize, workers: usize) -> (Json, b
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(1.5),
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sharded(workers),
         deployment: Default::default(),
     };
@@ -341,6 +355,142 @@ fn saturation_sweep(n_requests: usize, workers: usize) -> (Json, f64) {
         ("rungs", Json::Arr(rungs)),
     ]);
     (sweep, knee_rps)
+}
+
+/// Per-replica static speed factors for the skew axis: a heterogeneous
+/// fleet with one slow edge box and one fast server.
+const SKEW_SPEEDS: [f64; 4] = [1.0, 0.6, 1.4, 1.0];
+/// The skew axis degrades one node of replica 0 by this factor mid-run.
+const SKEW_SLOWDOWN: f64 = 3.0;
+
+/// One arm of the skew axis: the heterogeneous fleet ([`SKEW_SPEEDS`])
+/// with replica 0 suffering a [`SKEW_SLOWDOWN`]× node degradation
+/// through the middle of the stream, served sharded under the given
+/// routing policy with stealing on or off. Oracle health never fails
+/// over on `Degraded`, so the whole effect lands on routing and
+/// stealing — exactly the surface this axis measures. Returns the arm's
+/// JSON record plus its p99 latency and virtual throughput.
+fn skew_arm(
+    label: &str,
+    n_requests: usize,
+    workers: usize,
+    route: RoutePolicy,
+    steal: bool,
+) -> (Json, f64, f64) {
+    let replicas = SKEW_SPEEDS.len();
+    // ~65% of the fleet's healthy weighted capacity: enough headroom
+    // that the weighted arms stay comfortable, tight enough that plain
+    // count-balanced JSQ piles a deep queue onto the degraded replica.
+    let speed_total: f64 = SKEW_SPEEDS.iter().sum();
+    let rate_rps = 0.65 * CAPACITY_RPS_PER_REPLICA * speed_total;
+    let span_est_ms = n_requests as f64 / (rate_rps / 1e3);
+
+    let mut backends: Vec<SyntheticBackend> = (0..replicas)
+        .map(|_| SyntheticBackend::uniform(NODES, STAGE_MS, HOP_MS))
+        .collect();
+    let mut failovers: Vec<Failover> = (0..replicas)
+        .map(|_| Failover::new(Objectives::default()))
+        .collect();
+    // Replica 0 runs one node at 3x stage times across the middle 40%
+    // of the stream; the rest of the fleet stays healthy.
+    let mut plans = vec![FailurePlan::none(); replicas];
+    plans[0] = FailurePlan::degraded(2, 0.25 * span_est_ms, SKEW_SLOWDOWN, 0.4 * span_est_ms);
+    let cfg = EngineConfig {
+        batcher: BatcherConfig::new(vec![1, 2, 4, 8, 16], 2.0, 16),
+        health: HealthMode::Oracle(Detector::default()),
+        deadline_ms: None,
+        pipeline_depth: DEPTH,
+        route,
+        decision_ms_override: Some(1.5),
+        record_completions: false,
+        speed_factors: SKEW_SPEEDS.to_vec(),
+        steal,
+        execution: Execution::Sharded(workers),
+        deployment: Default::default(),
+    };
+    let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
+    let inputs = HostTensor::zeros(vec![16, 4]);
+    let t0 = Instant::now();
+    let report = serve(
+        &mut backends,
+        &StubMetrics,
+        &mut failovers,
+        &cfg,
+        &requests,
+        &inputs,
+        &plans,
+    )
+    .unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        report.completed_count + report.dropped.len(),
+        n_requests,
+        "skew arm must conserve requests"
+    );
+    let json = obj(&[
+        ("arm", label.into()),
+        ("steal", steal.into()),
+        ("requests", n_requests.into()),
+        ("offered_rps", rate_rps.into()),
+        ("completed", report.completed_count.into()),
+        ("dropped", report.dropped.len().into()),
+        ("virtual_throughput_rps", report.throughput_rps.into()),
+        ("latency_p50_ms", report.latency.p50.into()),
+        ("latency_p95_ms", report.latency.p95.into()),
+        ("latency_p99_ms", report.latency.p99.into()),
+        ("wall_s", wall_s.into()),
+    ]);
+    (json, report.latency.p99, report.throughput_rps)
+}
+
+/// The skew axis: the same heterogeneous, partially degraded fleet
+/// served three ways — plain JSQ (count-balanced), speed-weighted JSQ
+/// (drain-time-balanced), and weighted JSQ plus cross-replica work
+/// stealing. Weighted routing should cut p99 (the degraded replica
+/// holds a third of the backlog it holds under plain JSQ) and stealing
+/// should cut the end-of-stream drain, lifting virtual throughput.
+fn skew_axis(n_requests: usize, workers: usize) -> Json {
+    let arms = [
+        ("jsq", RoutePolicy::JoinShortestQueue, false),
+        ("weighted_jsq", RoutePolicy::WeightedJoinShortestQueue, false),
+        (
+            "weighted_jsq_steal",
+            RoutePolicy::WeightedJoinShortestQueue,
+            true,
+        ),
+    ];
+    let mut records = Vec::new();
+    let mut stats = Vec::new();
+    for (label, route, steal) in arms {
+        let (json, p99, tput) = skew_arm(label, n_requests, workers, route, steal);
+        println!("skew {label}: {tput:.0} rps virtual throughput, p99 {p99:.1} ms");
+        records.push(json);
+        stats.push((p99, tput));
+    }
+    let (jsq_p99, jsq_tput) = stats[0];
+    let (steal_p99, steal_tput) = stats[2];
+    let beats = steal_tput > jsq_tput && steal_p99 < jsq_p99;
+    println!(
+        "skew: weighted JSQ + stealing vs plain JSQ — throughput {:.2}x, p99 {:.2}x{}",
+        steal_tput / jsq_tput.max(1e-9),
+        steal_p99 / jsq_p99.max(1e-9),
+        if beats {
+            ""
+        } else {
+            "  (WARNING: expected a win on both axes)"
+        }
+    );
+    obj(&[
+        (
+            "speed_factors",
+            Json::Arr(SKEW_SPEEDS.iter().map(|&s| s.into()).collect()),
+        ),
+        ("degraded_replica", 0.into()),
+        ("degraded_slowdown", SKEW_SLOWDOWN.into()),
+        ("workers", workers.into()),
+        ("steal_beats_jsq", beats.into()),
+        ("arms", Json::Arr(records)),
+    ])
 }
 
 fn main() {
@@ -456,6 +606,14 @@ fn main() {
         "saturation knee ({sat_workers} workers): {knee_rps:.0} rps offered within p99 <= {SLO_P99_MS} ms"
     );
 
+    // Skew axis (opt-in: `--skew`): heterogeneous speeds + one degraded
+    // replica, plain JSQ vs weighted JSQ vs weighted JSQ + stealing.
+    let skew = if args.flag("skew") {
+        skew_axis(sat_requests, sat_workers)
+    } else {
+        Json::Null
+    };
+
     let out = obj(&[
         ("bench", "engine_scale".into()),
         ("requests", n_requests.into()),
@@ -471,6 +629,7 @@ fn main() {
         ("worker_scaling", Json::Arr(speedups)),
         ("tracing", tracing),
         ("saturation", saturation),
+        ("skew", skew),
         ("cases", Json::Arr(cases)),
     ]);
     let path = "BENCH_engine_scale.json";

@@ -96,6 +96,8 @@ fn serving_case(health: HealthMode) -> (f64, usize, usize) {
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(1.5),
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

@@ -76,6 +76,8 @@ fn serving_case(replicas: usize, depth: usize) -> ServingCase {
         route: RoutePolicy::JoinShortestQueue,
         decision_ms_override: Some(1.5),
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

@@ -33,17 +33,50 @@
 //!   plan cache and streaming metrics — all already per-replica state —
 //!   so shards share nothing mutable and need no locks on the hot path.
 //!
-//! Arrivals reach shards through the router split: under round-robin
-//! they are routed *positionally at generation time* (request `i` →
-//! replica `i % R`, exactly what the sequential router does), so every
-//! shard consumes a preloaded, byte-identical schedule; under
-//! join-shortest-queue a feeder thread routes live over per-replica
-//! atomic outstanding counters ([`super::router::ShardRouter`]) and
-//! feeds each shard over a channel, gated by an arrival-time watermark
-//! so a shard never processes an event later than traffic it has not
-//! seen yet. Failure and health events are scheduled per shard from the
-//! *global* replica index and the *global* end of traffic, so monitored
+//! Arrivals reach shards through the router split: under the positional
+//! policies (round-robin and weighted round-robin) they are routed *at
+//! generation time* — request `i` → `i % R`, or along the smooth-WRR
+//! schedule the sequential router walks — so every shard consumes a
+//! preloaded, byte-identical schedule; under the join-shortest-queue
+//! family a feeder thread routes live over per-replica atomic
+//! outstanding counters ([`super::router::ShardRouter`]) and feeds each
+//! shard over a channel, gated by an arrival-time watermark so a shard
+//! never processes an event later than traffic it has not seen yet.
+//! Failure and health events are scheduled per shard from the *global*
+//! replica index and the *global* end of traffic, so monitored
 //! detection streams are identical in both modes.
+//!
+//! # Fleet-aware routing: heterogeneous speeds and work stealing
+//!
+//! Real edge fleets are not uniform. Two mechanisms model (and exploit)
+//! that:
+//!
+//! - **Heterogeneous replicas** — [`EngineConfig::speed_factors`] gives
+//!   each replica a platform speed: every stage's service time is
+//!   divided by the replica's factor after the backend returns it, so a
+//!   0.5× replica genuinely runs its stages twice as slow (on top of
+//!   any in-place degraded-node slowdown the backend already applies).
+//!   The weighted policies ([`RoutePolicy::WeightedRoundRobin`],
+//!   [`RoutePolicy::WeightedJoinShortestQueue`]) read the same factors,
+//!   so fast replicas draw proportionally more traffic. Weighted JSQ
+//!   additionally folds in the *detected condition*: the sequential
+//!   router ranks replicas by expected drain time over exact state,
+//!   while each shard publishes its effective speed (platform factor ÷
+//!   worst observed degraded slowdown) into a per-replica `AtomicU32`
+//!   the feeder reads — a Degraded replica sheds load before any
+//!   failover trips.
+//! - **Cross-replica work stealing** ([`EngineConfig::steal`]) — under
+//!   live-routed sharding, a shard saturated past its pipeline depth
+//!   offloads queued-but-undispatched requests into a per-shard
+//!   injector pool; an idle shard reclaims its own offloads first
+//!   (they are still its routing debt), then steals a batch from the
+//!   most backlogged sibling, moving the outstanding-counter debt with
+//!   the requests so the feeder's view stays truthful. The sequential
+//!   engine runs the deterministic reference: a rebalance-at-arrival
+//!   pass that moves queue tails from the most backlogged replica to
+//!   idle ones, preserving same-seed reproducibility. Conservation —
+//!   every request served or dropped exactly once, stolen or not — is
+//!   asserted by the property tests in `tests/sharded_equivalence.rs`.
 //!
 //! After the shards run, their outcomes merge: histogram buckets add
 //! (exact), Welford moments combine pairwise (exact up to float
@@ -85,8 +118,8 @@
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::Result;
 
@@ -94,18 +127,18 @@ use crate::cluster::failure::{Detector, FailurePlan, NodeCondition};
 use crate::cluster::sim::{steps_for, steps_for_chain, EdgeCluster, Step};
 use crate::dnn::variants::Technique;
 use crate::health::monitor::{simulate as simulate_monitor, HealthConfig, HealthEventKind};
-use crate::obs::{EngineEvent, EngineEventKind, EventBuffer, EventSink, NoopSink};
+use crate::obs::{ChannelSink, EngineEvent, EngineEventKind, EventSink, NoopSink, EVENT_CHANNEL_CAP};
 use crate::runtime::{Activation, HostTensor, ShapeOnly, UnitKind};
 use crate::util::histogram::Streaming;
 use crate::util::slab::{Slab, SlabKey};
 use crate::util::threadpool::parallel_map_with;
-use crate::workload::{split_round_robin, Request};
+use crate::workload::{split_round_robin, split_with, Request};
 
 use super::batcher::{decide, BatcherConfig, Dispatch};
 use super::estimator::MetricsSource;
 use super::failover::Failover;
 use super::plan_cache::PlanCache;
-use super::router::{ReplicaLoad, RoutePolicy, Router, ShardRouter};
+use super::router::{ReplicaLoad, RoutePolicy, Router, ShardRouter, WrrState, SPEED_MILLI};
 use super::service::{
     Completion, DeployMode, DeployWindow, DroppedRequest, FailoverWindow, ServiceReport,
 };
@@ -389,6 +422,19 @@ pub struct EngineConfig {
     /// transfer + warm-up window) or make-before-break (a fallback
     /// technique keeps the replica serving until the cut-over).
     pub deployment: DeploymentConfig,
+    /// Per-replica platform speed factors: replica `r` runs every stage
+    /// at `speed_factors[r]`× the backend's service time (0.5 = half
+    /// speed). Missing entries (including the empty default) mean 1.0.
+    /// The weighted route policies read the same factors as routing
+    /// weights, so a heterogeneous fleet is described once.
+    pub speed_factors: Vec<f64>,
+    /// Enable cross-replica work stealing: queued-but-undispatched
+    /// requests on a backlogged replica become stealable by idle ones.
+    /// Deterministic rebalance-at-arrival under [`Execution::Sequential`];
+    /// per-shard injector pools under live-routed sharding. Positional
+    /// sharded schedules (round-robin / weighted-round-robin / pre-routed
+    /// streams) never steal — their per-shard schedules stay exact.
+    pub steal: bool,
 }
 
 impl EngineConfig {
@@ -405,6 +451,8 @@ impl EngineConfig {
             record_completions: true,
             execution: Execution::Sequential,
             deployment: DeploymentConfig::default(),
+            speed_factors: Vec::new(),
+            steal: false,
         }
     }
 
@@ -412,6 +460,20 @@ impl EngineConfig {
     /// onto up to `workers` threads.
     pub fn sharded(mut self, workers: usize) -> EngineConfig {
         self.execution = Execution::Sharded(workers);
+        self
+    }
+
+    /// The same configuration over a heterogeneous fleet: replica `r`
+    /// runs at `factors[r]`× platform speed (missing entries mean 1.0),
+    /// and the weighted route policies use the factors as weights.
+    pub fn with_speed_factors(mut self, factors: Vec<f64>) -> EngineConfig {
+        self.speed_factors = factors;
+        self
+    }
+
+    /// The same configuration with cross-replica work stealing on or off.
+    pub fn stealing(mut self, on: bool) -> EngineConfig {
+        self.steal = on;
         self
     }
 }
@@ -588,6 +650,18 @@ struct Engine<'a, B: StageBackend, S: EventSink> {
     /// feeder: decremented once per completion or drop so live routing
     /// sees this shard's backlog.
     outstanding: Option<Arc<AtomicUsize>>,
+    /// Per-replica platform speed factors (1.0 = nominal): every stage's
+    /// service time is divided by its replica's factor. A shard's single
+    /// entry carries its *global* replica's factor.
+    speeds: Vec<f64>,
+    /// Where a weighted-JSQ shard publishes its effective speed
+    /// (platform factor ÷ worst observed degraded slowdown) on every
+    /// raw condition change, for the feeder's drain-time ranking.
+    speed_cell: Option<Arc<AtomicU32>>,
+    /// Cross-replica work-stealing handle (live-routed shards with
+    /// [`EngineConfig::steal`] on). `None` everywhere else — the
+    /// sequential engine rebalances its own queues directly.
+    steal: Option<StealCtx>,
     /// Observability stream. Monomorphized: with [`NoopSink`] every
     /// emission compiles to nothing, keeping the hot path zero-cost.
     sink: &'a mut S,
@@ -647,6 +721,11 @@ fn validate<B: StageBackend>(
         backends.len()
     );
     anyhow::ensure!(cfg.pipeline_depth >= 1, "pipeline_depth must be >= 1");
+    anyhow::ensure!(
+        cfg.speed_factors.iter().all(|s| s.is_finite() && *s > 0.0),
+        "speed factors must be positive and finite: {:?}",
+        cfg.speed_factors
+    );
     Ok(())
 }
 
@@ -683,9 +762,11 @@ pub fn serve<B: StageBackend + Send>(
 
 /// [`serve`] with an observability stream: every engine transition is
 /// emitted into `sink` (see [`crate::obs`] for the event taxonomy). The
-/// sequential loop streams events live; sharded execution buffers per
-/// shard, merges with replica ids re-tagged and a stable time sort, and
-/// replays the merged stream into `sink` — unless
+/// sequential loop streams events live; each shard streams through a
+/// bounded [`ChannelSink`] that the calling thread drains while the
+/// shards run (re-tagged replica ids, stable time sort — byte-identical
+/// to the old whole-run per-shard buffers, without the whole-run
+/// memory), then replays the merged stream into `sink` — unless
 /// [`EventSink::wants_events`] is false, in which case the shards run
 /// with [`NoopSink`] and stay allocation-free.
 #[allow(clippy::too_many_arguments)]
@@ -714,42 +795,46 @@ pub fn serve_with_sink<B: StageBackend + Send, S: EventSink>(
             sink,
         ),
         Execution::Sharded(workers) => {
-            let outcome = match cfg.route {
-                // Round-robin is positional: splitting the stream at
-                // "generation time" reproduces the sequential router's
-                // assignment exactly, so every shard gets a preloaded,
-                // deterministic schedule and no channels are needed.
-                RoutePolicy::RoundRobin => {
-                    let streams = split_round_robin(requests, backends.len());
-                    if sink.wants_events() {
-                        serve_sharded_preloaded::<_, EventBuffer>(
-                            workers, backends, est, failovers, cfg, streams, inputs, plans,
-                            last_arrival,
-                        )?
-                    } else {
-                        serve_sharded_preloaded::<_, NoopSink>(
-                            workers, backends, est, failovers, cfg, streams, inputs, plans,
-                            last_arrival,
-                        )?
-                    }
+            let n = backends.len();
+            let (outcome, events) = if cfg.route.is_positional() {
+                // Positional policies route at "generation time":
+                // round-robin splits request `i` → `i % R` and weighted
+                // round-robin walks the same smooth-WRR schedule the
+                // sequential router does, so every shard gets a
+                // preloaded, deterministic schedule and no channels are
+                // needed for arrivals.
+                let streams = match cfg.route {
+                    RoutePolicy::RoundRobin => split_round_robin(requests, n),
+                    _ => split_weighted(requests, n, &cfg.speed_factors),
+                };
+                if sink.wants_events() {
+                    let (sinks, rx) = event_channel(n);
+                    serve_sharded_preloaded(
+                        workers, backends, est, failovers, cfg, streams, inputs, plans,
+                        last_arrival, sinks, move || drain_events(rx, n),
+                    )?
+                } else {
+                    serve_sharded_preloaded(
+                        workers, backends, est, failovers, cfg, streams, inputs, plans,
+                        last_arrival, vec![NoopSink; n], Vec::new,
+                    )?
                 }
-                // JSQ needs live load: a feeder on the calling thread
-                // routes over the shards' atomic outstanding counters.
-                RoutePolicy::JoinShortestQueue => {
-                    if sink.wants_events() {
-                        serve_sharded_jsq::<_, EventBuffer>(
-                            workers, backends, est, failovers, cfg, requests, inputs, plans,
-                            last_arrival,
-                        )?
-                    } else {
-                        serve_sharded_jsq::<_, NoopSink>(
-                            workers, backends, est, failovers, cfg, requests, inputs, plans,
-                            last_arrival,
-                        )?
-                    }
-                }
+            } else if sink.wants_events() {
+                // The JSQ family needs live load: a feeder on the
+                // calling thread routes over the shards' atomic
+                // outstanding counters (and published speeds).
+                let (sinks, rx) = event_channel(n);
+                serve_sharded_jsq(
+                    workers, backends, est, failovers, cfg, requests, inputs, plans,
+                    last_arrival, sinks, move || drain_events(rx, n),
+                )?
+            } else {
+                serve_sharded_jsq(
+                    workers, backends, est, failovers, cfg, requests, inputs, plans,
+                    last_arrival, vec![NoopSink; n], Vec::new,
+                )?
             };
-            for ev in &outcome.events {
+            for ev in &events {
                 sink.on_event(ev);
             }
             Ok(finalize(outcome))
@@ -874,8 +959,10 @@ pub fn serve_routed_with_sink<B: StageBackend + Send, S: EventSink>(
             sink,
         ),
         Execution::Sharded(workers) => {
-            let outcome = if sink.wants_events() {
-                serve_sharded_preloaded::<_, EventBuffer>(
+            let n = backends.len();
+            let (outcome, events) = if sink.wants_events() {
+                let (sinks, rx) = event_channel(n);
+                serve_sharded_preloaded(
                     workers,
                     backends,
                     est,
@@ -885,9 +972,11 @@ pub fn serve_routed_with_sink<B: StageBackend + Send, S: EventSink>(
                     inputs,
                     plans,
                     last_arrival,
+                    sinks,
+                    move || drain_events(rx, n),
                 )?
             } else {
-                serve_sharded_preloaded::<_, NoopSink>(
+                serve_sharded_preloaded(
                     workers,
                     backends,
                     est,
@@ -897,9 +986,11 @@ pub fn serve_routed_with_sink<B: StageBackend + Send, S: EventSink>(
                     inputs,
                     plans,
                     last_arrival,
+                    vec![NoopSink; n],
+                    Vec::new,
                 )?
             };
-            for ev in &outcome.events {
+            for ev in &events {
                 sink.on_event(ev);
             }
             Ok(finalize(outcome))
@@ -956,7 +1047,7 @@ fn run_sequential<B: StageBackend, S: EventSink>(
 }
 
 /// One replica's work order for a sharded run.
-struct ShardTask<'a, B> {
+struct ShardTask<'a, B, S> {
     /// The replica's index in the caller's arrays — the shard's local
     /// index is always 0, but monitor seeding and report re-tagging need
     /// the global identity.
@@ -966,18 +1057,111 @@ struct ShardTask<'a, B> {
     plan: &'a FailurePlan,
     arrivals: ShardArrivals,
     outstanding: Option<Arc<AtomicUsize>>,
+    /// The replica's platform speed factor (1.0 = nominal).
+    speed: f64,
+    /// Where the shard publishes its effective speed (platform factor ÷
+    /// worst observed degraded slowdown) for the weighted-JSQ feeder.
+    speed_cell: Option<Arc<AtomicU32>>,
+    /// Work-stealing handle (live-routed sharding with stealing on).
+    steal: Option<StealCtx>,
+    /// The shard's observability sink, owned: a [`ChannelSink`] when the
+    /// caller records events, [`NoopSink`] otherwise.
+    sink: S,
 }
 
 enum ShardArrivals {
-    /// The shard's full schedule, known up front (round-robin /
+    /// The shard's full schedule, known up front (positional routing /
     /// pre-routed streams).
     Preloaded(Vec<Request>),
     /// Live feed from the JSQ feeder, gated by the arrival watermark.
     Channel(mpsc::Receiver<Request>),
 }
 
+/// One shard's injector: queued-but-undispatched requests it offered up
+/// for stealing. `len` mirrors the deque size so siblings can pick a
+/// victim by scanning sizes without taking every lock.
+struct StealPool {
+    len: AtomicUsize,
+    items: Mutex<VecDeque<Request>>,
+}
+
+impl StealPool {
+    fn new() -> StealPool {
+        StealPool {
+            len: AtomicUsize::new(0),
+            items: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    fn push(&self, reqs: VecDeque<Request>) {
+        let mut items = self.items.lock().unwrap();
+        self.len.fetch_add(reqs.len(), AtomicOrdering::Relaxed);
+        items.extend(reqs);
+    }
+
+    fn take_all(&self) -> Vec<Request> {
+        let mut items = self.items.lock().unwrap();
+        self.len.store(0, AtomicOrdering::Relaxed);
+        items.drain(..).collect()
+    }
+
+    fn take_up_to(&self, n: usize) -> Vec<Request> {
+        let mut items = self.items.lock().unwrap();
+        let take = n.min(items.len());
+        self.len.fetch_sub(take, AtomicOrdering::Relaxed);
+        items.drain(..take).collect()
+    }
+}
+
+/// A shard's view of the fleet's stealing state: its own pool index,
+/// every shard's pool, and every shard's outstanding counter (a steal
+/// moves the routing debt from victim to thief so the feeder's load
+/// view stays truthful).
+struct StealCtx {
+    me: usize,
+    pools: Arc<Vec<StealPool>>,
+    outstanding: Vec<Arc<AtomicUsize>>,
+}
+
+/// Build the per-shard [`ChannelSink`]s plus the receiver the caller
+/// thread drains; dropping the last sink closes the channel.
+fn event_channel(replicas: usize) -> (Vec<ChannelSink>, mpsc::Receiver<EngineEvent>) {
+    let (tx, rx) = mpsc::sync_channel(EVENT_CHANNEL_CAP);
+    let sinks = (0..replicas).map(|r| ChannelSink::new(tx.clone(), r)).collect();
+    (sinks, rx)
+}
+
+/// Drain the shards' streaming event channel on the caller thread:
+/// bucket per replica (each sender is FIFO), concatenate in replica
+/// order, stable-sort by timestamp — exactly the order the old
+/// whole-run per-shard buffers merged to, so recorded streams are
+/// byte-identical while in-flight memory stays bounded by the channel.
+fn drain_events(rx: mpsc::Receiver<EngineEvent>, replicas: usize) -> Vec<EngineEvent> {
+    let mut per: Vec<Vec<EngineEvent>> = vec![Vec::new(); replicas];
+    while let Ok(ev) = rx.recv() {
+        per[ev.replica].push(ev);
+    }
+    let mut all: Vec<EngineEvent> = Vec::with_capacity(per.iter().map(Vec::len).sum());
+    for bucket in per {
+        all.extend(bucket);
+    }
+    all.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+    all
+}
+
+/// Split a stream along the smooth-WRR schedule the sequential
+/// [`Router`] walks for [`RoutePolicy::WeightedRoundRobin`], so both
+/// execution modes assign every request to the same replica.
+fn split_weighted(requests: &[Request], replicas: usize, speed_factors: &[f64]) -> Vec<Vec<Request>> {
+    let weights: Vec<f64> = (0..replicas)
+        .map(|r| speed_factors.get(r).copied().unwrap_or(1.0))
+        .collect();
+    let mut wrr = WrrState::new(&weights);
+    split_with(requests, replicas, || wrr.next())
+}
+
 #[allow(clippy::too_many_arguments)]
-fn serve_sharded_preloaded<B: StageBackend + Send, S: EventSink + Default>(
+fn serve_sharded_preloaded<B: StageBackend + Send, S: EventSink>(
     workers: usize,
     backends: &mut [B],
     est: &(dyn MetricsSource + Sync),
@@ -987,27 +1171,36 @@ fn serve_sharded_preloaded<B: StageBackend + Send, S: EventSink + Default>(
     inputs: &HostTensor,
     plans: &[FailurePlan],
     last_arrival_ms: f64,
-) -> Result<ShardOutcome> {
+    sinks: Vec<S>,
+    drain: impl FnOnce() -> Vec<EngineEvent>,
+) -> Result<(ShardOutcome, Vec<EngineEvent>)> {
     let empty_plan = FailurePlan::none();
-    let tasks: Vec<ShardTask<'_, B>> = backends
+    let tasks: Vec<ShardTask<'_, B, S>> = backends
         .iter_mut()
         .zip(failovers.iter_mut())
         .zip(streams)
+        .zip(sinks)
         .enumerate()
-        .map(|(r, ((backend, failover), stream))| ShardTask {
+        .map(|(r, (((backend, failover), stream), sink))| ShardTask {
             global_replica: r,
             backend,
             failover,
             plan: plans.get(r).unwrap_or(&empty_plan),
             arrivals: ShardArrivals::Preloaded(stream),
             outstanding: None,
+            speed: cfg.speed_factors.get(r).copied().unwrap_or(1.0),
+            speed_cell: None,
+            // Positional schedules are the determinism surface: they
+            // never steal, whatever cfg.steal says.
+            steal: None,
+            sink,
         })
         .collect();
-    run_shards::<_, S>(workers, tasks, est, cfg, inputs, last_arrival_ms, || {})
+    run_shards(workers, tasks, est, cfg, inputs, last_arrival_ms, drain)
 }
 
 #[allow(clippy::too_many_arguments)]
-fn serve_sharded_jsq<B: StageBackend + Send, S: EventSink + Default>(
+fn serve_sharded_jsq<B: StageBackend + Send, S: EventSink>(
     workers: usize,
     backends: &mut [B],
     est: &(dyn MetricsSource + Sync),
@@ -1017,13 +1210,30 @@ fn serve_sharded_jsq<B: StageBackend + Send, S: EventSink + Default>(
     inputs: &HostTensor,
     plans: &[FailurePlan],
     last_arrival_ms: f64,
-) -> Result<ShardOutcome> {
+    sinks: Vec<S>,
+    drain: impl FnOnce() -> Vec<EngineEvent>,
+) -> Result<(ShardOutcome, Vec<EngineEvent>)> {
     let replicas = backends.len();
-    let mut router = ShardRouter::new(RoutePolicy::JoinShortestQueue, replicas);
+    let factors: Vec<f64> = (0..replicas)
+        .map(|r| cfg.speed_factors.get(r).copied().unwrap_or(1.0))
+        .collect();
+    let mut router = ShardRouter::with_speeds(cfg.route, &factors);
+    let weighted = cfg.route == RoutePolicy::WeightedJoinShortestQueue;
+    let pools: Option<Arc<Vec<StealPool>>> = if cfg.steal && replicas > 1 {
+        Some(Arc::new((0..replicas).map(|_| StealPool::new()).collect()))
+    } else {
+        None
+    };
+    let counters: Vec<Arc<AtomicUsize>> = (0..replicas).map(|r| router.counter(r)).collect();
     let empty_plan = FailurePlan::none();
     let mut txs = Vec::with_capacity(replicas);
     let mut tasks = Vec::with_capacity(replicas);
-    for (r, (backend, failover)) in backends.iter_mut().zip(failovers.iter_mut()).enumerate() {
+    for (r, ((backend, failover), sink)) in backends
+        .iter_mut()
+        .zip(failovers.iter_mut())
+        .zip(sinks)
+        .enumerate()
+    {
         let (tx, rx) = mpsc::channel();
         txs.push(tx);
         tasks.push(ShardTask {
@@ -1033,15 +1243,27 @@ fn serve_sharded_jsq<B: StageBackend + Send, S: EventSink + Default>(
             plan: plans.get(r).unwrap_or(&empty_plan),
             arrivals: ShardArrivals::Channel(rx),
             outstanding: Some(router.counter(r)),
+            speed: factors[r],
+            // Only weighted JSQ reads published speeds; plain JSQ shards
+            // skip the per-condition-event atomic store.
+            speed_cell: weighted.then(|| router.speed_cell(r)),
+            steal: pools.as_ref().map(|p| StealCtx {
+                me: r,
+                pools: Arc::clone(p),
+                outstanding: counters.clone(),
+            }),
+            sink,
         });
     }
     // The feeder runs on the calling thread while the shards run on the
     // scoped workers: it routes each arrival to the replica with the
-    // fewest outstanding requests (as the atomic counters report *now*)
-    // and never blocks — channels are unbounded, so shards multiplexed
-    // onto fewer workers than replicas simply find their traffic
-    // buffered when a worker picks them up.
-    run_shards::<_, S>(workers, tasks, est, cfg, inputs, last_arrival_ms, move || {
+    // fewest outstanding requests — weighted by published effective
+    // speed under weighted JSQ — and never blocks (request channels are
+    // unbounded), so shards multiplexed onto fewer workers than replicas
+    // simply find their traffic buffered when a worker picks them up.
+    // The event drain follows on the same thread once feeding is done;
+    // the bounded event channel holds what shards emit meanwhile.
+    run_shards(workers, tasks, est, cfg, inputs, last_arrival_ms, move || {
         for req in requests {
             let r = router.route();
             // A shard that died early dropped its receiver; its error
@@ -1050,40 +1272,52 @@ fn serve_sharded_jsq<B: StageBackend + Send, S: EventSink + Default>(
         }
         // Dropping the senders closes every intake: watermark → ∞ and
         // the shards drain.
+        drop(txs);
+        drain()
     })
 }
 
-fn run_shards<B: StageBackend + Send, S: EventSink + Default>(
+fn run_shards<B: StageBackend + Send, S: EventSink>(
     workers: usize,
-    tasks: Vec<ShardTask<'_, B>>,
+    tasks: Vec<ShardTask<'_, B, S>>,
     est: &(dyn MetricsSource + Sync),
     cfg: &EngineConfig,
     inputs: &HostTensor,
     last_arrival_ms: f64,
-    feeder: impl FnOnce(),
-) -> Result<ShardOutcome> {
-    let outcomes = parallel_map_with(
+    foreground: impl FnOnce() -> Vec<EngineEvent>,
+) -> Result<(ShardOutcome, Vec<EngineEvent>)> {
+    let (outcomes, events) = parallel_map_with(
         tasks,
         workers,
-        |task| run_shard::<_, S>(task, est, cfg, inputs, last_arrival_ms),
-        feeder,
+        |task| run_shard(task, est, cfg, inputs, last_arrival_ms),
+        foreground,
     );
     let shards: Vec<ShardOutcome> = outcomes.into_iter().collect::<Result<_>>()?;
-    Ok(merge_outcomes(shards))
+    Ok((merge_outcomes(shards), events))
 }
 
 /// Run one replica as a 1-replica engine (its own heap, slab, plan
 /// cache and metrics). Local replica index is 0; the global index seeds
 /// the monitored channel identically to the sequential run.
-fn run_shard<B: StageBackend, S: EventSink + Default>(
-    task: ShardTask<'_, B>,
+fn run_shard<B: StageBackend, S: EventSink>(
+    task: ShardTask<'_, B, S>,
     est: &(dyn MetricsSource + Sync),
     cfg: &EngineConfig,
     inputs: &HostTensor,
     last_arrival_ms: f64,
 ) -> Result<ShardOutcome> {
-    let ShardTask { global_replica, backend, failover, plan, arrivals, outstanding } = task;
-    let mut sink = S::default();
+    let ShardTask {
+        global_replica,
+        backend,
+        failover,
+        plan,
+        arrivals,
+        outstanding,
+        speed,
+        speed_cell,
+        steal,
+        mut sink,
+    } = task;
     let mut eng = Engine::new(
         std::slice::from_mut(backend),
         std::slice::from_mut(failover),
@@ -1093,6 +1327,9 @@ fn run_shard<B: StageBackend, S: EventSink + Default>(
         &mut sink,
     );
     eng.outstanding = outstanding;
+    eng.speeds = vec![speed];
+    eng.speed_cell = speed_cell;
+    eng.steal = steal;
     match arrivals {
         ShardArrivals::Preloaded(reqs) => {
             eng.pending_arrivals = reqs.len();
@@ -1109,9 +1346,7 @@ fn run_shard<B: StageBackend, S: EventSink + Default>(
         }
     }
     eng.schedule_failure_events(0, global_replica, plan, last_arrival_ms);
-    let mut outcome = eng.run()?;
-    outcome.events = sink.take_events();
-    Ok(outcome)
+    eng.run()
 }
 
 /// What one shard (or the whole sequential run) accumulates; replica
@@ -1130,9 +1365,6 @@ struct ShardOutcome {
     plan_hits: usize,
     plan_misses: usize,
     deploy_windows: Vec<DeployWindow>,
-    /// Observability stream buffered by this shard's sink (empty when
-    /// the run used [`NoopSink`] or streamed live to the caller).
-    events: Vec<EngineEvent>,
 }
 
 type ShardResultReport = ServiceReport;
@@ -1141,10 +1373,9 @@ type ShardResultReport = ServiceReport;
 /// histogram merge, pairwise Welford combine, counter sums, window
 /// concat (sorted by start time then replica — the order the sequential
 /// loop emits same-time windows in), record concat with replica indices
-/// re-tagged from shard-local 0 to global. Buffered observability
-/// events are re-tagged the same way and stable-sorted by timestamp —
-/// shards are appended in replica order, so ties keep a deterministic
-/// replica-then-causal order and track identities are stable.
+/// re-tagged from shard-local 0 to global. Observability events are not
+/// merged here: they stream through [`ChannelSink`]s already re-tagged,
+/// and [`drain_events`] restores the deterministic order.
 fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
     let mut merged = ShardOutcome {
         latency: Streaming::default(),
@@ -1159,7 +1390,6 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         plan_hits: 0,
         plan_misses: 0,
         deploy_windows: Vec::new(),
-        events: Vec::new(),
     };
     for (r, mut o) in shards.into_iter().enumerate() {
         for c in &mut o.completed {
@@ -1174,9 +1404,6 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         for w in &mut o.deploy_windows {
             w.replica = r;
         }
-        for e in &mut o.events {
-            e.replica = r;
-        }
         merged.latency.merge(&o.latency);
         merged.completed.extend(o.completed);
         merged.completed_count += o.completed_count;
@@ -1189,7 +1416,6 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
         merged.plan_hits += o.plan_hits;
         merged.plan_misses += o.plan_misses;
         merged.deploy_windows.extend(o.deploy_windows);
-        merged.events.extend(o.events);
     }
     merged
         .windows
@@ -1197,7 +1423,6 @@ fn merge_outcomes(shards: Vec<ShardOutcome>) -> ShardOutcome {
     merged
         .deploy_windows
         .sort_by(|a, b| a.start_ms.total_cmp(&b.start_ms).then(a.replica.cmp(&b.replica)));
-    merged.events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
     merged
 }
 
@@ -1236,13 +1461,16 @@ impl<'a, B: StageBackend, S: EventSink> Engine<'a, B, S> {
             .collect();
         let plan_caches: Vec<PlanCache> = backends.iter().map(|_| PlanCache::new()).collect();
         let deploys = backends.iter().map(|_| None).collect();
+        let speeds: Vec<f64> = (0..backends.len())
+            .map(|r| cfg.speed_factors.get(r).copied().unwrap_or(1.0))
+            .collect();
         Engine {
             backends,
             failovers,
             est,
             cfg,
             inputs,
-            router: Router::new(cfg.route),
+            router: Router::with_speeds(cfg.route, &cfg.speed_factors),
             heap: BinaryHeap::new(),
             seq: 0,
             states,
@@ -1261,6 +1489,9 @@ impl<'a, B: StageBackend, S: EventSink> Engine<'a, B, S> {
             pending_arrivals: 0,
             intake: None,
             outstanding: None,
+            speeds,
+            speed_cell: None,
+            steal: None,
             sink,
             deploys,
             deploy_seq: 0,
@@ -1378,6 +1609,18 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                 break;
             }
             let Some(ev) = self.heap.pop() else {
+                // An empty heap with stealing on can still mean work:
+                // our own offloads (reclaimable) or a backlogged
+                // sibling's pool. Dispatching refills from the pools and
+                // pushes stage events back onto the heap.
+                if self.steal.is_some() {
+                    for r in 0..self.states.len() {
+                        self.try_dispatch(r, self.clock_ms)?;
+                    }
+                    if !self.heap.is_empty() {
+                        continue;
+                    }
+                }
                 break;
             };
             self.events_processed += 1;
@@ -1386,11 +1629,11 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             match ev.kind {
                 EventKind::Arrival { req, replica } => {
                     self.pending_arrivals -= 1;
-                    let r = match replica {
+                    let (r, routed) = match replica {
                         // Pinned: pre-routed streams and shards (whose
                         // one local replica is 0) bypass the router.
-                        Some(r) => r,
-                        None if self.states.len() == 1 => 0,
+                        Some(r) => (r, false),
+                        None if self.states.len() == 1 => (0, false),
                         None => {
                             // Expired requests must not inflate a replica's
                             // apparent load before the router reads it.
@@ -1405,12 +1648,27 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                                     in_flight: s.in_flight_reqs,
                                 })
                                 .collect();
-                            self.router.route(&loads)
+                            // Weighted JSQ ranks by expected drain time
+                            // over *effective* speed — a replica with a
+                            // degraded node sheds load before any
+                            // failover trips.
+                            let eff: Vec<f64> =
+                                if self.cfg.route == RoutePolicy::WeightedJoinShortestQueue {
+                                    (0..self.states.len())
+                                        .map(|i| self.effective_speed(i))
+                                        .collect()
+                                } else {
+                                    Vec::new()
+                                };
+                            (self.router.route(&loads, &eff), true)
                         }
                     };
                     self.emit(t, r, EngineEventKind::Arrival { id: req.id });
                     self.states[r].queue.push_back(req);
                     self.try_dispatch(r, t)?;
+                    if routed && self.cfg.steal {
+                        self.rebalance(t)?;
+                    }
                 }
                 EventKind::RawCondition { replica, node, condition } => {
                     // Only flip the node: a recovery is dispatched by its
@@ -1420,6 +1678,9 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                     // batch on the stale degraded path.
                     self.backends[replica].set_condition(node, condition);
                     self.emit(t, replica, EngineEventKind::Condition { node, condition });
+                    // A weighted-JSQ shard advertises its new effective
+                    // speed so the feeder reroutes around degradation.
+                    self.publish_speed(replica);
                     // Back up but still failed over: the node sits in
                     // the reintegration gate until the health layer
                     // clears it (DetectRecovery below).
@@ -1539,6 +1800,16 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
 
         // Requests a wedged replica could never serve (e.g. a second
         // overlapping failure on the recovery path) are recorded as drops.
+        // A wedged shard first reclaims its own steal pool: those
+        // requests are still its debt and must be accounted exactly once.
+        if let Some(ctx) = self.steal.take() {
+            let mine = ctx.pools[ctx.me].take_all();
+            if !mine.is_empty() {
+                let mut mine = mine;
+                mine.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+                self.states[0].requeue_sorted(mine);
+            }
+        }
         let t_end = self.clock_ms;
         for r in 0..self.states.len() {
             let degraded = self.failovers[r].technique().is_some();
@@ -1580,7 +1851,6 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             plan_hits,
             plan_misses,
             deploy_windows: self.deploy_windows,
-            events: Vec::new(),
         })
     }
 
@@ -1712,6 +1982,13 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             && self.intake.as_ref().is_none_or(|i| !i.open)
             && self.batches.is_empty()
             && self.states.iter().all(|s| s.queue.is_empty())
+            // Own offloads are still this shard's debt: it cannot exit
+            // while they sit unreclaimed in its steal pool (a sibling
+            // may still take them, but the owner is the backstop).
+            && self
+                .steal
+                .as_ref()
+                .is_none_or(|c| c.pools[c.me].len.load(AtomicOrdering::Relaxed) == 0)
     }
 
     /// Drain the live intake into the heap until the earliest heap event
@@ -1764,6 +2041,143 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
         }
     }
 
+    /// Replica `r`'s effective speed: its platform factor divided by the
+    /// worst degraded slowdown currently observed on any of its nodes.
+    /// Down nodes don't factor in — they stop the path entirely and are
+    /// the failover layer's problem, not a routing weight.
+    fn effective_speed(&self, r: usize) -> f64 {
+        let b = &self.backends[r];
+        let mut worst = 1.0f64;
+        for node in 1..=b.num_nodes() {
+            if let NodeCondition::Degraded(s) = b.condition(node) {
+                worst = worst.max(s);
+            }
+        }
+        self.speeds[r] / worst.max(1.0)
+    }
+
+    /// Publish replica `r`'s effective speed to the sharded router's
+    /// feeder (fixed-point, ×[`SPEED_MILLI`]). No-op outside
+    /// weighted-JSQ sharding.
+    fn publish_speed(&self, r: usize) {
+        if let Some(cell) = &self.speed_cell {
+            let eff = self.effective_speed(r).max(1e-3);
+            cell.store((eff * SPEED_MILLI) as u32, AtomicOrdering::Relaxed);
+        }
+    }
+
+    /// Largest supported batch size: the unit of work moved per steal.
+    fn max_batch(&self) -> usize {
+        self.cfg.batcher.supported.iter().copied().max().unwrap_or(1).max(1)
+    }
+
+    /// Queue depth a replica keeps for itself before offering the rest
+    /// for stealing: enough to refill its whole pipeline with full
+    /// batches, so stealing never starves the donor.
+    fn steal_keep(&self) -> usize {
+        self.max_batch() * self.cfg.pipeline_depth
+    }
+
+    /// Move this saturated shard's queue tail (beyond [`Self::steal_keep`])
+    /// into its own injector pool, where siblings can take it. The owner
+    /// reclaims unstolen offloads before it can exit, so every offloaded
+    /// request is still served or dropped exactly once.
+    fn offload_excess(&mut self, r: usize) {
+        let Some(ctx) = self.steal.take() else { return };
+        let keep = self.steal_keep();
+        if self.states[r].queue.len() > keep {
+            let tail = self.states[r].queue.split_off(keep);
+            ctx.pools[ctx.me].push(tail);
+        }
+        self.steal = Some(ctx);
+    }
+
+    /// Refill an idle shard's queue from the steal pools: reclaim *all*
+    /// of its own offloads first (they are its routing debt), else steal
+    /// up to one max-size batch from the fullest sibling pool, moving
+    /// the outstanding-counter debt from victim to thief. Returns true
+    /// if anything was requeued. Stolen chunks are sorted by arrival
+    /// before the merge — successive offloads need not be globally
+    /// ordered once mid-run requeues have interleaved the queue.
+    fn refill_from_steal(&mut self, r: usize) -> bool {
+        let Some(ctx) = self.steal.take() else { return false };
+        let mut got = ctx.pools[ctx.me].take_all();
+        if got.is_empty() {
+            let mut victim = None;
+            let mut fullest = 0usize;
+            for (i, p) in ctx.pools.iter().enumerate() {
+                let l = p.len.load(AtomicOrdering::Relaxed);
+                if i != ctx.me && l > fullest {
+                    fullest = l;
+                    victim = Some(i);
+                }
+            }
+            if let Some(v) = victim {
+                got = ctx.pools[v].take_up_to(self.max_batch());
+                if !got.is_empty() {
+                    ctx.outstanding[v].fetch_sub(got.len(), AtomicOrdering::Relaxed);
+                    ctx.outstanding[ctx.me].fetch_add(got.len(), AtomicOrdering::Relaxed);
+                }
+            }
+        }
+        let refilled = !got.is_empty();
+        if refilled {
+            got.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+            self.states[r].requeue_sorted(got);
+        }
+        self.steal = Some(ctx);
+        refilled
+    }
+
+    /// The sequential reference for cross-replica work stealing: after
+    /// each routed arrival and each batch completion, every idle
+    /// replica (empty queue, spare pipeline depth) pulls up to one
+    /// max-size batch of
+    /// queued-but-undispatched requests off the front of the most
+    /// backlogged replica's queue (beyond what that donor needs to keep
+    /// its own pipeline full). Pure virtual-time state — no atomics, no
+    /// races — so same-seed runs stay byte-identical.
+    fn rebalance(&mut self, t: f64) -> Result<()> {
+        if self.states.len() < 2 {
+            return Ok(());
+        }
+        let keep = self.steal_keep();
+        let max_take = self.max_batch();
+        loop {
+            let Some(thief) = (0..self.states.len()).find(|&i| {
+                self.states[i].queue.is_empty()
+                    && self.states[i].in_flight_batches < self.cfg.pipeline_depth
+            }) else {
+                return Ok(());
+            };
+            // Donor: deepest backlog beyond its keep, ties to the
+            // lowest index.
+            let mut donor = None;
+            let mut deepest = keep;
+            for i in 0..self.states.len() {
+                if i != thief && self.states[i].queue.len() > deepest {
+                    deepest = self.states[i].queue.len();
+                    donor = Some(i);
+                }
+            }
+            let Some(d) = donor else { return Ok(()) };
+            let take = max_take.min(self.states[d].queue.len() - keep);
+            for _ in 0..take {
+                let q = self.states[d].queue.pop_front().unwrap();
+                // The thief's queue is empty, so donor-front order (the
+                // oldest requests) keeps it arrival-sorted.
+                self.states[thief].queue.push_back(q);
+            }
+            self.try_dispatch(thief, t)?;
+            // A thief that could not actually dispatch (batcher wait,
+            // wedged path) keeps the work queued; stop rather than
+            // shuffle more onto it.
+            if !self.states[thief].queue.is_empty() {
+                return Ok(());
+            }
+        }
+    }
+
     /// A batch reaches stage `b.stage`: requeue it if the host died while
     /// it was in flight, wait if the host is busy with an earlier batch,
     /// else run the real unit and schedule the stage completion.
@@ -1792,6 +2206,11 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
         // old HashMap path removed and reinserted it around every stage).
         let b = self.batches.get_mut(batch).unwrap();
         let (y, ms) = self.backends[replica].run_stage(step, &b.x)?;
+        // Platform heterogeneity: the backend prices the stage at nominal
+        // speed (with any degraded-node slowdown already applied); the
+        // replica's speed factor scales it — a 0.5× replica takes twice
+        // as long on every stage.
+        let ms = ms / self.speeds[replica];
         b.x = y;
         let (batch_seq, stage) = (b.trace_seq, b.stage);
         self.states[replica].busy_until[step.host] = t + ms;
@@ -1857,7 +2276,16 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                     });
                 }
             }
-            self.try_dispatch(replica, t)
+            self.try_dispatch(replica, t)?;
+            // Freed capacity is a stealing opportunity: the sequential
+            // reference rebalances here as well as at routed arrivals,
+            // so an idle replica keeps draining siblings after the
+            // arrival stream ends. No-op on 1-replica engines (shards
+            // steal through their pools in try_dispatch instead).
+            if self.cfg.steal {
+                self.rebalance(t)?;
+            }
+            Ok(())
         } else {
             let b = self.batches.get(batch).unwrap();
             let from = b.steps[b.stage - 1].host;
@@ -1877,10 +2305,17 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             // later dispatch that would otherwise first touch the queue.
             self.prune_expired(r, t);
             if self.states[r].in_flight_batches >= self.cfg.pipeline_depth {
+                // A saturated shard's excess backlog becomes stealable.
+                self.offload_excess(r);
                 return Ok(());
             }
             if self.states[r].queue.is_empty() {
-                return Ok(());
+                if !self.refill_from_steal(r) {
+                    return Ok(());
+                }
+                // Stolen (or reclaimed) work may already be past its
+                // deadline: go round again so it is pruned before batching.
+                continue;
             }
             // An in-flight deployment overrides the dispatch plan: the
             // repartitioned plan is not live until its cut-over, so serve
@@ -2031,6 +2466,8 @@ mod tests {
             record_completions: true,
             execution: Execution::Sequential,
             deployment: DeploymentConfig::default(),
+            speed_factors: Vec::new(),
+            steal: false,
         }
     }
 
@@ -2046,6 +2483,8 @@ mod tests {
             record_completions: true,
             execution: Execution::Sequential,
             deployment: DeploymentConfig::default(),
+            speed_factors: Vec::new(),
+            steal: false,
         }
     }
 
@@ -2727,5 +3166,168 @@ mod tests {
         assert_eq!(report.completed_count, 0);
         assert!(report.dropped.is_empty());
         assert_eq!(report.latency_stream.n(), 0);
+    }
+
+    // --- heterogeneous fleets, weighted routing and work stealing ---
+
+    #[test]
+    fn speed_factor_scales_stage_times_in_place() {
+        // Sparse arrivals on an idle pipeline: healthy path is 4x5 ms
+        // compute + 3x1 ms hops = 23 ms. At 0.5x platform speed the
+        // compute doubles (40 ms) but the hops don't: 43 ms.
+        let run = |factors: Vec<f64>| {
+            let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)];
+            let mut failovers = vec![Failover::new(Objectives::default())];
+            let reqs = generate(5, Arrival::Uniform { gap_ms: 100.0 }, 8, 41);
+            serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &cfg(1, RoutePolicy::RoundRobin).with_speed_factors(factors),
+                &reqs,
+                &pool(),
+                &[],
+            )
+            .unwrap()
+        };
+        let nominal = run(vec![]);
+        let half = run(vec![0.5]);
+        assert_eq!(nominal.completed.len(), 5);
+        assert_eq!(half.completed.len(), 5);
+        for c in &nominal.completed {
+            assert!((c.latency_ms - 23.0).abs() < 1e-6, "nominal {}", c.latency_ms);
+        }
+        for c in &half.completed {
+            assert!((c.latency_ms - 43.0).abs() < 1e-6, "half speed {}", c.latency_ms);
+        }
+    }
+
+    #[test]
+    fn weighted_rr_sequential_and_sharded_agree() {
+        // Weighted round-robin is positional: the sharded split walks
+        // the same smooth-WRR schedule as the sequential router, so the
+        // full equivalence surface holds on a heterogeneous fleet.
+        let reqs = generate(300, Arrival::Poisson { rate_rps: 500.0 }, 8, 47);
+        let run = |execution: Execution| {
+            let (mut backends, mut failovers, plans) = equivalence_fixture();
+            let mut c = cfg(2, RoutePolicy::WeightedRoundRobin)
+                .with_speed_factors(vec![1.5, 0.5]);
+            c.deadline_ms = Some(100.0);
+            c.execution = execution;
+            serve(&mut backends, &StaticMetrics, &mut failovers, &c, &reqs, &pool(), &plans)
+                .unwrap()
+        };
+        let seq = run(Execution::Sequential);
+        assert!(seq.completed_count > 0);
+        // The 3:1 weight split routes ~3/4 of arrivals to replica 0.
+        let assigned0 = seq
+            .completed
+            .iter()
+            .filter(|c| c.replica == 0)
+            .count()
+            + seq.dropped.iter().filter(|d| d.replica == 0).count();
+        let total = seq.completed_count + seq.dropped.len();
+        assert!(
+            assigned0 * 10 >= total * 6,
+            "fast replica got {assigned0}/{total}, expected ~3/4"
+        );
+        for workers in [1, 2] {
+            let shard = run(Execution::Sharded(workers));
+            assert_equivalent(&seq, &shard);
+        }
+    }
+
+    #[test]
+    fn sequential_stealing_rebalances_off_the_slow_replica() {
+        // Round-robin over a 1.0x / 0.25x fleet: half the traffic lands
+        // on a replica that serves a request in 83 ms instead of 23 ms.
+        // Work stealing lets the fast replica pull the slow one's
+        // backlog, so the run finishes far sooner and the fast replica
+        // serves well over its round-robin half.
+        let run = |steal: bool| {
+            let mut backends = vec![
+                SyntheticBackend::uniform(4, 5.0, 1.0),
+                SyntheticBackend::uniform(4, 5.0, 1.0),
+            ];
+            let mut failovers = vec![
+                Failover::new(Objectives::default()),
+                Failover::new(Objectives::default()),
+            ];
+            let reqs = generate(60, Arrival::Uniform { gap_ms: 1.0 }, 8, 53);
+            serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &cfg(1, RoutePolicy::RoundRobin)
+                    .with_speed_factors(vec![1.0, 0.25])
+                    .stealing(steal),
+                &reqs,
+                &pool(),
+                &[],
+            )
+            .unwrap()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(off.completed_count, 60);
+        assert_eq!(on.completed_count, 60, "stealing must not lose requests");
+        let served0 = |r: &ServiceReport| r.completed.iter().filter(|c| c.replica == 0).count();
+        assert_eq!(served0(&off), 30, "round-robin halves without stealing");
+        assert!(
+            served0(&on) > 40,
+            "the fast replica steals the slow one's backlog (served {})",
+            served0(&on)
+        );
+        assert!(
+            on.sim_span_ms < 0.6 * off.sim_span_ms,
+            "stealing must shorten the run: {} vs {} ms",
+            on.sim_span_ms,
+            off.sim_span_ms
+        );
+        // Still a deterministic reference: same seed, same bytes.
+        let again = run(true);
+        assert_eq!(format!("{on:?}"), format!("{again:?}"));
+    }
+
+    #[test]
+    fn sharded_weighted_jsq_with_stealing_conserves() {
+        // Heterogeneous fleet, a mid-run crash, live weighted routing
+        // AND stealing, multiplexed onto fewer workers than replicas:
+        // every request is still served or dropped exactly once.
+        let mut backends: Vec<SyntheticBackend> =
+            (0..3).map(|_| SyntheticBackend::uniform(4, 5.0, 1.0)).collect();
+        let mut failovers: Vec<Failover> =
+            (0..3).map(|_| Failover::new(Objectives::default())).collect();
+        let reqs = generate(150, Arrival::Uniform { gap_ms: 1.0 }, 8, 59);
+        let mut c = cfg(2, RoutePolicy::WeightedJoinShortestQueue)
+            .with_speed_factors(vec![1.0, 0.5, 1.5])
+            .stealing(true);
+        c.execution = Execution::Sharded(2);
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &c,
+            &reqs,
+            &pool(),
+            &[FailurePlan::crash_recover(2, 20.0, 60.0)],
+        )
+        .unwrap();
+        assert_eq!(report.completed_count + report.dropped.len(), 150, "conservation");
+        let mut ids: Vec<usize> = report
+            .completed
+            .iter()
+            .map(|c| c.id)
+            .chain(report.dropped.iter().map(|d| d.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..150).collect::<Vec<_>>(), "each request exactly once");
+        assert!(report.dropped.is_empty(), "no deadline: nothing drops");
+        for r in 0..3 {
+            assert!(
+                report.completed.iter().any(|c| c.replica == r),
+                "replica {r} served nothing"
+            );
+        }
     }
 }

@@ -16,8 +16,13 @@
 //!   can be false positives the controller later rolls back when the
 //!   quarantine gate clears the node.
 //! - [`batcher`] picks compiled batch sizes under queue pressure.
-//! - [`router`] spreads arrivals over pipeline replicas (round-robin or
-//!   join-shortest-queue).
+//! - [`router`] spreads arrivals over pipeline replicas: round-robin,
+//!   join-shortest-queue, and — for heterogeneous fleets with per-replica
+//!   [`engine::EngineConfig::speed_factors`] — smooth weighted
+//!   round-robin ([`router::WrrState`]) and speed-weighted JSQ, which
+//!   ranks replicas by expected drain time (`outstanding /
+//!   effective_speed`) so a detected `Degraded` replica sheds load
+//!   before any failover threshold trips.
 //! - [`engine`] is the event-driven serving core: a binary-heap event
 //!   queue (arrivals, failures, detections, batcher timeouts, stage
 //!   start/completion) with per-stage occupancy, so up to
@@ -68,12 +73,21 @@
 //! `Sharded(workers)` runs one shard per replica on real threads
 //! ([`crate::util::threadpool`]). Everything a shard touches is already
 //! per-replica state — event heap, slab, plan cache, streaming metrics,
-//! failover controller — so shards share nothing mutable: round-robin
-//! arrivals are pre-split positionally, join-shortest-queue arrivals are
-//! fed live over channels routed by per-replica atomic outstanding
-//! counters ([`router::ShardRouter`]), and per-shard reports merge at
-//! the end (exact histogram-bucket adds, pairwise Welford combine,
-//! record/window concat). Same-seed sequential and round-robin-sharded
+//! failover controller — so shards share nothing mutable: the positional
+//! policies (round-robin, weighted round-robin) are pre-split at
+//! generation time, the JSQ family is fed live over channels routed by
+//! per-replica atomic outstanding counters and shard-published
+//! effective-speed estimates ([`router::ShardRouter`]), and per-shard
+//! reports merge at the end (exact histogram-bucket adds, pairwise
+//! Welford combine, record/window concat). Live-routed shards can also
+//! steal work from each other ([`engine::EngineConfig::steal`]): a shard
+//! at its pipeline-depth limit parks queue overflow in a shared
+//! per-shard injector pool, and an idle shard reclaims its own parked
+//! work first, then takes up to one max-size batch from the fullest
+//! sibling — conservation (every request served or dropped exactly
+//! once) is asserted by the `sharded_equivalence` property suite, and
+//! the sequential engine carries a deterministic `rebalance` reference
+//! of the same policy. Same-seed sequential and positionally-sharded
 //! runs produce bucket-for-bucket identical merged metrics — asserted in
 //! the engine tests and the `sharded_equivalence` property test. The
 //! [`RecoveryPolicy`] trait requires `Send + Sync` so boxed policies can
@@ -92,10 +106,13 @@
 //! [`NoopSink`](crate::obs::NoopSink) monomorphizes every emission to
 //! nothing (the zero-allocation steady state is untouched — the bench
 //! guard in `benches/engine_scale.rs` asserts ≤1% overhead), while a
-//! recording sink pays one `Vec` push per event. Sharded runs buffer
-//! events per shard and merge them with replica ids re-tagged and a
-//! stable time sort, so the merged stream has the same track
-//! identities as a sequential run. Use
+//! recording sink pays one `Vec` push per event. Sharded runs stream
+//! events over a bounded channel ([`crate::obs::ChannelSink`]) drained
+//! on the caller thread while the shards run — replica ids re-tagged at
+//! the sink, buckets concatenated in replica order and stable
+//! time-sorted on drain — so a recording run stays O(1) in in-flight
+//! events per shard and the merged stream has the same track identities
+//! (and byte-identical order) as the old whole-run buffers. Use
 //! [`engine::serve_with_sink`] / [`engine::serve_routed_with_sink`] /
 //! [`engine::serve_sequential_with_sink`] to observe a run, export it
 //! with [`crate::obs::trace::chrome_trace`] (`continuer trace`, opens
@@ -123,7 +140,7 @@ pub use estimator::{Estimator, MetricsSource, StaticMetrics};
 pub use failover::{Failover, FailoverReport, Mode};
 pub use policy::{Continuer, RecoveryPolicy};
 pub use profiler::{fit_platform, platform_transform, DowntimeTable, LayerProfiler, PlatformLatencyModel};
-pub use router::{ReplicaLoad, RoutePolicy, Router, ShardRouter};
+pub use router::{ReplicaLoad, RoutePolicy, Router, ShardRouter, WrrState};
 pub use scheduler::{select, weight_sweep, CandidateMetrics, Decision};
 pub use service::{
     Completion, DeployMode, DeployWindow, DroppedRequest, FailoverWindow, ServiceConfig,

@@ -6,17 +6,46 @@
 //! Two routers live here:
 //!
 //! - [`Router`] is the sequential engine's: it reads exact per-replica
-//!   load snapshots at each arrival, inside the one event loop.
+//!   load snapshots (and, for the weighted policies, exact effective
+//!   speeds) at each arrival, inside the one event loop.
 //! - [`ShardRouter`] is the sharded engine's arrival feeder: replicas run
 //!   on worker threads, so exact queue lengths are not observable from
 //!   the feeder. Round-robin needs no load at all (requests are routed
-//!   positionally — at generation time), and join-shortest-queue routes
-//!   on per-replica [`AtomicUsize`] outstanding counters that the feeder
+//!   positionally — at generation time), join-shortest-queue routes on
+//!   per-replica [`AtomicUsize`] outstanding counters that the feeder
 //!   increments at enqueue and each shard decrements at completion or
-//!   drop.
+//!   drop, and the speed-weighted variant additionally reads a
+//!   per-replica [`AtomicU32`] *effective speed* estimate (milli-units)
+//!   that each shard publishes when it observes its own condition
+//!   change — a replica that goes `Degraded(3.0)` starts shedding load
+//!   the moment its shard sees the raw condition flip, long before any
+//!   failover threshold trips.
+//!
+//! # Heterogeneous fleets
+//!
+//! A fleet where replica platforms differ (a 0.5× edge box next to a
+//! 1.5× server) breaks the implicit assumption behind both round-robin
+//! and plain JSQ: that equal backlog means equal drain time. The
+//! weighted policies fix that:
+//!
+//! - [`RoutePolicy::WeightedRoundRobin`] interleaves replicas
+//!   proportionally to their static speed factors using the smooth
+//!   weighted round-robin scheme ([`WrrState`]) — deterministic and
+//!   load-oblivious, so the sharded engine can still pre-split the
+//!   arrival stream positionally and stay byte-equivalent to the
+//!   sequential reference.
+//! - [`RoutePolicy::WeightedJoinShortestQueue`] ranks replicas by
+//!   *expected drain time* — `outstanding / effective_speed` — where
+//!   effective speed folds the replica's detected condition into its
+//!   static speed factor. A degraded replica looks slower, not shorter,
+//!   and sheds load immediately.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+/// Fixed-point scale for the shard-published effective-speed estimate:
+/// an [`AtomicU32`] holds `speed * 1000` (1.0× = 1000 milli-units).
+pub const SPEED_MILLI: f64 = 1000.0;
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,8 +53,30 @@ pub enum RoutePolicy {
     /// Cycle through replicas in index order.
     RoundRobin,
     /// Send each request to the replica with the fewest outstanding
-    /// requests (queued + in flight); ties go to the lowest index.
+    /// requests (queued + in flight). The sequential router breaks ties
+    /// toward the lowest index; the sharded router rotates a cursor
+    /// through ties so equal counters don't hot-spot replica 0.
     JoinShortestQueue,
+    /// Interleave replicas proportionally to their static speed factors
+    /// (smooth weighted round-robin). Deterministic and positional, so
+    /// sharded runs pre-split the stream and stay merge-equivalent to
+    /// the sequential reference.
+    WeightedRoundRobin,
+    /// Rank replicas by expected drain time `outstanding /
+    /// effective_speed`, where effective speed is the replica's static
+    /// speed factor divided by its currently observed worst node
+    /// slowdown. Degraded replicas shed load before failover trips.
+    WeightedJoinShortestQueue,
+}
+
+impl RoutePolicy {
+    /// Whether sharded execution can route this policy positionally at
+    /// generation time (pre-split streams, deterministic and
+    /// merge-equivalent to the sequential run). The JSQ family routes
+    /// live over atomic counters instead.
+    pub fn is_positional(&self) -> bool {
+        matches!(self, RoutePolicy::RoundRobin | RoutePolicy::WeightedRoundRobin)
+    }
 }
 
 /// Snapshot of one replica's load, as seen by the router at an arrival.
@@ -43,24 +94,100 @@ impl ReplicaLoad {
     }
 }
 
-/// Stateful router (round-robin keeps a cursor).
+/// Smooth weighted round-robin state (the nginx scheme): each pick adds
+/// every replica's weight to its running credit, takes the replica with
+/// the most credit (ties to the lowest index), and subtracts the weight
+/// total from the winner. Produces a smooth proportional interleave —
+/// `[2, 1, 1]` yields `0 1 2 0` repeating — and with equal weights
+/// degenerates to plain round-robin.
+///
+/// Shared by [`Router`], [`ShardRouter`] and the sharded engine's
+/// positional stream split so all three produce the *same* schedule for
+/// the same weights — the weighted equivalence contract depends on it.
+#[derive(Debug, Clone)]
+pub struct WrrState {
+    weights: Vec<f64>,
+    credit: Vec<f64>,
+    total: f64,
+}
+
+impl WrrState {
+    /// Weights are clamped to a small positive floor so a zero or
+    /// negative factor cannot wedge the schedule.
+    pub fn new(weights: &[f64]) -> WrrState {
+        assert!(!weights.is_empty(), "WRR needs >= 1 replica");
+        let weights: Vec<f64> = weights.iter().map(|w| w.max(1e-6)).collect();
+        let total = weights.iter().sum();
+        WrrState {
+            credit: vec![0.0; weights.len()],
+            weights,
+            total,
+        }
+    }
+
+    /// Uniform weights over `n` replicas (degenerates to round-robin).
+    pub fn uniform(n: usize) -> WrrState {
+        WrrState::new(&vec![1.0; n])
+    }
+
+    /// Pick the next replica in the weighted interleave.
+    pub fn next(&mut self) -> usize {
+        let mut best = 0;
+        for i in 0..self.weights.len() {
+            self.credit[i] += self.weights[i];
+            if self.credit[i] > self.credit[best] + 1e-12 {
+                best = i;
+            }
+        }
+        self.credit[best] -= self.total;
+        best
+    }
+}
+
+/// Stateful router for the sequential engine (round-robin keeps a
+/// cursor; the weighted policies keep smooth-WRR credit). The weighted
+/// variants are built with [`Router::with_speeds`]; the plain ones
+/// treat every replica as 1.0×.
 #[derive(Debug)]
 pub struct Router {
     policy: RoutePolicy,
     next_rr: usize,
+    /// Static per-replica speed factors (padded with 1.0 on demand).
+    speeds: Vec<f64>,
+    /// Lazily initialised when the replica count is first observed.
+    wrr: Option<WrrState>,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy) -> Router {
-        Router { policy, next_rr: 0 }
+        Router::with_speeds(policy, &[])
+    }
+
+    /// A router that knows the fleet's static speed factors. Shorter
+    /// than the replica count pads with 1.0; extra entries are ignored.
+    pub fn with_speeds(policy: RoutePolicy, speed_factors: &[f64]) -> Router {
+        Router {
+            policy,
+            next_rr: 0,
+            speeds: speed_factors.to_vec(),
+            wrr: None,
+        }
     }
 
     pub fn policy(&self) -> RoutePolicy {
         self.policy
     }
 
-    /// Pick the replica for the next request.
-    pub fn route(&mut self, loads: &[ReplicaLoad]) -> usize {
+    fn static_speed(&self, r: usize) -> f64 {
+        self.speeds.get(r).copied().unwrap_or(1.0)
+    }
+
+    /// Pick the replica for the next request. `eff_speeds` is the
+    /// per-replica *effective* speed (static factor over observed
+    /// condition slowdown) and is only consulted by
+    /// [`RoutePolicy::WeightedJoinShortestQueue`]; shorter slices pad
+    /// with the static factor.
+    pub fn route(&mut self, loads: &[ReplicaLoad], eff_speeds: &[f64]) -> usize {
         assert!(!loads.is_empty(), "router needs >= 1 replica");
         match self.policy {
             RoutePolicy::RoundRobin => {
@@ -74,33 +201,87 @@ impl Router {
                 .min_by_key(|(i, l)| (l.total(), *i))
                 .map(|(i, _)| i)
                 .unwrap(),
+            RoutePolicy::WeightedRoundRobin => {
+                let n = loads.len();
+                let wrr = self.wrr.get_or_insert_with(|| {
+                    let w: Vec<f64> = (0..n)
+                        .map(|r| self.speeds.get(r).copied().unwrap_or(1.0))
+                        .collect();
+                    WrrState::new(&w)
+                });
+                wrr.next()
+            }
+            RoutePolicy::WeightedJoinShortestQueue => {
+                // Expected drain time: outstanding work over effective
+                // speed. Ties go to the lowest index — the sequential
+                // engine's determinism contract.
+                let mut best = 0;
+                let mut best_key = f64::INFINITY;
+                for (i, l) in loads.iter().enumerate() {
+                    let speed = eff_speeds
+                        .get(i)
+                        .copied()
+                        .unwrap_or_else(|| self.static_speed(i))
+                        .max(1e-6);
+                    let key = l.total() as f64 / speed;
+                    if key < best_key - 1e-12 {
+                        best = i;
+                        best_key = key;
+                    }
+                }
+                best
+            }
         }
     }
 }
 
 /// Live router for the sharded engine's arrival feeder: tracks each
 /// replica's outstanding requests (enqueued but not yet completed or
-/// dropped) in an atomic counter the shard's thread decrements.
+/// dropped) in an atomic counter the shard's thread decrements, and —
+/// for the speed-weighted policy — an effective-speed estimate each
+/// shard publishes when its replica's condition changes.
 ///
-/// Round-robin through this router reproduces the sequential router's
-/// positional assignment exactly; join-shortest-queue is a heuristic over
-/// racy counter reads and is therefore *not* part of the sequential-vs-
-/// sharded determinism contract (conservation still holds — every routed
-/// request is served or dropped by exactly one shard).
+/// Round-robin and weighted round-robin through this router reproduce
+/// the sequential router's positional assignment exactly; the JSQ
+/// family is a heuristic over racy counter reads and is therefore *not*
+/// part of the sequential-vs-sharded determinism contract (conservation
+/// still holds — every routed request is served or dropped by exactly
+/// one shard). JSQ ties rotate a cursor across the tied replicas so
+/// equal counters (the whole fleet, at low load) don't pile every
+/// request onto replica 0.
 #[derive(Debug)]
 pub struct ShardRouter {
     policy: RoutePolicy,
     next_rr: usize,
     outstanding: Vec<Arc<AtomicUsize>>,
+    /// Milli-units ([`SPEED_MILLI`]): 1000 = 1.0×. Initialised from the
+    /// static speed factors; shards overwrite with condition-adjusted
+    /// estimates as they observe degradations.
+    speeds: Vec<Arc<AtomicU32>>,
+    wrr: WrrState,
 }
 
 impl ShardRouter {
     pub fn new(policy: RoutePolicy, replicas: usize) -> ShardRouter {
-        assert!(replicas > 0, "router needs >= 1 replica");
+        ShardRouter::with_speeds(policy, &vec![1.0; replicas])
+    }
+
+    /// A feeder router over a heterogeneous fleet: one static speed
+    /// factor per replica (also the initial published estimate).
+    pub fn with_speeds(policy: RoutePolicy, speed_factors: &[f64]) -> ShardRouter {
+        assert!(!speed_factors.is_empty(), "router needs >= 1 replica");
         ShardRouter {
             policy,
             next_rr: 0,
-            outstanding: (0..replicas).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            outstanding: speed_factors
+                .iter()
+                .map(|_| Arc::new(AtomicUsize::new(0)))
+                .collect(),
+            speeds: speed_factors
+                .iter()
+                .map(|s| Arc::new(AtomicU32::new((s.max(1e-6) * SPEED_MILLI) as u32)))
+                .collect(),
+            wrr: WrrState::new(speed_factors),
         }
     }
 
@@ -110,21 +291,49 @@ impl ShardRouter {
         Arc::clone(&self.outstanding[r])
     }
 
+    /// Replica `r`'s published effective-speed cell (milli-units), to
+    /// hand to its shard — the shard stores `static_factor /
+    /// worst_observed_slowdown` whenever a raw condition flips, and the
+    /// weighted feeder reads it on every route.
+    pub fn speed_cell(&self, r: usize) -> Arc<AtomicU32> {
+        Arc::clone(&self.speeds[r])
+    }
+
     /// Route one arrival and charge the chosen replica's counter.
     pub fn route(&mut self) -> usize {
+        let n = self.outstanding.len();
         let r = match self.policy {
             RoutePolicy::RoundRobin => {
-                let r = self.next_rr % self.outstanding.len();
+                let r = self.next_rr % n;
                 self.next_rr = self.next_rr.wrapping_add(1);
                 r
             }
-            RoutePolicy::JoinShortestQueue => self
-                .outstanding
-                .iter()
-                .enumerate()
-                .min_by_key(|(i, c)| (c.load(Ordering::Relaxed), *i))
-                .map(|(i, _)| i)
-                .unwrap(),
+            RoutePolicy::WeightedRoundRobin => self.wrr.next(),
+            RoutePolicy::JoinShortestQueue | RoutePolicy::WeightedJoinShortestQueue => {
+                let weighted = self.policy == RoutePolicy::WeightedJoinShortestQueue;
+                // Rotating tie cursor: scan from next_rr so exact key
+                // ties spread across the fleet instead of hot-spotting
+                // the lowest index at low load.
+                let start = self.next_rr % n;
+                self.next_rr = self.next_rr.wrapping_add(1);
+                let mut best = start;
+                let mut best_key = f64::INFINITY;
+                for k in 0..n {
+                    let i = (start + k) % n;
+                    let out = self.outstanding[i].load(Ordering::Relaxed) as f64;
+                    let key = if weighted {
+                        let milli = self.speeds[i].load(Ordering::Relaxed).max(1);
+                        out / (milli as f64 / SPEED_MILLI)
+                    } else {
+                        out
+                    };
+                    if key < best_key - 1e-12 {
+                        best = i;
+                        best_key = key;
+                    }
+                }
+                best
+            }
         };
         self.outstanding[r].fetch_add(1, Ordering::Relaxed);
         r
@@ -145,24 +354,72 @@ mod tests {
     fn round_robin_cycles() {
         let mut r = Router::new(RoutePolicy::RoundRobin);
         let l = loads(&[(0, 0), (9, 9), (0, 0)]);
-        assert_eq!(r.route(&l), 0);
-        assert_eq!(r.route(&l), 1);
-        assert_eq!(r.route(&l), 2);
-        assert_eq!(r.route(&l), 0);
+        assert_eq!(r.route(&l, &[]), 0);
+        assert_eq!(r.route(&l, &[]), 1);
+        assert_eq!(r.route(&l, &[]), 2);
+        assert_eq!(r.route(&l, &[]), 0);
     }
 
     #[test]
     fn jsq_picks_least_loaded() {
         let mut r = Router::new(RoutePolicy::JoinShortestQueue);
-        assert_eq!(r.route(&loads(&[(3, 1), (0, 2), (4, 0)])), 1);
+        assert_eq!(r.route(&loads(&[(3, 1), (0, 2), (4, 0)]), &[]), 1);
         // counts queued + in-flight, not just queued
-        assert_eq!(r.route(&loads(&[(0, 5), (2, 1), (1, 1)])), 2);
+        assert_eq!(r.route(&loads(&[(0, 5), (2, 1), (1, 1)]), &[]), 2);
     }
 
     #[test]
     fn jsq_breaks_ties_low_index() {
         let mut r = Router::new(RoutePolicy::JoinShortestQueue);
-        assert_eq!(r.route(&loads(&[(1, 1), (2, 0), (0, 2)])), 0);
+        assert_eq!(r.route(&loads(&[(1, 1), (2, 0), (0, 2)]), &[]), 0);
+    }
+
+    #[test]
+    fn wrr_interleaves_proportionally_to_speed() {
+        // 2:1:1 → the fast replica takes half the slots; over any full
+        // cycle each replica's share matches its weight.
+        let mut r = Router::with_speeds(RoutePolicy::WeightedRoundRobin, &[2.0, 1.0, 1.0]);
+        let l = loads(&[(0, 0), (0, 0), (0, 0)]);
+        let picks: Vec<usize> = (0..8).map(|_| r.route(&l, &[])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 0, 1, 2, 0]);
+        assert_eq!(picks.iter().filter(|&&p| p == 0).count(), 4);
+    }
+
+    #[test]
+    fn wrr_with_uniform_speeds_is_round_robin() {
+        let mut wrr = Router::with_speeds(RoutePolicy::WeightedRoundRobin, &[1.0, 1.0, 1.0]);
+        let l = loads(&[(0, 0), (0, 0), (0, 0)]);
+        let picks: Vec<usize> = (0..6).map(|_| wrr.route(&l, &[])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn weighted_jsq_ranks_by_drain_time_not_count() {
+        let mut r = Router::with_speeds(
+            RoutePolicy::WeightedJoinShortestQueue,
+            &[1.0, 2.0],
+        );
+        // Equal counts: the 2× replica drains in half the time.
+        assert_eq!(r.route(&loads(&[(4, 0), (4, 0)]), &[1.0, 2.0]), 1);
+        // The fast replica keeps winning until its backlog is twice as
+        // deep (8/2 = 4/1), where the low-index tie-break reverts to 0.
+        assert_eq!(r.route(&loads(&[(4, 0), (7, 0)]), &[1.0, 2.0]), 1);
+        assert_eq!(r.route(&loads(&[(4, 0), (8, 0)]), &[1.0, 2.0]), 0);
+    }
+
+    #[test]
+    fn weighted_jsq_sheds_load_off_degraded_replica() {
+        let mut r = Router::with_speeds(
+            RoutePolicy::WeightedJoinShortestQueue,
+            &[1.0, 1.0],
+        );
+        // Same static speed, same backlog — but replica 0's effective
+        // speed collapsed to 1/3 (a detected Degraded(3.0) condition).
+        assert_eq!(
+            r.route(&loads(&[(3, 0), (3, 0)]), &[1.0 / 3.0, 1.0]),
+            1,
+            "the degraded replica must shed load before failover trips"
+        );
     }
 
     #[test]
@@ -175,7 +432,7 @@ mod tests {
     #[test]
     fn shard_router_jsq_follows_outstanding_counters() {
         let mut r = ShardRouter::new(RoutePolicy::JoinShortestQueue, 3);
-        // All zero: lowest index wins and gets charged.
+        // All zero: the rotating cursor spreads the first wave.
         assert_eq!(r.route(), 0);
         assert_eq!(r.route(), 1);
         assert_eq!(r.route(), 2);
@@ -184,5 +441,52 @@ mod tests {
         r.counter(1).fetch_sub(1, Ordering::Relaxed);
         assert_eq!(r.route(), 1);
         assert_eq!(r.counter(1).load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shard_router_jsq_ties_rotate_instead_of_hotspotting() {
+        // Zero load throughout (counters drained after every route):
+        // the old lowest-index tie-break sent *every* request to
+        // replica 0; the rotating cursor must cycle the fleet.
+        let mut r = ShardRouter::new(RoutePolicy::JoinShortestQueue, 4);
+        let mut picks = Vec::new();
+        for _ in 0..8 {
+            let p = r.route();
+            picks.push(p);
+            r.counter(p).fetch_sub(1, Ordering::Relaxed); // served instantly
+        }
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn shard_router_weighted_jsq_reads_published_speed() {
+        let mut r = ShardRouter::with_speeds(
+            RoutePolicy::WeightedJoinShortestQueue,
+            &[1.0, 1.0],
+        );
+        // Equal backlogs...
+        r.counter(0).fetch_add(3, Ordering::Relaxed);
+        r.counter(1).fetch_add(3, Ordering::Relaxed);
+        // ...but replica 0's shard published a 3× degradation.
+        r.speed_cell(0)
+            .store((1.0 / 3.0 * SPEED_MILLI) as u32, Ordering::Relaxed);
+        assert_eq!(r.route(), 1, "drain time 9 vs 3: the healthy replica wins");
+        // Replica 0 only wins again once replica 1's drain looks worse:
+        // 3/0.333 = 9 < 10/1.
+        for _ in 0..6 {
+            r.counter(1).fetch_add(1, Ordering::Relaxed);
+        }
+        assert_eq!(r.route(), 0);
+    }
+
+    #[test]
+    fn shard_router_wrr_matches_sequential_wrr_schedule() {
+        let speeds = [1.5, 0.5, 1.0];
+        let mut seq = Router::with_speeds(RoutePolicy::WeightedRoundRobin, &speeds);
+        let mut shard = ShardRouter::with_speeds(RoutePolicy::WeightedRoundRobin, &speeds);
+        let l = loads(&[(0, 0), (0, 0), (0, 0)]);
+        for i in 0..24 {
+            assert_eq!(seq.route(&l, &[]), shard.route(), "pick {i} diverged");
+        }
     }
 }

@@ -121,6 +121,8 @@ fn run_arm(
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(2.0),
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: DeploymentConfig {
             mode,

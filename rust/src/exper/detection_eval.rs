@@ -96,6 +96,8 @@ fn run_point_with(
         decision_ms_override: Some(2.0),
         // The sweep reads only aggregates — stream, keep no records.
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

@@ -105,6 +105,8 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
         // Drop classification reads `dropped` and counts — stream the
         // completions instead of recording them.
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

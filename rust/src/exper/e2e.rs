@@ -183,6 +183,8 @@ fn run_e2e_with_sink<S: EventSink>(
         // The report splits healthy vs degraded completions below, so
         // keep exact per-request records.
         record_completions: true,
+        speed_factors: Vec::new(),
+        steal: false,
         // PJRT clusters hold RefCell caches and cannot cross threads.
         execution: Execution::Sequential,
         deployment: Default::default(),

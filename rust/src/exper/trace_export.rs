@@ -67,6 +67,8 @@ pub fn record_with(
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(2.0),
         record_completions: false,
+        speed_factors: Vec::new(),
+        steal: false,
         execution,
         deployment: Default::default(),
     };

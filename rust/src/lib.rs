@@ -31,8 +31,12 @@
 //!   event-driven serving engine — stage-level pipelining (up to
 //!   `pipeline_depth` batches in flight per replica, throughput set by
 //!   the bottleneck stage) across `R` pipeline replicas behind a
-//!   round-robin / join-shortest-queue router, with per-replica failure
-//!   injection and failover. Repartitioning is a first-class, time-costed
+//!   fleet-aware router (round-robin, join-shortest-queue, and — for
+//!   heterogeneous fleets with per-replica
+//!   `EngineConfig::speed_factors` — smooth weighted round-robin and
+//!   speed-weighted JSQ, which ranks replicas by expected drain time so
+//!   a degraded replica sheds load before failover trips), with
+//!   per-replica failure injection and failover. Repartitioning is a first-class, time-costed
 //!   deployment ([`coordinator::DeploymentConfig`]): re-hosted blocks pay
 //!   weight transfer over link bandwidth plus warm-up, served either
 //!   break-before-make (dispatch stalls through the window, and the
@@ -50,18 +54,23 @@
 //!   `EngineConfig::record_completions`). Under
 //!   `EngineConfig::execution: Sharded(workers)` the event loop itself
 //!   shards per replica onto real threads — each shard owns its heap,
-//!   slab, plan cache and streaming metrics; arrivals are round-robin
-//!   pre-split or JSQ-fed over atomic load counters; per-shard reports
+//!   slab, plan cache and streaming metrics; arrivals are positionally
+//!   pre-split (round-robin / weighted round-robin) or JSQ-fed over
+//!   atomic load counters and shard-published speed estimates; live-routed
+//!   shards can additionally steal queued work from each other through
+//!   per-shard injector pools (`EngineConfig::steal`); per-shard reports
 //!   merge (exact histogram adds, Welford pairwise moments) into one
 //!   `ServiceReport` that is bucket-identical to the sequential
-//!   reference on the same seed.
+//!   reference on the same seed for the positional policies.
 //! - [`obs`] is the observability layer: the engine emits a typed event
 //!   stream (arrivals, batch dispatches, stage spans, condition changes,
 //!   failover/recovery detections, quarantine windows, drops,
 //!   completions) into an [`obs::EventSink`] it is generic over — the
 //!   default [`obs::NoopSink`] monomorphizes every emission away, so
-//!   observability costs nothing unless a recording sink is plugged in.
-//!   On top of the stream sit a Chrome `trace_event` exporter
+//!   observability costs nothing unless a recording sink is plugged in;
+//!   sharded runs stream events over a bounded channel drained on the
+//!   caller thread ([`obs::ChannelSink`]) instead of buffering whole
+//!   shards. On top of the stream sit a Chrome `trace_event` exporter
 //!   ([`obs::trace`], `continuer trace`, opens in Perfetto /
 //!   `chrome://tracing`) and a modular report pipeline
 //!   ([`obs::report::ReportModule`]) that folds one replayed stream

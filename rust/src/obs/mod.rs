@@ -156,10 +156,9 @@ impl EventSink for NoopSink {
     }
 }
 
-/// A recording sink: buffers every event in order. One lives per
-/// shard under `Execution::Sharded`; the merge concatenates in replica
-/// order, re-tags `replica`, then stable-sorts by timestamp so track
-/// identities and tie order are deterministic.
+/// A recording sink: buffers every event in order. The sequential
+/// engine streams into one directly; sharded runs stream through
+/// [`ChannelSink`]s instead, so no shard buffers a whole run.
 #[derive(Debug, Default)]
 pub struct EventBuffer {
     pub events: Vec<EngineEvent>,
@@ -173,6 +172,45 @@ impl EventSink for EventBuffer {
 
     fn take_events(&mut self) -> Vec<EngineEvent> {
         std::mem::take(&mut self.events)
+    }
+}
+
+/// Bound on the sharded streaming channel: deep enough that shards
+/// rarely block on the drain thread, small enough that a recording run
+/// stays O(1) in in-flight events instead of buffering whole shards.
+pub const EVENT_CHANNEL_CAP: usize = 8192;
+
+/// The sharded engine's streaming sink: each shard owns one, re-tags
+/// its events from the shard-local replica 0 to the global replica id,
+/// and sends them over a bounded channel that the *caller* thread
+/// drains while the shards run (backpressure, not whole-run buffering —
+/// the follow-up PR 5 left open). A full channel blocks the emitting
+/// shard until the drain catches up; a dropped receiver silently
+/// discards, so a failing run still unwinds cleanly.
+///
+/// Per-sender FIFO order is guaranteed by the channel, so the drain can
+/// bucket received events by replica and recover exactly the
+/// deterministic order the old per-shard buffers merged to: concatenate
+/// buckets in replica order, then stable-sort by timestamp.
+#[derive(Debug)]
+pub struct ChannelSink {
+    tx: std::sync::mpsc::SyncSender<EngineEvent>,
+    replica: usize,
+}
+
+impl ChannelSink {
+    pub fn new(tx: std::sync::mpsc::SyncSender<EngineEvent>, replica: usize) -> ChannelSink {
+        ChannelSink { tx, replica }
+    }
+}
+
+impl EventSink for ChannelSink {
+    #[inline]
+    fn on_event(&mut self, ev: &EngineEvent) {
+        let _ = self.tx.send(EngineEvent {
+            replica: self.replica,
+            ..*ev
+        });
     }
 }
 
@@ -190,6 +228,49 @@ mod tests {
             kind: EngineEventKind::Arrival { id: 0 },
         });
         assert!(s.take_events().is_empty());
+    }
+
+    #[test]
+    fn channel_sink_retags_and_streams_in_send_order() {
+        let (tx, rx) = std::sync::mpsc::sync_channel(EVENT_CHANNEL_CAP);
+        let mut a = ChannelSink::new(tx.clone(), 3);
+        let mut b = ChannelSink::new(tx, 5);
+        for i in 0..3 {
+            // Shard-local events always carry replica 0.
+            let ev = EngineEvent {
+                at_ms: i as f64,
+                replica: 0,
+                kind: EngineEventKind::Arrival { id: i },
+            };
+            a.on_event(&ev);
+            b.on_event(&ev);
+        }
+        drop(a);
+        drop(b);
+        let got: Vec<EngineEvent> = rx.iter().collect();
+        assert_eq!(got.len(), 6);
+        // Re-tagged to the global replica id, per-sender order intact.
+        for r in [3usize, 5] {
+            let times: Vec<f64> = got
+                .iter()
+                .filter(|e| e.replica == r)
+                .map(|e| e.at_ms)
+                .collect();
+            assert_eq!(times, vec![0.0, 1.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn channel_sink_survives_dropped_receiver() {
+        let (tx, rx) = std::sync::mpsc::sync_channel(4);
+        drop(rx);
+        let mut s = ChannelSink::new(tx, 0);
+        // Must not panic or block: a failing run unwinds past the sink.
+        s.on_event(&EngineEvent {
+            at_ms: 0.0,
+            replica: 0,
+            kind: EngineEventKind::Arrival { id: 0 },
+        });
     }
 
     #[test]

@@ -73,7 +73,7 @@ where
     R: Send,
     F: Fn(T) -> R + Sync,
 {
-    parallel_map_with(items, workers, f, || {})
+    parallel_map_with(items, workers, f, || {}).0
 }
 
 /// [`parallel_map`] plus a foreground task: `foreground` runs on the
@@ -81,25 +81,32 @@ where
 /// returns once both the foreground task and every item are done. This is
 /// the shape the sharded serving engine needs — shards run on scoped
 /// workers while the arrival feeder (which owns the channel senders and
-/// must observe shard backpressure counters live) runs alongside them.
-/// `foreground` needs no `Send`: it never leaves the calling thread.
-pub fn parallel_map_with<T, R, F, G>(items: Vec<T>, workers: usize, f: F, foreground: G) -> Vec<R>
+/// must observe shard backpressure counters live) and the streaming
+/// event-sink drain both run alongside them. `foreground` needs no
+/// `Send` (it never leaves the calling thread) and its return value is
+/// handed back next to the mapped results — the sharded engine returns
+/// the drained observability stream this way.
+pub fn parallel_map_with<T, R, F, G, V>(
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+    foreground: G,
+) -> (Vec<R>, V)
 where
     T: Send,
     R: Send,
     F: Fn(T) -> R + Sync,
-    G: FnOnce(),
+    G: FnOnce() -> V,
 {
     let n = items.len();
     if n == 0 {
-        foreground();
-        return Vec::new();
+        return (Vec::new(), foreground());
     }
     let workers = workers.max(1).min(n);
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let work: Mutex<std::vec::IntoIter<(usize, T)>> =
         Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
-    thread::scope(|s| {
+    let fg = thread::scope(|s| {
         for _ in 0..workers {
             s.spawn(|| loop {
                 let next = { work.lock().unwrap().next() };
@@ -112,12 +119,13 @@ where
                 }
             });
         }
-        foreground();
+        foreground()
     });
-    results
+    let out = results
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("worker produced result"))
-        .collect()
+        .collect();
+    (out, fg)
 }
 
 #[cfg(test)]
@@ -171,7 +179,7 @@ mod tests {
         // concurrently under the same scope.
         let (tx, rx) = mpsc::channel::<u32>();
         let rx = Mutex::new(rx);
-        let out = parallel_map_with(
+        let (out, fed) = parallel_map_with(
             vec![0u32],
             2,
             |_| {
@@ -182,15 +190,16 @@ mod tests {
                 for v in 0..100 {
                     tx.send(v).unwrap();
                 }
+                100usize
             },
         );
         assert_eq!(out, vec![(0..100).sum::<u32>()]);
+        assert_eq!(fed, 100, "the foreground value is handed back");
     }
 
     #[test]
     fn parallel_map_with_empty_still_runs_foreground() {
-        let mut ran = false;
-        let out: Vec<i32> = parallel_map_with(Vec::new(), 4, |x| x, || ran = true);
+        let (out, ran): (Vec<i32>, bool) = parallel_map_with(Vec::new(), 4, |x| x, || true);
         assert!(out.is_empty());
         assert!(ran);
     }

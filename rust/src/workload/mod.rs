@@ -117,6 +117,28 @@ pub fn split_round_robin(reqs: &[Request], replicas: usize) -> Vec<Vec<Request>>
     out
 }
 
+/// Split one stream into per-replica streams using an arbitrary
+/// positional picker: `pick()` is called once per request, in stream
+/// order, and names the replica that request joins. This is the
+/// generalisation of [`split_round_robin`] the weighted-round-robin
+/// sharded path needs — the engine passes the same smooth-WRR schedule
+/// the sequential router walks, so both modes assign every request to
+/// the same replica. Each output stream preserves arrival order.
+pub fn split_with(
+    reqs: &[Request],
+    replicas: usize,
+    mut pick: impl FnMut() -> usize,
+) -> Vec<Vec<Request>> {
+    assert!(replicas > 0, "need >= 1 replica stream");
+    let mut out: Vec<Vec<Request>> = vec![Vec::new(); replicas];
+    for r in reqs {
+        let i = pick();
+        assert!(i < replicas, "picker chose replica {i} of {replicas}");
+        out[i].push(*r);
+    }
+    out
+}
+
 /// Merge per-replica streams back into one stream ordered by arrival time
 /// (stable: equal timestamps keep lower-replica-first order).
 pub fn merge_streams(streams: &[Vec<Request>]) -> Vec<Request> {
@@ -239,6 +261,18 @@ mod tests {
         assert_eq!(s[0][0].id, 0);
         assert!((s[0][29].arrival_ms - 60.0).abs() < 1e-9);
         assert!(s[0].iter().all(|r| r.input_idx < 8));
+    }
+
+    #[test]
+    fn split_with_round_robin_picker_matches_split_round_robin() {
+        let reqs = generate(25, Arrival::Poisson { rate_rps: 80.0 }, 16, 8);
+        let mut next = 0usize;
+        let by_picker = split_with(&reqs, 3, || {
+            let r = next % 3;
+            next += 1;
+            r
+        });
+        assert_eq!(by_picker, split_round_robin(&reqs, 3));
     }
 
     #[test]

@@ -46,6 +46,8 @@ fn cfg(mode: DeployMode, warmup_ms: f64, deadline_ms: Option<f64>) -> EngineConf
         route: RoutePolicy::RoundRobin,
         decision_ms_override: Some(1.5),
         record_completions: true,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: DeploymentConfig { mode, warmup_ms },
     }

@@ -104,6 +104,8 @@ fn engine_conserves_requests_under_arbitrary_health_schedules() {
             decision_ms_override: Some(1.5),
             // The property inspects per-request ids below.
             record_completions: true,
+            speed_factors: Vec::new(),
+            steal: false,
             execution: Execution::Sequential,
             deployment: Default::default(),
         };
@@ -176,6 +178,8 @@ fn oracle_mode_conserves_requests_too() {
             route: RoutePolicy::RoundRobin,
             decision_ms_override: Some(1.5),
             record_completions: true,
+            speed_factors: Vec::new(),
+            steal: false,
             execution: Execution::Sequential,
             deployment: Default::default(),
         };

@@ -12,6 +12,11 @@
 //!    counters and is deliberately NOT bit-reproducible — still
 //!    conserves requests: every offered request completes or drops
 //!    exactly once, whatever the worker count.
+//! 3. Fleet-aware extensions keep both promises: weighted round-robin
+//!    (positional, like plain round-robin) stays bucket-exact between
+//!    sequential and sharded on heterogeneous fleets, and the live JSQ
+//!    family conserves requests under skewed speed factors, mid-run
+//!    degradations, and cross-replica work stealing.
 //!
 //! Failure plans are kept well inside each replica's arrival span
 //! (crash <= 0.3x, recovery <= 0.45x of the expected span): a shard
@@ -189,6 +194,8 @@ fn sharded_matches_sequential_on_any_routed_workload() {
             route: RoutePolicy::RoundRobin,
             decision_ms_override: Some(1.5),
             record_completions: false,
+            speed_factors: Vec::new(),
+            steal: false,
             execution: Execution::Sequential,
             deployment: Default::default(),
         };
@@ -236,6 +243,8 @@ fn jsq_sharded_conserves_requests_for_any_worker_count() {
             decision_ms_override: Some(1.5),
             // The property inspects per-request ids below.
             record_completions: true,
+            speed_factors: Vec::new(),
+            steal: false,
             execution: Execution::Sharded(g.usize(1, 4)),
             deployment: Default::default(),
         };
@@ -259,6 +268,172 @@ fn jsq_sharded_conserves_requests_for_any_worker_count() {
 
         prop_assert_eq(report.completed.len() + report.dropped.len(), n_requests)?;
         prop_assert_eq(report.completed_count, report.completed.len())?;
+        let mut ids: Vec<usize> = report
+            .completed
+            .iter()
+            .map(|c| c.id)
+            .chain(report.dropped.iter().map(|d| d.id))
+            .collect();
+        ids.sort_unstable();
+        let expected: Vec<usize> = (0..n_requests).collect();
+        prop_assert(ids == expected, "request ids must partition 0..n exactly once")?;
+        prop_assert(
+            report
+                .completed
+                .iter()
+                .all(|c| c.latency_ms.is_finite() && c.latency_ms >= 0.0),
+            "non-finite completion latency",
+        )?;
+        Ok(())
+    });
+}
+
+/// Weighted round-robin is positional: the sharded engine pre-splits
+/// the stream with the same smooth-WRR schedule the sequential router
+/// walks, so the bucket-exact equivalence contract extends to
+/// heterogeneous fleets (skewed static speed factors).
+#[test]
+fn weighted_rr_sharded_matches_sequential_on_skewed_fleets() {
+    check(25, 0x33EED5, |g| {
+        let replicas = g.usize(2, 4);
+        let nodes = g.usize(3, 5);
+        let stage_ms = g.f64(1.0, 6.0);
+        let n_requests = g.usize(80, 200);
+        let rate_rps = g.f64(300.0, 700.0);
+        let span_est_ms = n_requests as f64 / (rate_rps / 1e3);
+        let speed_factors: Vec<f64> = (0..replicas).map(|_| g.f64(0.5, 1.5)).collect();
+        // In-span crash + recovery per replica: even the least-weighted
+        // replica keeps receiving arrivals across the whole stream (the
+        // WRR interleave period is a handful of requests), so the
+        // in-span contract from the module docs still applies.
+        let plans: Vec<FailurePlan> = (0..replicas)
+            .map(|_| {
+                let node = g.usize(2, nodes);
+                let down_ms = g.f64(0.05, 0.25) * span_est_ms;
+                let up_ms = down_ms + g.f64(0.02, 0.15) * span_est_ms;
+                FailurePlan::crash_recover(node, down_ms, up_ms)
+            })
+            .collect();
+        let requests = generate(
+            n_requests,
+            Arrival::Poisson { rate_rps },
+            8,
+            g.rng().next_u64(),
+        );
+        let mut cfg = EngineConfig {
+            batcher: BatcherConfig::new(vec![1, 4], 2.0, 4),
+            health: HealthMode::Oracle(Detector::default()),
+            deadline_ms: if g.bool() { Some(g.f64(40.0, 200.0)) } else { None },
+            pipeline_depth: g.usize(1, 3),
+            route: RoutePolicy::WeightedRoundRobin,
+            decision_ms_override: Some(1.5),
+            record_completions: false,
+            speed_factors,
+            steal: false,
+            execution: Execution::Sequential,
+            deployment: Default::default(),
+        };
+        let run = |cfg: &EngineConfig| -> ServiceReport {
+            let mut backends: Vec<SyntheticBackend> = (0..replicas)
+                .map(|_| SyntheticBackend::uniform(nodes, stage_ms, 1.0))
+                .collect();
+            let mut failovers: Vec<Failover> = (0..replicas)
+                .map(|_| Failover::new(Objectives::default()))
+                .collect();
+            let inputs = HostTensor::zeros(vec![8, 4]);
+            serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                cfg,
+                &requests,
+                &inputs,
+                &plans,
+            )
+            .unwrap()
+        };
+        let seq = run(&cfg);
+        prop_assert(
+            seq.completed_count + seq.dropped.len() == n_requests,
+            "sequential reference must conserve requests",
+        )?;
+        cfg.execution = Execution::Sharded(g.usize(1, 4));
+        let shard = run(&cfg);
+        assert_reports_match(&seq, &shard)
+    });
+}
+
+/// The fleet-aware live-routed path — skewed static speeds, mid-run
+/// degradations on every replica, speed-weighted JSQ, work stealing on
+/// or off — still conserves requests exactly: every offered request
+/// completes or drops exactly once, whatever the worker count.
+#[test]
+fn skewed_degraded_fleet_with_stealing_conserves_requests() {
+    check(30, 0x57EA1ED, |g| {
+        let replicas = g.usize(2, 4);
+        let nodes = g.usize(3, 5);
+        let n_requests = g.usize(60, 200);
+        let rate_rps = g.f64(200.0, 800.0);
+        let span_est_ms = n_requests as f64 / (rate_rps / 1e3);
+        let speed_factors: Vec<f64> = (0..replicas).map(|_| g.f64(0.4, 1.6)).collect();
+        let steal = g.bool();
+        let route = if g.bool() {
+            RoutePolicy::WeightedJoinShortestQueue
+        } else {
+            RoutePolicy::JoinShortestQueue
+        };
+
+        let mut backends: Vec<SyntheticBackend> = (0..replicas)
+            .map(|_| SyntheticBackend::uniform(nodes, g.f64(1.0, 6.0), 1.0))
+            .collect();
+        let mut failovers: Vec<Failover> = (0..replicas)
+            .map(|_| Failover::new(Objectives::default()))
+            .collect();
+        // Every replica takes a degraded window somewhere inside the
+        // stream: the weighted feeder sheds load off it, and (with
+        // stealing on) its backlog migrates to healthy siblings — the
+        // property holds either way.
+        let plans: Vec<FailurePlan> = (0..replicas)
+            .map(|_| {
+                let node = g.usize(2, nodes);
+                let at_ms = g.f64(0.05, 0.4) * span_est_ms;
+                let duration_ms = g.f64(0.1, 0.4) * span_est_ms;
+                FailurePlan::degraded(node, at_ms, g.f64(1.5, 4.0), duration_ms)
+            })
+            .collect();
+        let cfg = EngineConfig {
+            batcher: BatcherConfig::new(vec![1, 4], 2.0, 4),
+            health: HealthMode::Oracle(Detector::default()),
+            deadline_ms: if g.bool() { Some(g.f64(40.0, 200.0)) } else { None },
+            pipeline_depth: g.usize(1, 3),
+            route,
+            decision_ms_override: Some(1.5),
+            // The property inspects per-request ids below.
+            record_completions: true,
+            speed_factors,
+            steal,
+            execution: Execution::Sharded(g.usize(1, 4)),
+            deployment: Default::default(),
+        };
+        let requests = generate(
+            n_requests,
+            Arrival::Poisson { rate_rps },
+            8,
+            g.rng().next_u64(),
+        );
+        let inputs = HostTensor::zeros(vec![8, 4]);
+        let report = serve(
+            &mut backends,
+            &StaticMetrics,
+            &mut failovers,
+            &cfg,
+            &requests,
+            &inputs,
+            &plans,
+        )
+        .map_err(|e| format!("engine errored: {e}"))?;
+
+        prop_assert_eq(report.completed.len() + report.dropped.len(), n_requests)?;
         let mut ids: Vec<usize> = report
             .completed
             .iter()

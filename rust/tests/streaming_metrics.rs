@@ -78,6 +78,8 @@ fn engine_run(record_completions: bool, seed: u64) -> ServiceReport {
         route: RoutePolicy::JoinShortestQueue,
         decision_ms_override: Some(1.5),
         record_completions,
+        speed_factors: Vec::new(),
+        steal: false,
         execution: Execution::Sequential,
         deployment: Default::default(),
     };
