@@ -2,12 +2,15 @@
 # Reproducible perf sweep for the serving engine.
 #
 # Runs the engine-scale bench (replica axis, sequential vs sharded
-# workers axis, saturation sweep) and leaves the machine-readable
-# artifacts in rust/:
+# workers axis, saturation sweep, heap-vs-calendar queue axis) and
+# leaves the machine-readable artifacts in rust/:
 #
-#   BENCH_engine_scale.json   replica + workers axes, saturation knee
+#   BENCH_engine_scale.json   replica + workers + queue axes, saturation knee
 #   BENCH_serving.json        pipelining-depth hot-path bench
 #   BENCH_health.json         monitored-health serving bench
+#
+# BENCH_engine_scale.json is also copied to the repo root so the perf
+# trajectory is tracked across PRs.
 #
 # Usage:
 #   bench/run.sh                 # full sweep, 1M requests
@@ -16,6 +19,8 @@
 #   QUICK=1 bench/run.sh         # ~20k-request smoke (CI-sized)
 #   SKEW=1 bench/run.sh          # add the heterogeneous-fleet skew axis
 #                                # (JSQ vs weighted JSQ vs + stealing)
+#   QUEUE=heap bench/run.sh      # pin the event queue (heap|calendar);
+#                                # unset runs calendar + a heap reference arm
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -32,13 +37,20 @@ fi
 if [[ -n "${SKEW:-}" ]]; then
   ARGS+=(--skew)
 fi
+if [[ -n "${QUEUE:-}" ]]; then
+  ARGS+=(--queue "$QUEUE")
+fi
 
 cargo bench --bench engine_scale -- "${ARGS[@]}"
 cargo bench --bench pipeline
 cargo bench --bench health
+
+# Track the engine-scale trajectory at the repo root across PRs.
+cp BENCH_engine_scale.json ../BENCH_engine_scale.json
 
 echo
 echo "artifacts:"
 for f in BENCH_engine_scale.json BENCH_serving.json BENCH_health.json; do
   [[ -s $f ]] && echo "  $f"
 done
+echo "  ../BENCH_engine_scale.json (repo-root trajectory copy)"

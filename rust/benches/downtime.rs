@@ -44,6 +44,7 @@ fn deploy_case(mode: DeployMode) -> (f64, f64, f64, f64) {
         record_completions: false,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: DeploymentConfig { mode, warmup_ms: 10.0 },
     };

@@ -26,6 +26,14 @@
 //!   JSQ, and weighted JSQ + cross-replica work stealing — reporting
 //!   virtual throughput and p99 per arm (the fleet-aware routing win,
 //!   recorded under the JSON's `skew` key).
+//! - **Queue axis** (`--queue heap|calendar` pins every case to one
+//!   event-queue implementation; unset runs the default calendar and
+//!   adds a heap reference arm): the 4-replica sequential round-robin
+//!   case and the saturation sweep re-run on the `BinaryHeap` reference
+//!   queue, with the calendar/heap events-per-sec ratio and knee shift
+//!   recorded under the JSON's `queue_axis` key. Same seed, so the two
+//!   arms process byte-identical event streams — the ratio is pure
+//!   queue mechanics.
 //!
 //! A **tracing axis** guards the observability layer: the 4-replica
 //! round-robin workload run with the default `NoopSink` (must hold the
@@ -57,6 +65,7 @@ use continuer::obs::EventBuffer;
 use continuer::runtime::HostTensor;
 use continuer::util::bench::{f, Table};
 use continuer::util::cli::Args;
+use continuer::util::eventq::QueueKind;
 use continuer::util::json::{obj, Json};
 use continuer::workload::{generate, Arrival};
 
@@ -100,6 +109,7 @@ fn scale_case(
     n_requests: usize,
     route: RoutePolicy,
     execution: Execution,
+    queue: QueueKind,
 ) -> ScaleCase {
     // Near-saturating arrivals: the batch-16 bottleneck stage admits
     // ~3200 rps per replica; offer ~2500 per replica so queues stay
@@ -134,6 +144,7 @@ fn scale_case(
         steal: false,
         execution,
         deployment: Default::default(),
+        event_queue: queue,
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -186,6 +197,7 @@ fn scale_case(
         ("replicas", replicas.into()),
         ("execution", exec_label.as_str().into()),
         ("workers", workers.into()),
+        ("event_queue", queue.label().into()),
         ("route", route_label.into()),
         ("pipeline_depth", DEPTH.into()),
         ("requests", n_requests.into()),
@@ -223,7 +235,7 @@ fn scale_case(
 /// workload run with the default `NoopSink` (via `serve`) or with a
 /// recording `EventBuffer` (via `serve_with_sink`). Returns wall-clock
 /// events/sec and the number of observability events captured.
-fn tracing_arm(n_requests: usize, record: bool) -> (f64, usize) {
+fn tracing_arm(n_requests: usize, record: bool, queue: QueueKind) -> (f64, usize) {
     let replicas = 4usize;
     let rate_rps = 2500.0 * replicas as f64;
     let span_est_ms = n_requests as f64 / (rate_rps / 1e3);
@@ -251,6 +263,7 @@ fn tracing_arm(n_requests: usize, record: bool) -> (f64, usize) {
         steal: false,
         execution: Execution::Sequential,
         deployment: Default::default(),
+        event_queue: queue,
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -290,7 +303,12 @@ fn tracing_arm(n_requests: usize, record: bool) -> (f64, usize) {
 /// One rung of the saturation sweep: 4 replicas, round-robin shards, no
 /// failures — pure offered load against the pipeline's capacity.
 /// Returns the rung's JSON record and whether p99 met the SLO.
-fn saturation_rung(rate_rps: f64, n_requests: usize, workers: usize) -> (Json, bool) {
+fn saturation_rung(
+    rate_rps: f64,
+    n_requests: usize,
+    workers: usize,
+    queue: QueueKind,
+) -> (Json, bool) {
     let replicas = 4usize;
     let mut backends: Vec<SyntheticBackend> = (0..replicas)
         .map(|_| SyntheticBackend::uniform(NODES, STAGE_MS, HOP_MS))
@@ -310,6 +328,7 @@ fn saturation_rung(rate_rps: f64, n_requests: usize, workers: usize) -> (Json, b
         steal: false,
         execution: Execution::Sharded(workers),
         deployment: Default::default(),
+        event_queue: queue,
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -337,12 +356,12 @@ fn saturation_rung(rate_rps: f64, n_requests: usize, workers: usize) -> (Json, b
 
 /// Ramp offered load across the bottleneck capacity and report the knee:
 /// the highest offered rate whose p99 still meets the SLO.
-fn saturation_sweep(n_requests: usize, workers: usize) -> (Json, f64) {
+fn saturation_sweep(n_requests: usize, workers: usize, queue: QueueKind) -> (Json, f64) {
     let mut rungs = Vec::new();
     let mut knee_rps = 0.0f64;
     for mult in [0.5, 0.7, 0.85, 1.0, 1.1, 1.25, 1.5] {
         let rate_rps = mult * CAPACITY_RPS_PER_REPLICA * 4.0;
-        let (rung, within_slo) = saturation_rung(rate_rps, n_requests, workers);
+        let (rung, within_slo) = saturation_rung(rate_rps, n_requests, workers, queue);
         if within_slo && rate_rps > knee_rps {
             knee_rps = rate_rps;
         }
@@ -351,6 +370,7 @@ fn saturation_sweep(n_requests: usize, workers: usize) -> (Json, f64) {
     let sweep = obj(&[
         ("slo_p99_ms", SLO_P99_MS.into()),
         ("workers", workers.into()),
+        ("event_queue", queue.label().into()),
         ("knee_rps", knee_rps.into()),
         ("rungs", Json::Arr(rungs)),
     ]);
@@ -376,6 +396,7 @@ fn skew_arm(
     workers: usize,
     route: RoutePolicy,
     steal: bool,
+    queue: QueueKind,
 ) -> (Json, f64, f64) {
     let replicas = SKEW_SPEEDS.len();
     // ~65% of the fleet's healthy weighted capacity: enough headroom
@@ -407,6 +428,7 @@ fn skew_arm(
         steal,
         execution: Execution::Sharded(workers),
         deployment: Default::default(),
+        event_queue: queue,
     };
     let requests = generate(n_requests, Arrival::Poisson { rate_rps }, 16, 42);
     let inputs = HostTensor::zeros(vec![16, 4]);
@@ -449,7 +471,7 @@ fn skew_arm(
 /// stealing. Weighted routing should cut p99 (the degraded replica
 /// holds a third of the backlog it holds under plain JSQ) and stealing
 /// should cut the end-of-stream drain, lifting virtual throughput.
-fn skew_axis(n_requests: usize, workers: usize) -> Json {
+fn skew_axis(n_requests: usize, workers: usize, queue: QueueKind) -> Json {
     let arms = [
         ("jsq", RoutePolicy::JoinShortestQueue, false),
         ("weighted_jsq", RoutePolicy::WeightedJoinShortestQueue, false),
@@ -462,7 +484,7 @@ fn skew_axis(n_requests: usize, workers: usize) -> Json {
     let mut records = Vec::new();
     let mut stats = Vec::new();
     for (label, route, steal) in arms {
-        let (json, p99, tput) = skew_arm(label, n_requests, workers, route, steal);
+        let (json, p99, tput) = skew_arm(label, n_requests, workers, route, steal, queue);
         println!("skew {label}: {tput:.0} rps virtual throughput, p99 {p99:.1} ms");
         records.push(json);
         stats.push((p99, tput));
@@ -511,6 +533,14 @@ fn main() {
     } else {
         vec![pinned_workers]
     };
+    // `--queue heap|calendar` pins every case to one event-queue
+    // implementation (CI runs both smokes this way); unset runs the
+    // default calendar everywhere and adds the heap reference arm.
+    let pinned_queue = args.get("queue").map(|s| {
+        QueueKind::parse(s)
+            .unwrap_or_else(|| panic!("--queue expects 'heap' or 'calendar', got '{s}'"))
+    });
+    let queue = pinned_queue.unwrap_or_default();
 
     let mut t = Table::new(
         &format!("bench: engine scale — {n_requests} requests, 4-node synthetic, depth 4"),
@@ -535,6 +565,7 @@ fn main() {
             n_requests,
             RoutePolicy::JoinShortestQueue,
             Execution::Sequential,
+            queue,
         );
         push_case(&mut t, c);
     }
@@ -542,13 +573,25 @@ fn main() {
     // Workers axis: 4 replicas on real threads vs the same work run
     // sequentially — round-robin pre-split so both do identical work.
     let seq_eps = {
-        let c = scale_case(4, n_requests, RoutePolicy::RoundRobin, Execution::Sequential);
+        let c = scale_case(
+            4,
+            n_requests,
+            RoutePolicy::RoundRobin,
+            Execution::Sequential,
+            queue,
+        );
         push_case(&mut t, c)
     };
     let mut speedups = Vec::new();
     let mut speedup_lines = Vec::new();
     for &w in &workers_axis {
-        let c = scale_case(4, n_requests, RoutePolicy::RoundRobin, Execution::Sharded(w));
+        let c = scale_case(
+            4,
+            n_requests,
+            RoutePolicy::RoundRobin,
+            Execution::Sharded(w),
+            queue,
+        );
         let eps = push_case(&mut t, c);
         let speedup = eps / seq_eps.max(1e-9);
         speedup_lines.push(format!(
@@ -572,9 +615,9 @@ fn main() {
     // best-of-2 to damp scheduler noise.
     let (mut noop_eps, mut recording_eps, mut events_recorded) = (0.0f64, 0.0f64, 0usize);
     for _ in 0..2 {
-        let (eps, _) = tracing_arm(n_requests, false);
+        let (eps, _) = tracing_arm(n_requests, false, queue);
         noop_eps = noop_eps.max(eps);
-        let (eps, n) = tracing_arm(n_requests, true);
+        let (eps, n) = tracing_arm(n_requests, true, queue);
         recording_eps = recording_eps.max(eps);
         events_recorded = n;
     }
@@ -601,15 +644,53 @@ fn main() {
     // Saturation knee, on the widest sharded configuration benchmarked.
     let sat_workers = *workers_axis.iter().max().unwrap();
     let sat_requests = (n_requests / 10).max(5_000);
-    let (saturation, knee_rps) = saturation_sweep(sat_requests, sat_workers);
+    let (saturation, knee_rps) = saturation_sweep(sat_requests, sat_workers, queue);
     println!(
         "saturation knee ({sat_workers} workers): {knee_rps:.0} rps offered within p99 <= {SLO_P99_MS} ms"
     );
 
+    // Queue axis: when no `--queue` is pinned, re-run the 4-replica
+    // sequential round-robin case and the saturation sweep on the
+    // BinaryHeap reference. Same seed as the calendar runs above, so
+    // both arms walk byte-identical event streams — events/sec ratio
+    // and knee shift are pure queue mechanics. CI diffs the ratio
+    // (warn-only) so a calendar win that evaporates gets flagged.
+    let queue_axis = if pinned_queue.is_none() {
+        let heap = scale_case(
+            4,
+            n_requests,
+            RoutePolicy::RoundRobin,
+            Execution::Sequential,
+            QueueKind::Heap,
+        );
+        let (_, heap_knee_rps) = saturation_sweep(sat_requests, sat_workers, QueueKind::Heap);
+        let ratio = seq_eps / heap.events_per_sec.max(1e-9);
+        println!(
+            "queue axis: calendar {seq_eps:.0} events/sec vs heap {:.0} ({ratio:.2}x); \
+             knee {knee_rps:.0} rps vs {heap_knee_rps:.0}{}",
+            heap.events_per_sec,
+            if ratio >= 1.0 {
+                ""
+            } else {
+                "  (WARNING: calendar slower than the heap reference)"
+            }
+        );
+        obj(&[
+            ("case", "4r/sequential round_robin".into()),
+            ("heap_events_per_sec", heap.events_per_sec.into()),
+            ("calendar_events_per_sec", seq_eps.into()),
+            ("calendar_vs_heap", ratio.into()),
+            ("heap_knee_rps", heap_knee_rps.into()),
+            ("calendar_knee_rps", knee_rps.into()),
+        ])
+    } else {
+        Json::Null
+    };
+
     // Skew axis (opt-in: `--skew`): heterogeneous speeds + one degraded
     // replica, plain JSQ vs weighted JSQ vs weighted JSQ + stealing.
     let skew = if args.flag("skew") {
-        skew_axis(sat_requests, sat_workers)
+        skew_axis(sat_requests, sat_workers, queue)
     } else {
         Json::Null
     };
@@ -625,10 +706,12 @@ fn main() {
             "workers_axis",
             Json::Arr(workers_axis.iter().map(|&w| w.into()).collect()),
         ),
+        ("event_queue", queue.label().into()),
         ("sequential_rr_events_per_sec", seq_eps.into()),
         ("worker_scaling", Json::Arr(speedups)),
         ("tracing", tracing),
         ("saturation", saturation),
+        ("queue_axis", queue_axis),
         ("skew", skew),
         ("cases", Json::Arr(cases)),
     ]);

@@ -98,6 +98,7 @@ fn serving_case(health: HealthMode) -> (f64, usize, usize) {
         record_completions: false,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

@@ -78,6 +78,7 @@ fn serving_case(replicas: usize, depth: usize) -> ServingCase {
         record_completions: false,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

@@ -2,8 +2,23 @@
 //!
 //! Replaces the old monolithic serving loop (one batch in flight, clock
 //! advanced batch-by-batch) with a discrete-event simulation driven by a
-//! [`BinaryHeap`] of timestamped events: request arrivals, raw failures,
+//! min-queue of timestamped events: request arrivals, raw failures,
 //! failure detections, batcher timeouts and per-stage start/completion.
+//!
+//! # Event core
+//!
+//! The queue behind the loop is pluggable ([`EngineConfig::event_queue`],
+//! backed by [`crate::util::eventq`]): the [`QueueKind::Heap`] reference
+//! is the original `BinaryHeap` (`O(log n)` per event), and
+//! [`QueueKind::Calendar`] (the default) is an adaptive calendar queue —
+//! power-of-two bucket array keyed by `at_ms`, bucket width retuned to
+//! the observed inter-event gap on resize — giving `O(1)` amortized
+//! push/pop at the million-event scale `benches/engine_scale.rs` drives.
+//! Both order events by exact `(at_ms, seq)`, so pop order — and with it
+//! every [`ServiceReport`] — is byte-identical whichever queue runs
+//! (asserted per-operation in `tests/eventq_property.rs` and end-to-end
+//! in `tests/sharded_equivalence.rs`). Each shard owns a queue of the
+//! same kind.
 //!
 //! Two axes of concurrency the old loop structurally could not express:
 //!
@@ -116,8 +131,7 @@
 //!   [`EngineConfig::record_completions`] asks for exact per-request
 //!   records.
 
-use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -129,6 +143,7 @@ use crate::dnn::variants::Technique;
 use crate::health::monitor::{simulate as simulate_monitor, HealthConfig, HealthEventKind};
 use crate::obs::{ChannelSink, EngineEvent, EngineEventKind, EventSink, NoopSink, EVENT_CHANNEL_CAP};
 use crate::runtime::{Activation, HostTensor, ShapeOnly, UnitKind};
+use crate::util::eventq::{AnyQueue, EventQueue, QueueKind};
 use crate::util::histogram::Streaming;
 use crate::util::slab::{Slab, SlabKey};
 use crate::util::threadpool::parallel_map_with;
@@ -138,7 +153,9 @@ use super::batcher::{decide, BatcherConfig, Dispatch};
 use super::estimator::MetricsSource;
 use super::failover::Failover;
 use super::plan_cache::PlanCache;
-use super::router::{ReplicaLoad, RoutePolicy, Router, ShardRouter, WrrState, SPEED_MILLI};
+use super::router::{
+    CachePadded, ReplicaLoad, RoutePolicy, Router, ShardRouter, WrrState, SPEED_MILLI,
+};
 use super::service::{
     Completion, DeployMode, DeployWindow, DroppedRequest, FailoverWindow, ServiceReport,
 };
@@ -435,6 +452,12 @@ pub struct EngineConfig {
     /// sharded schedules (round-robin / weighted-round-robin / pre-routed
     /// streams) never steal — their per-shard schedules stay exact.
     pub steal: bool,
+    /// Which [`EventQueue`](crate::util::eventq::EventQueue)
+    /// implementation drives the loop (and each shard): the `BinaryHeap`
+    /// reference or the `O(1)` adaptive calendar queue (the default).
+    /// Pop order is byte-identical either way — this knob trades only
+    /// constant factors, never results.
+    pub event_queue: QueueKind,
 }
 
 impl EngineConfig {
@@ -453,6 +476,7 @@ impl EngineConfig {
             deployment: DeploymentConfig::default(),
             speed_factors: Vec::new(),
             steal: false,
+            event_queue: QueueKind::default(),
         }
     }
 
@@ -497,47 +521,31 @@ enum EventKind {
     BatcherTimeout { replica: usize },
     StageStart { replica: usize, batch: SlabKey },
     StageDone { replica: usize, batch: SlabKey },
-    /// One host finished receiving re-hosted weights for deployment
-    /// `deploy_id`. Stale ids (superseded or cancelled deployments) are
-    /// ignored.
-    DeployTransferDone { replica: usize, deploy_id: u64, node: usize },
-    /// One host finished warming the units it received.
-    DeployWarmupDone { replica: usize, deploy_id: u64, node: usize },
-    /// Every transfer + warm-up finished: switch dispatch to the new
-    /// partition atomically.
-    DeployCutover { replica: usize, deploy_id: u64 },
+    /// Deployment lifecycle (transfer/warm-up/cut-over). Boxed: these
+    /// fire a handful of times per *failover* while the variants above
+    /// fire per request/stage, so their payload must not set the size
+    /// every queued event pays — the budget test below pins it.
+    Deploy(Box<DeployEvent>),
+}
+
+/// Payload of the rare deployment events, boxed out of [`EventKind`].
+#[derive(Debug)]
+struct DeployEvent {
+    replica: usize,
+    /// Stale ids (superseded or cancelled deployments) are ignored.
+    deploy_id: u64,
+    phase: DeployPhase,
 }
 
 #[derive(Debug)]
-struct Event {
-    at_ms: f64,
-    /// Monotone insertion index: FIFO tie-break keeps runs deterministic.
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Event) -> bool {
-        self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Event) -> Ordering {
-        // Inverted: BinaryHeap is a max-heap, we pop the earliest event.
-        other
-            .at_ms
-            .total_cmp(&self.at_ms)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Event) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
+enum DeployPhase {
+    /// One host finished receiving its re-hosted weights.
+    TransferDone { node: usize },
+    /// One host finished warming the units it received.
+    WarmupDone { node: usize },
+    /// Every transfer + warm-up finished: switch dispatch to the new
+    /// partition atomically.
+    Cutover,
 }
 
 // ---------------------------------------------------------------------------
@@ -617,7 +625,9 @@ struct Engine<'a, B: StageBackend, S: EventSink> {
     cfg: &'a EngineConfig,
     inputs: &'a HostTensor,
     router: Router,
-    heap: BinaryHeap<Event>,
+    /// The event core: heap or calendar per [`EngineConfig::event_queue`]
+    /// — pop order is `(at_ms, seq)`-exact either way.
+    events: AnyQueue<EventKind>,
     seq: u64,
     states: Vec<ReplicaState>,
     /// In-flight batches in a generational slab: slot reuse, O(1) access,
@@ -649,7 +659,7 @@ struct Engine<'a, B: StageBackend, S: EventSink> {
     /// Outstanding-request counter shared with the sharded router's
     /// feeder: decremented once per completion or drop so live routing
     /// sees this shard's backlog.
-    outstanding: Option<Arc<AtomicUsize>>,
+    outstanding: Option<Arc<CachePadded<AtomicUsize>>>,
     /// Per-replica platform speed factors (1.0 = nominal): every stage's
     /// service time is divided by its replica's factor. A shard's single
     /// entry carries its *global* replica's factor.
@@ -657,7 +667,7 @@ struct Engine<'a, B: StageBackend, S: EventSink> {
     /// Where a weighted-JSQ shard publishes its effective speed
     /// (platform factor ÷ worst observed degraded slowdown) on every
     /// raw condition change, for the feeder's drain-time ranking.
-    speed_cell: Option<Arc<AtomicU32>>,
+    speed_cell: Option<Arc<CachePadded<AtomicU32>>>,
     /// Cross-replica work-stealing handle (live-routed shards with
     /// [`EngineConfig::steal`] on). `None` everywhere else — the
     /// sequential engine rebalances its own queues directly.
@@ -1056,12 +1066,12 @@ struct ShardTask<'a, B, S> {
     failover: &'a mut Failover,
     plan: &'a FailurePlan,
     arrivals: ShardArrivals,
-    outstanding: Option<Arc<AtomicUsize>>,
+    outstanding: Option<Arc<CachePadded<AtomicUsize>>>,
     /// The replica's platform speed factor (1.0 = nominal).
     speed: f64,
     /// Where the shard publishes its effective speed (platform factor ÷
     /// worst observed degraded slowdown) for the weighted-JSQ feeder.
-    speed_cell: Option<Arc<AtomicU32>>,
+    speed_cell: Option<Arc<CachePadded<AtomicU32>>>,
     /// Work-stealing handle (live-routed sharding with stealing on).
     steal: Option<StealCtx>,
     /// The shard's observability sink, owned: a [`ChannelSink`] when the
@@ -1095,12 +1105,18 @@ impl StealPool {
 
     fn push(&self, reqs: VecDeque<Request>) {
         let mut items = self.items.lock().unwrap();
+        // Relaxed: `len` is only a victim-selection hint; the deque
+        // itself is mutated under the mutex, whose unlock/lock already
+        // orders the data for whoever takes the items.
         self.len.fetch_add(reqs.len(), AtomicOrdering::Relaxed);
         items.extend(reqs);
     }
 
     fn take_all(&self) -> Vec<Request> {
         let mut items = self.items.lock().unwrap();
+        // Relaxed: hint only, updated under the same mutex as the deque
+        // (see push) — a racing reader can pick a stale victim, never a
+        // wrong request.
         self.len.store(0, AtomicOrdering::Relaxed);
         items.drain(..).collect()
     }
@@ -1108,6 +1124,7 @@ impl StealPool {
     fn take_up_to(&self, n: usize) -> Vec<Request> {
         let mut items = self.items.lock().unwrap();
         let take = n.min(items.len());
+        // Relaxed: hint only, updated under the deque mutex (see push).
         self.len.fetch_sub(take, AtomicOrdering::Relaxed);
         items.drain(..take).collect()
     }
@@ -1120,7 +1137,7 @@ impl StealPool {
 struct StealCtx {
     me: usize,
     pools: Arc<Vec<StealPool>>,
-    outstanding: Vec<Arc<AtomicUsize>>,
+    outstanding: Vec<Arc<CachePadded<AtomicUsize>>>,
 }
 
 /// Build the per-shard [`ChannelSink`]s plus the receiver the caller
@@ -1224,7 +1241,8 @@ fn serve_sharded_jsq<B: StageBackend + Send, S: EventSink>(
     } else {
         None
     };
-    let counters: Vec<Arc<AtomicUsize>> = (0..replicas).map(|r| router.counter(r)).collect();
+    let counters: Vec<Arc<CachePadded<AtomicUsize>>> =
+        (0..replicas).map(|r| router.counter(r)).collect();
     let empty_plan = FailurePlan::none();
     let mut txs = Vec::with_capacity(replicas);
     let mut tasks = Vec::with_capacity(replicas);
@@ -1471,7 +1489,7 @@ impl<'a, B: StageBackend, S: EventSink> Engine<'a, B, S> {
             cfg,
             inputs,
             router: Router::with_speeds(cfg.route, &cfg.speed_factors),
-            heap: BinaryHeap::new(),
+            events: AnyQueue::new(cfg.event_queue),
             seq: 0,
             states,
             batches: Slab::new(),
@@ -1590,17 +1608,13 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
 
     fn push(&mut self, at_ms: f64, kind: EventKind) {
         self.seq += 1;
-        self.heap.push(Event {
-            at_ms,
-            seq: self.seq,
-            kind,
-        });
+        self.events.push(at_ms, self.seq, kind);
     }
 
     fn run(mut self) -> Result<ShardOutcome> {
         loop {
             // Top up from the live intake (if any) until the earliest
-            // heap event is at or before the arrival watermark.
+            // queued event is at or before the arrival watermark.
             self.pull_arrivals();
             // All traffic served and nothing queued or in flight: stop.
             // Matching the seed loop, failure events scheduled after the
@@ -1608,25 +1622,34 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             if self.is_done() {
                 break;
             }
-            let Some(ev) = self.heap.pop() else {
-                // An empty heap with stealing on can still mean work:
+            let Some((at_ms, _seq, kind)) = self.events.pop() else {
+                // An empty queue with stealing on can still mean work:
                 // our own offloads (reclaimable) or a backlogged
                 // sibling's pool. Dispatching refills from the pools and
-                // pushes stage events back onto the heap.
+                // pushes stage events back onto the queue.
                 if self.steal.is_some() {
                     for r in 0..self.states.len() {
                         self.try_dispatch(r, self.clock_ms)?;
                     }
-                    if !self.heap.is_empty() {
+                    if !self.events.is_empty() {
                         continue;
                     }
                 }
                 break;
             };
             self.events_processed += 1;
-            self.clock_ms = self.clock_ms.max(ev.at_ms);
+            // Every event the engine schedules is at or after the event
+            // being processed (the intake watermark extends that to
+            // channel-fed arrivals), so pops are non-decreasing in time
+            // whatever queue implementation runs.
+            debug_assert!(
+                at_ms >= self.clock_ms,
+                "event queue popped t={at_ms} behind the clock {}",
+                self.clock_ms
+            );
+            self.clock_ms = self.clock_ms.max(at_ms);
             let t = self.clock_ms;
-            match ev.kind {
+            match kind {
                 EventKind::Arrival { req, replica } => {
                     self.pending_arrivals -= 1;
                     let (r, routed) = match replica {
@@ -1768,31 +1791,33 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                 EventKind::StageDone { replica, batch } => {
                     self.on_stage_done(replica, batch, t)?;
                 }
-                EventKind::DeployTransferDone { replica, deploy_id, node } => {
-                    if self.deploys[replica].as_ref().is_some_and(|d| d.id == deploy_id) {
-                        self.emit(t, replica, EngineEventKind::TransferDone { node });
+                EventKind::Deploy(ev) => {
+                    let DeployEvent { replica, deploy_id, phase } = *ev;
+                    if !self.deploys[replica].as_ref().is_some_and(|d| d.id == deploy_id) {
+                        continue; // stale: superseded or cancelled deployment
                     }
-                }
-                EventKind::DeployWarmupDone { replica, deploy_id, node } => {
-                    if self.deploys[replica].as_ref().is_some_and(|d| d.id == deploy_id) {
-                        self.emit(t, replica, EngineEventKind::WarmupDone { node });
-                    }
-                }
-                EventKind::DeployCutover { replica, deploy_id } => {
-                    if self.deploys[replica].as_ref().is_some_and(|d| d.id == deploy_id) {
-                        let d = self.deploys[replica].take().unwrap();
-                        let w = &mut self.deploy_windows[d.window_idx];
-                        w.cutover_ms = t;
-                        w.completed = true;
-                        // Break-before-make stalled dispatch for the whole
-                        // window; make-before-break served on the fallback
-                        // and stalls nothing.
-                        let stalled_ms = if d.fallback.is_none() { t - d.start_ms } else { 0.0 };
-                        self.emit(t, replica, EngineEventKind::Cutover { node: d.node, stalled_ms });
-                        // The atomic switch: dispatch now uses the failover
-                        // mode's repartitioned plan. In-flight fallback
-                        // batches drain untouched; nothing requeues.
-                        self.try_dispatch(replica, t)?;
+                    match phase {
+                        DeployPhase::TransferDone { node } => {
+                            self.emit(t, replica, EngineEventKind::TransferDone { node });
+                        }
+                        DeployPhase::WarmupDone { node } => {
+                            self.emit(t, replica, EngineEventKind::WarmupDone { node });
+                        }
+                        DeployPhase::Cutover => {
+                            let d = self.deploys[replica].take().unwrap();
+                            let w = &mut self.deploy_windows[d.window_idx];
+                            w.cutover_ms = t;
+                            w.completed = true;
+                            // Break-before-make stalled dispatch for the whole
+                            // window; make-before-break served on the fallback
+                            // and stalls nothing.
+                            let stalled_ms = if d.fallback.is_none() { t - d.start_ms } else { 0.0 };
+                            self.emit(t, replica, EngineEventKind::Cutover { node: d.node, stalled_ms });
+                            // The atomic switch: dispatch now uses the failover
+                            // mode's repartitioned plan. In-flight fallback
+                            // batches drain untouched; nothing requeues.
+                            self.try_dispatch(replica, t)?;
+                        }
                     }
                 }
             }
@@ -1935,14 +1960,14 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             },
         );
         let warmup = self.cfg.deployment.warmup_ms;
+        let deploy_ev = |phase: DeployPhase| {
+            EventKind::Deploy(Box::new(DeployEvent { replica: r, deploy_id: id, phase }))
+        };
         for &(host, ms) in &transfers {
-            self.push(t + ms, EventKind::DeployTransferDone { replica: r, deploy_id: id, node: host });
-            self.push(
-                t + ms + warmup,
-                EventKind::DeployWarmupDone { replica: r, deploy_id: id, node: host },
-            );
+            self.push(t + ms, deploy_ev(DeployPhase::TransferDone { node: host }));
+            self.push(t + ms + warmup, deploy_ev(DeployPhase::WarmupDone { node: host }));
         }
-        self.push(cutover_ms, EventKind::DeployCutover { replica: r, deploy_id: id });
+        self.push(cutover_ms, deploy_ev(DeployPhase::Cutover));
         let window_idx = self.deploy_windows.len();
         self.deploy_windows.push(DeployWindow {
             replica: r,
@@ -1985,19 +2010,25 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             // Own offloads are still this shard's debt: it cannot exit
             // while they sit unreclaimed in its steal pool (a sibling
             // may still take them, but the owner is the backstop).
+            // Relaxed load: only the owner pushes into its own pool, and
+            // a thief's decrement moved the debt to the thief's counter
+            // under the pool mutex before this read can see it — a stale
+            // non-zero merely delays exit by one loop turn; zero is
+            // always truthful.
             && self
                 .steal
                 .as_ref()
                 .is_none_or(|c| c.pools[c.me].len.load(AtomicOrdering::Relaxed) == 0)
     }
 
-    /// Drain the live intake into the heap until the earliest heap event
-    /// is safely processable: the feeder sends arrivals in nondecreasing
-    /// time, so once the watermark reaches the earliest heap event no
-    /// later-fed request can precede it. Blocks on the channel while the
-    /// heap is empty or still ahead of the watermark; channel close
-    /// lifts the watermark to infinity (the shard drains). No-op without
-    /// an intake (preloaded shards and the sequential engine).
+    /// Drain the live intake into the event queue until its earliest
+    /// event is safely processable: the feeder sends arrivals in
+    /// nondecreasing time, so once the watermark reaches the earliest
+    /// queued event no later-fed request can precede it. Blocks on the
+    /// channel while the queue is empty or still ahead of the watermark;
+    /// channel close lifts the watermark to infinity (the shard drains).
+    /// No-op without an intake (preloaded shards and the sequential
+    /// engine).
     fn pull_arrivals(&mut self) {
         loop {
             let msg = {
@@ -2005,11 +2036,8 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
                 if !intake.open {
                     return;
                 }
-                if self
-                    .heap
-                    .peek()
-                    .is_some_and(|ev| ev.at_ms <= intake.watermark_ms)
-                {
+                let watermark = intake.watermark_ms;
+                if self.events.peek_time().is_some_and(|at| at <= watermark) {
                     return;
                 }
                 intake.rx.recv()
@@ -2037,6 +2065,10 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
     /// outside channel-fed sharding.
     fn note_request_retired(&self) {
         if let Some(c) = &self.outstanding {
+            // Relaxed: the counter is a routing heuristic the feeder
+            // samples — request hand-off itself synchronizes through the
+            // mpsc channel, so no data is published by this store. A
+            // momentarily stale count only skews one routing choice.
             c.fetch_sub(1, AtomicOrdering::Relaxed);
         }
     }
@@ -2062,6 +2094,10 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
     fn publish_speed(&self, r: usize) {
         if let Some(cell) = &self.speed_cell {
             let eff = self.effective_speed(r).max(1e-3);
+            // Relaxed: advisory weight for the feeder's drain-time
+            // ranking; no other data hangs off this store, and reading
+            // the previous speed for a moment routes suboptimally, not
+            // incorrectly.
             cell.store((eff * SPEED_MILLI) as u32, AtomicOrdering::Relaxed);
         }
     }
@@ -2106,6 +2142,9 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             let mut victim = None;
             let mut fullest = 0usize;
             for (i, p) in ctx.pools.iter().enumerate() {
+                // Relaxed: victim selection is heuristic — take_up_to
+                // re-checks the real deque under its mutex, so a stale
+                // size costs at worst a suboptimal (or empty) steal.
                 let l = p.len.load(AtomicOrdering::Relaxed);
                 if i != ctx.me && l > fullest {
                     fullest = l;
@@ -2115,6 +2154,11 @@ impl<B: StageBackend, S: EventSink> Engine<'_, B, S> {
             if let Some(v) = victim {
                 got = ctx.pools[v].take_up_to(self.max_batch());
                 if !got.is_empty() {
+                    // Relaxed: moves routing debt between two advisory
+                    // counters the feeder samples independently; the
+                    // requests themselves were handed over under the
+                    // pool mutex. The transient where both (or neither)
+                    // counter holds the debt only nudges one JSQ choice.
                     ctx.outstanding[v].fetch_sub(got.len(), AtomicOrdering::Relaxed);
                     ctx.outstanding[ctx.me].fetch_add(got.len(), AtomicOrdering::Relaxed);
                 }
@@ -2468,6 +2512,9 @@ mod tests {
             deployment: DeploymentConfig::default(),
             speed_factors: Vec::new(),
             steal: false,
+            // CI sweeps the whole module under both queues by exporting
+            // CONTINUER_QUEUE — results must not depend on the choice.
+            event_queue: QueueKind::from_env(),
         }
     }
 
@@ -2485,7 +2532,54 @@ mod tests {
             deployment: DeploymentConfig::default(),
             speed_factors: Vec::new(),
             steal: false,
+            event_queue: QueueKind::from_env(),
         }
+    }
+
+    #[test]
+    fn event_payload_stays_within_hot_path_budget() {
+        // The compaction contract: boxing the deployment payload keeps
+        // Arrival (Request + Option<usize>) the widest variant, and one
+        // queued entry — key plus payload — within a single cache line.
+        assert!(
+            std::mem::size_of::<EventKind>() <= 48,
+            "EventKind grew to {} bytes — box the new variant's payload",
+            std::mem::size_of::<EventKind>()
+        );
+        assert!(
+            crate::util::eventq::entry_size::<EventKind>() <= 64,
+            "a queued event entry is {} bytes — over one cache line",
+            crate::util::eventq::entry_size::<EventKind>()
+        );
+    }
+
+    #[test]
+    fn heap_and_calendar_reports_are_byte_identical() {
+        // Same seed, same fixture, both queue kinds: the full report —
+        // counters, histogram, windows, completions — must not differ by
+        // one byte (tests/sharded_equivalence.rs covers more modes).
+        let run = |kind: QueueKind| {
+            let mut backends = vec![
+                SyntheticBackend::uniform(4, 5.0, 1.0),
+                SyntheticBackend::uniform(4, 5.0, 1.0),
+            ];
+            let mut failovers = vec![
+                Failover::new(Objectives::default()),
+                Failover::new(Objectives::default()),
+            ];
+            let reqs = generate(80, Arrival::Poisson { rate_rps: 400.0 }, 8, 19);
+            let plans = vec![FailurePlan::crash_recover(2, 20.0, 60.0)];
+            let mut c = cfg(2, RoutePolicy::RoundRobin);
+            c.deadline_ms = Some(60.0);
+            c.event_queue = kind;
+            serve(&mut backends, &StaticMetrics, &mut failovers, &c, &reqs, &pool(), &plans)
+                .unwrap()
+        };
+        assert_eq!(
+            format!("{:?}", run(QueueKind::Heap)),
+            format!("{:?}", run(QueueKind::Calendar)),
+            "queue choice must never change a report"
+        );
     }
 
     fn clean_channel(detector: crate::health::DetectorKind, quarantine_ms: f64) -> HealthConfig {

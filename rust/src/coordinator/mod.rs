@@ -23,13 +23,32 @@
 //!   ranks replicas by expected drain time (`outstanding /
 //!   effective_speed`) so a detected `Degraded` replica sheds load
 //!   before any failover threshold trips.
-//! - [`engine`] is the event-driven serving core: a binary-heap event
-//!   queue (arrivals, failures, detections, batcher timeouts, stage
-//!   start/completion) with per-stage occupancy, so up to
-//!   `pipeline_depth` batches pipeline through each replica and replica
-//!   shards fail independently.
+//! - [`engine`] is the event-driven serving core: a pluggable min-queue
+//!   of timestamped events (arrivals, failures, detections, batcher
+//!   timeouts, stage start/completion) with per-stage occupancy, so up
+//!   to `pipeline_depth` batches pipeline through each replica and
+//!   replica shards fail independently.
 //! - [`service`] holds the report types and the seed-compatible
 //!   single-pipeline entry point.
+//!
+//! # Event core
+//!
+//! The engine pops events in exact `(time, push-sequence)` order from an
+//! [`crate::util::eventq::EventQueue`], selected per run by
+//! [`engine::EngineConfig::event_queue`]:
+//! [`QueueKind::Heap`](crate::util::eventq::QueueKind) is the
+//! `BinaryHeap` reference (`O(log n)` per operation);
+//! [`QueueKind::Calendar`](crate::util::eventq::QueueKind) — the
+//! default — is an adaptive calendar queue (power-of-two bucket array
+//! keyed by time, bucket width retuned from the observed inter-event
+//! gap on resize) with amortized `O(1)` push and pop at the
+//! million-event rates `benches/engine_scale.rs` drives. The two are
+//! interchangeable by construction, not by luck: both order by the
+//! identical `(at_ms, seq)` key, so pop order — and with it every
+//! [`service::ServiceReport`] — is byte-identical between them on the
+//! same seed (asserted per mode in `tests/sharded_equivalence.rs` and
+//! on arbitrary schedules in `tests/eventq_property.rs`). Each shard of
+//! a sharded run owns its own instance of the configured queue.
 //!
 //! # Repartition deployment
 //!
@@ -72,7 +91,7 @@
 //! `Sequential` is the single-threaded deterministic reference;
 //! `Sharded(workers)` runs one shard per replica on real threads
 //! ([`crate::util::threadpool`]). Everything a shard touches is already
-//! per-replica state — event heap, slab, plan cache, streaming metrics,
+//! per-replica state — event queue, slab, plan cache, streaming metrics,
 //! failover controller — so shards share nothing mutable: the positional
 //! policies (round-robin, weighted round-robin) are pre-split at
 //! generation time, the JSQ family is fed live over channels routed by
@@ -140,7 +159,8 @@ pub use estimator::{Estimator, MetricsSource, StaticMetrics};
 pub use failover::{Failover, FailoverReport, Mode};
 pub use policy::{Continuer, RecoveryPolicy};
 pub use profiler::{fit_platform, platform_transform, DowntimeTable, LayerProfiler, PlatformLatencyModel};
-pub use router::{ReplicaLoad, RoutePolicy, Router, ShardRouter, WrrState};
+pub use crate::util::eventq::QueueKind;
+pub use router::{CachePadded, ReplicaLoad, RoutePolicy, Router, ShardRouter, WrrState};
 pub use scheduler::{select, weight_sweep, CandidateMetrics, Decision};
 pub use service::{
     Completion, DeployMode, DeployWindow, DroppedRequest, FailoverWindow, ServiceConfig,

@@ -47,6 +47,32 @@ use std::sync::Arc;
 /// an [`AtomicU32`] holds `speed * 1000` (1.0× = 1000 milli-units).
 pub const SPEED_MILLI: f64 = 1000.0;
 
+/// Pads (and aligns) a value to its own 64-byte cache line so two
+/// replicas' hot atomic cells never share one. Without this, the
+/// per-replica [`AtomicUsize`] counters allocate a few bytes apart and
+/// every shard's decrement invalidates the line the feeder — and every
+/// *other* shard — is hammering: classic false sharing. `Deref` keeps
+/// call sites (`cell.load(..)`, `cell.fetch_sub(..)`) unchanged.
+///
+/// 64 bytes covers x86-64 and most aarch64 parts; on CPUs with larger
+/// lines this merely under-pads — correctness never depends on it.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct CachePadded<T>(pub T);
+
+impl<T> CachePadded<T> {
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded(value)
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
@@ -253,11 +279,14 @@ impl Router {
 pub struct ShardRouter {
     policy: RoutePolicy,
     next_rr: usize,
-    outstanding: Vec<Arc<AtomicUsize>>,
+    /// One cache line per replica ([`CachePadded`]): the feeder's scan
+    /// of replica `i` must not stall on replica `j`'s shard retiring a
+    /// request into an adjacent counter.
+    outstanding: Vec<Arc<CachePadded<AtomicUsize>>>,
     /// Milli-units ([`SPEED_MILLI`]): 1000 = 1.0×. Initialised from the
     /// static speed factors; shards overwrite with condition-adjusted
     /// estimates as they observe degradations.
-    speeds: Vec<Arc<AtomicU32>>,
+    speeds: Vec<Arc<CachePadded<AtomicU32>>>,
     wrr: WrrState,
 }
 
@@ -275,11 +304,15 @@ impl ShardRouter {
             next_rr: 0,
             outstanding: speed_factors
                 .iter()
-                .map(|_| Arc::new(AtomicUsize::new(0)))
+                .map(|_| Arc::new(CachePadded::new(AtomicUsize::new(0))))
                 .collect(),
             speeds: speed_factors
                 .iter()
-                .map(|s| Arc::new(AtomicU32::new((s.max(1e-6) * SPEED_MILLI) as u32)))
+                .map(|s| {
+                    Arc::new(CachePadded::new(AtomicU32::new(
+                        (s.max(1e-6) * SPEED_MILLI) as u32,
+                    )))
+                })
                 .collect(),
             wrr: WrrState::new(speed_factors),
         }
@@ -287,7 +320,7 @@ impl ShardRouter {
 
     /// Replica `r`'s outstanding counter, to hand to its shard (which
     /// decrements it once per completion or drop).
-    pub fn counter(&self, r: usize) -> Arc<AtomicUsize> {
+    pub fn counter(&self, r: usize) -> Arc<CachePadded<AtomicUsize>> {
         Arc::clone(&self.outstanding[r])
     }
 
@@ -295,7 +328,7 @@ impl ShardRouter {
     /// hand to its shard — the shard stores `static_factor /
     /// worst_observed_slowdown` whenever a raw condition flips, and the
     /// weighted feeder reads it on every route.
-    pub fn speed_cell(&self, r: usize) -> Arc<AtomicU32> {
+    pub fn speed_cell(&self, r: usize) -> Arc<CachePadded<AtomicU32>> {
         Arc::clone(&self.speeds[r])
     }
 
@@ -320,8 +353,15 @@ impl ShardRouter {
                 let mut best_key = f64::INFINITY;
                 for k in 0..n {
                     let i = (start + k) % n;
+                    // Relaxed: a momentarily stale count mis-ranks one
+                    // arrival, never loses one — request hand-off to the
+                    // shard synchronizes through the mpsc channel, and
+                    // conservation is property-tested independently.
                     let out = self.outstanding[i].load(Ordering::Relaxed) as f64;
                     let key = if weighted {
+                        // Relaxed: advisory estimate; reading the
+                        // pre-degradation speed routes suboptimally for
+                        // a few arrivals, not incorrectly.
                         let milli = self.speeds[i].load(Ordering::Relaxed).max(1);
                         out / (milli as f64 / SPEED_MILLI)
                     } else {
@@ -335,6 +375,10 @@ impl ShardRouter {
                 best
             }
         };
+        // Relaxed: the charge only needs to be *eventually* visible to
+        // the feeder's own later scans (same thread — program order) and
+        // the shard's decrement (balanced via fetch_sub; the counter is
+        // a routing hint, not the conservation ledger).
         self.outstanding[r].fetch_add(1, Ordering::Relaxed);
         r
     }

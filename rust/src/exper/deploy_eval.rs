@@ -123,6 +123,7 @@ fn run_arm(
         record_completions: false,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: DeploymentConfig {
             mode,

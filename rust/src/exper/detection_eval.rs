@@ -98,6 +98,7 @@ fn run_point_with(
         record_completions: false,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

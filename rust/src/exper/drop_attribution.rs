@@ -107,6 +107,7 @@ fn run_deadline(deadline_ms: f64, seed: u64) -> Result<(DeadlinePoint, ServiceRe
         record_completions: false,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: Default::default(),
     };

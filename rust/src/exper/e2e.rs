@@ -185,6 +185,7 @@ fn run_e2e_with_sink<S: EventSink>(
         record_completions: true,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         // PJRT clusters hold RefCell caches and cannot cross threads.
         execution: Execution::Sequential,
         deployment: Default::default(),

@@ -69,6 +69,7 @@ pub fn record_with(
         record_completions: false,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution,
         deployment: Default::default(),
     };

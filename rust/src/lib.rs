@@ -51,10 +51,15 @@
 //!   path materializes batches in one gather), and latency metrics
 //!   stream into a log-bucketed histogram + online moments so run memory
 //!   is O(1) in request count (exact per-request records return behind
-//!   `EngineConfig::record_completions`). Under
+//!   `EngineConfig::record_completions`). The event core itself is
+//!   pluggable (`EngineConfig::event_queue`): the `BinaryHeap` reference
+//!   or — the default — an adaptive calendar queue
+//!   ([`util::eventq`]) with amortized O(1) push/pop at million-event
+//!   rates; both pop in exact `(time, seq)` order, so same-seed reports
+//!   are byte-identical whichever queue runs. Under
 //!   `EngineConfig::execution: Sharded(workers)` the event loop itself
-//!   shards per replica onto real threads — each shard owns its heap,
-//!   slab, plan cache and streaming metrics; arrivals are positionally
+//!   shards per replica onto real threads — each shard owns its event
+//!   queue, slab, plan cache and streaming metrics; arrivals are positionally
 //!   pre-split (round-robin / weighted round-robin) or JSQ-fed over
 //!   atomic load counters and shard-published speed estimates; live-routed
 //!   shards can additionally steal queued work from each other through

@@ -1,0 +1,573 @@
+//! Event-queue core for the serving engine: an [`EventQueue`] trait with
+//! two interchangeable implementations.
+//!
+//! - [`HeapQueue`] — the original [`BinaryHeap`] min-queue, kept as the
+//!   reference implementation. `O(log n)` push/pop.
+//! - [`CalendarQueue`] — an adaptive calendar queue (the timer-wheel
+//!   family): a power-of-two array of buckets ("days"), each one bucket
+//!   width of virtual time wide, with a cursor walking the current day.
+//!   Push hashes `at_ms` to its day in `O(1)`; pop takes the current
+//!   day's earliest entry in `O(1)` amortized. The bucket count doubles/
+//!   halves with occupancy, and on every resize the bucket width is
+//!   retuned to the observed mean inter-event gap, so the structure
+//!   tracks whatever event density the simulation produces.
+//!
+//! Both order strictly by `(at_ms, seq)` — exact `f64::total_cmp` time,
+//! monotone insertion index as the FIFO tie-break — so pop order, and
+//! therefore every `ServiceReport` the engine produces, is byte-identical
+//! whichever implementation runs. That equivalence is enforced by
+//! `tests/eventq_property.rs` (arbitrary push/pop schedules) and the
+//! same-seed report tests in `tests/sharded_equivalence.rs`.
+//!
+//! [`QueueKind`] selects the implementation through
+//! [`EngineConfig::event_queue`](crate::coordinator::engine::EngineConfig::event_queue);
+//! [`AnyQueue`] is the enum the engine actually holds (static dispatch,
+//! no boxing on the hot path).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A min-queue of `(at_ms, seq)`-keyed events. Pop order is strictly
+/// ascending `(at_ms, seq)` under `f64::total_cmp` — every
+/// implementation must be exchangeable without changing a single popped
+/// byte.
+pub trait EventQueue<T> {
+    /// Insert an event. `seq` is the caller's monotone insertion index;
+    /// it breaks same-timestamp ties FIFO.
+    fn push(&mut self, at_ms: f64, seq: u64, item: T);
+    /// Remove and return the earliest event.
+    fn pop(&mut self) -> Option<(f64, u64, T)>;
+    /// Earliest pending event time without removing it. Takes `&mut`
+    /// because the calendar implementation advances its day cursor past
+    /// empty buckets while searching.
+    fn peek_time(&mut self) -> Option<f64>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Which [`EventQueue`] implementation the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// The [`BinaryHeap`] reference implementation (`O(log n)`).
+    Heap,
+    /// The adaptive calendar queue (`O(1)` amortized) — the default;
+    /// byte-identical pop order to [`QueueKind::Heap`].
+    #[default]
+    Calendar,
+}
+
+impl QueueKind {
+    /// Parse a `--queue` style argument.
+    pub fn parse(s: &str) -> Option<QueueKind> {
+        match s {
+            "heap" => Some(QueueKind::Heap),
+            "calendar" => Some(QueueKind::Calendar),
+            _ => None,
+        }
+    }
+
+    /// Queue kind from the `CONTINUER_QUEUE` environment variable
+    /// (`heap` or `calendar`), defaulting to [`QueueKind::Calendar`].
+    /// CI uses this to sweep the engine's own unit tests under both
+    /// implementations without re-plumbing every test helper.
+    pub fn from_env() -> QueueKind {
+        match std::env::var("CONTINUER_QUEUE") {
+            Ok(v) => QueueKind::parse(&v).unwrap_or_default(),
+            Err(_) => QueueKind::default(),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QueueKind::Heap => "heap",
+            QueueKind::Calendar => "calendar",
+        }
+    }
+}
+
+/// One queued event. Size matters: the engine's hot-path compaction
+/// budget test guards [`entry_size`] of its event payload.
+#[derive(Debug)]
+struct Entry<T> {
+    at_ms: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> Entry<T> {
+    /// Total order shared by both implementations: exact time, then
+    /// insertion index.
+    fn key_cmp(&self, at_ms: f64, seq: u64) -> Ordering {
+        self.at_ms.total_cmp(&at_ms).then(self.seq.cmp(&seq))
+    }
+}
+
+/// Size in bytes of one queued entry carrying payload `T` — what the
+/// engine's event-size budget test bounds.
+pub const fn entry_size<T>() -> usize {
+    std::mem::size_of::<Entry<T>>()
+}
+
+// ---------------------------------------------------------------------------
+// HeapQueue: the BinaryHeap reference
+// ---------------------------------------------------------------------------
+
+struct HeapEntry<T>(Entry<T>);
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &HeapEntry<T>) -> bool {
+        self.0.seq == other.0.seq
+    }
+}
+
+impl<T> Eq for HeapEntry<T> {}
+
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &HeapEntry<T>) -> Ordering {
+        // Inverted: BinaryHeap is a max-heap, we pop the earliest event.
+        other.0.key_cmp(self.0.at_ms, self.0.seq)
+    }
+}
+
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &HeapEntry<T>) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The original engine queue: a [`BinaryHeap`] with inverted `(at_ms,
+/// seq)` ordering. Kept as the reference every other implementation must
+/// match pop-for-pop.
+pub struct HeapQueue<T> {
+    heap: BinaryHeap<HeapEntry<T>>,
+}
+
+impl<T> Default for HeapQueue<T> {
+    fn default() -> HeapQueue<T> {
+        HeapQueue { heap: BinaryHeap::new() }
+    }
+}
+
+impl<T> HeapQueue<T> {
+    pub fn new() -> HeapQueue<T> {
+        HeapQueue::default()
+    }
+}
+
+impl<T> EventQueue<T> for HeapQueue<T> {
+    fn push(&mut self, at_ms: f64, seq: u64, item: T) {
+        self.heap.push(HeapEntry(Entry { at_ms, seq, item }));
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, T)> {
+        self.heap.pop().map(|e| (e.0.at_ms, e.0.seq, e.0.item))
+    }
+
+    fn peek_time(&mut self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.at_ms)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CalendarQueue: adaptive power-of-two calendar
+// ---------------------------------------------------------------------------
+
+/// Smallest bucket array; also the floor the shrink path stops at.
+const MIN_BUCKETS: usize = 8;
+/// Grow when occupancy exceeds `buckets * GROW_AT`; shrink below
+/// `buckets / SHRINK_AT`. The 8x gap between the thresholds is the
+/// hysteresis that keeps a queue hovering near a boundary from
+/// thrashing rebuilds.
+const GROW_AT: usize = 2;
+const SHRINK_AT: usize = 4;
+/// Bucket width is retuned to `WIDTH_GAPS x` the observed mean
+/// inter-event gap on every resize: a few events per bucket-day keeps
+/// both the per-pop scan and the per-push insert O(1) amortized.
+const WIDTH_GAPS: f64 = 4.0;
+
+/// An adaptive calendar queue (Brown 1988): `O(1)` amortized push and
+/// pop against the heap's `O(log n)`, with pop order byte-identical to
+/// [`HeapQueue`].
+///
+/// Geometry: `buckets.len()` is a power of two; bucket `b` holds every
+/// entry whose *day* `floor((at_ms - origin) / width)` satisfies
+/// `day & mask == b`. Each bucket is kept sorted by `(at_ms, seq)`
+/// *descending*, so its earliest entry pops from the back in `O(1)` and
+/// a push binary-searches its slot (buckets hold ~`WIDTH_GAPS` entries
+/// on average, so the insert memmove is constant-sized). The cursor
+/// `cur_day` maintains the invariant that no entry's day precedes it:
+/// pop serves the cursor's day or walks forward; a push behind the
+/// cursor (rare — the engine's pops are non-decreasing) rewinds it.
+///
+/// A full empty lap of the wheel means the pending events are sparse
+/// relative to the bucket width (e.g. a far-future failure event after
+/// traffic drains); pop then jumps the cursor straight to the earliest
+/// entry instead of stepping day by day.
+pub struct CalendarQueue<T> {
+    buckets: Vec<Vec<Entry<T>>>,
+    /// `buckets.len() - 1`; day → bucket is a mask, not a modulo.
+    mask: u64,
+    /// Virtual-time width of one day, ms.
+    width: f64,
+    inv_width: f64,
+    /// Virtual time of day 0's left edge. Re-anchored whenever the
+    /// queue drains empty so day indices stay small.
+    origin: f64,
+    /// The earliest day any entry may occupy.
+    cur_day: u64,
+    len: usize,
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> CalendarQueue<T> {
+        CalendarQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: (MIN_BUCKETS - 1) as u64,
+            // Arbitrary starting width; the first resize retunes it to
+            // the observed event density.
+            width: 1.0,
+            inv_width: 1.0,
+            origin: 0.0,
+            cur_day: 0,
+            len: 0,
+        }
+    }
+}
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> CalendarQueue<T> {
+        CalendarQueue::default()
+    }
+
+    fn day_of(&self, at_ms: f64) -> u64 {
+        if at_ms <= self.origin {
+            return 0;
+        }
+        // Saturating float → int cast: absurdly far futures all land on
+        // the last representable day, which still orders correctly
+        // because intra-bucket order is exact `(at_ms, seq)`.
+        ((at_ms - self.origin) * self.inv_width) as u64
+    }
+
+    fn insert_entry(&mut self, e: Entry<T>) {
+        let day = self.day_of(e.at_ms);
+        if day < self.cur_day {
+            // A push behind the cursor (the engine never does this on
+            // its hot path, but nothing forbids it): rewind so the
+            // "no entry precedes cur_day" invariant holds.
+            self.cur_day = day;
+        }
+        let bucket = &mut self.buckets[(day & self.mask) as usize];
+        // Descending (at_ms, seq): the bucket's earliest entry sits at
+        // the back, where pop removes in O(1).
+        let pos = bucket.partition_point(|q| q.key_cmp(e.at_ms, e.seq) == Ordering::Greater);
+        bucket.insert(pos, e);
+    }
+
+    /// Drain everything, retune the bucket width to the observed mean
+    /// inter-event gap, re-anchor the origin at the earliest entry, and
+    /// reinsert into `new_buckets` buckets.
+    fn rebuild(&mut self, new_buckets: usize) {
+        let mut entries: Vec<Entry<T>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            entries.append(b);
+        }
+        let mut min_t = f64::INFINITY;
+        let mut max_t = f64::NEG_INFINITY;
+        for e in &entries {
+            min_t = min_t.min(e.at_ms);
+            max_t = max_t.max(e.at_ms);
+        }
+        if entries.len() >= 2 && max_t > min_t {
+            let gap = (max_t - min_t) / (entries.len() - 1) as f64;
+            let width = gap * WIDTH_GAPS;
+            if width.is_finite() && width > 0.0 {
+                self.width = width;
+                self.inv_width = 1.0 / width;
+            }
+        }
+        if min_t.is_finite() {
+            self.origin = min_t;
+        }
+        self.cur_day = 0;
+        if self.buckets.len() != new_buckets {
+            self.buckets = (0..new_buckets).map(|_| Vec::new()).collect();
+            self.mask = (new_buckets - 1) as u64;
+        }
+        for e in entries {
+            self.insert_entry(e);
+        }
+    }
+
+    fn maybe_resize(&mut self) {
+        let nb = self.buckets.len();
+        if self.len > nb * GROW_AT {
+            self.rebuild(nb * 2);
+        } else if nb > MIN_BUCKETS && self.len < nb / SHRINK_AT {
+            self.rebuild(nb / 2);
+        }
+    }
+
+    /// The earliest entry's bucket index — a direct `O(buckets)` search
+    /// used after a full lap of the wheel finds nothing in its own day
+    /// (the sparse-queue regime). Each bucket's candidate is its back
+    /// entry (the bucket minimum), so the scan is one comparison per
+    /// bucket.
+    fn min_bucket(&self) -> Option<usize> {
+        let mut best: Option<(usize, f64, u64)> = None;
+        for (i, bucket) in self.buckets.iter().enumerate() {
+            if let Some(e) = bucket.last() {
+                let better = match best {
+                    None => true,
+                    Some((_, t, s)) => e.key_cmp(t, s) == Ordering::Less,
+                };
+                if better {
+                    best = Some((i, e.at_ms, e.seq));
+                }
+            }
+        }
+        best.map(|(i, _, _)| i)
+    }
+}
+
+impl<T> EventQueue<T> for CalendarQueue<T> {
+    fn push(&mut self, at_ms: f64, seq: u64, item: T) {
+        if self.len == 0 && at_ms.is_finite() {
+            // Empty queue: re-anchor the calendar at this event so day
+            // indices restart from zero whatever virtual time it is.
+            self.origin = at_ms;
+            self.cur_day = 0;
+        }
+        self.insert_entry(Entry { at_ms, seq, item });
+        self.len += 1;
+        self.maybe_resize();
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        // Walk at most one lap: every entry's day is >= cur_day, a day
+        // maps to exactly one bucket, and a bucket's back entry is its
+        // minimum — so the first back entry found within its own day is
+        // the global (at_ms, seq) minimum.
+        for _ in 0..self.buckets.len() {
+            let b = (self.cur_day & self.mask) as usize;
+            let due = self.buckets[b]
+                .last()
+                .is_some_and(|e| self.day_of(e.at_ms) <= self.cur_day);
+            if due {
+                let e = self.buckets[b].pop().expect("checked non-empty");
+                self.len -= 1;
+                self.maybe_resize();
+                return Some((e.at_ms, e.seq, e.item));
+            }
+            // Saturating: if day_of ever pinned an entry to u64::MAX,
+            // the lap degrades to the min_bucket jump below.
+            self.cur_day = self.cur_day.saturating_add(1);
+        }
+        // Sparse regime: jump to the earliest entry directly.
+        let b = self.min_bucket().expect("len > 0 must have an entry");
+        let e = self.buckets[b].pop().expect("min bucket is non-empty");
+        // Everything else is strictly later (exact-tie at_ms shares the
+        // popped entry's day), so the cursor may jump forward to it.
+        self.cur_day = self.day_of(e.at_ms);
+        self.len -= 1;
+        self.maybe_resize();
+        Some((e.at_ms, e.seq, e.item))
+    }
+
+    fn peek_time(&mut self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        for _ in 0..self.buckets.len() {
+            let b = (self.cur_day & self.mask) as usize;
+            if let Some(e) = self.buckets[b].last() {
+                if self.day_of(e.at_ms) <= self.cur_day {
+                    return Some(e.at_ms);
+                }
+            }
+            self.cur_day = self.cur_day.saturating_add(1);
+        }
+        let b = self.min_bucket().expect("len > 0 must have an entry");
+        let e = self.buckets[b].last().expect("min bucket is non-empty");
+        let (at, day) = (e.at_ms, self.day_of(e.at_ms));
+        // Safe to fast-forward: nothing precedes the minimum.
+        self.cur_day = day;
+        Some(at)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AnyQueue: the engine's runtime-selected queue
+// ---------------------------------------------------------------------------
+
+/// The queue the engine holds: selected once from
+/// [`QueueKind`] at construction, then statically dispatched per call
+/// (a two-arm match, not a vtable).
+pub enum AnyQueue<T> {
+    Heap(HeapQueue<T>),
+    Calendar(CalendarQueue<T>),
+}
+
+impl<T> AnyQueue<T> {
+    pub fn new(kind: QueueKind) -> AnyQueue<T> {
+        match kind {
+            QueueKind::Heap => AnyQueue::Heap(HeapQueue::new()),
+            QueueKind::Calendar => AnyQueue::Calendar(CalendarQueue::new()),
+        }
+    }
+}
+
+impl<T> EventQueue<T> for AnyQueue<T> {
+    fn push(&mut self, at_ms: f64, seq: u64, item: T) {
+        match self {
+            AnyQueue::Heap(q) => q.push(at_ms, seq, item),
+            AnyQueue::Calendar(q) => q.push(at_ms, seq, item),
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, u64, T)> {
+        match self {
+            AnyQueue::Heap(q) => q.pop(),
+            AnyQueue::Calendar(q) => q.pop(),
+        }
+    }
+
+    fn peek_time(&mut self) -> Option<f64> {
+        match self {
+            AnyQueue::Heap(q) => q.peek_time(),
+            AnyQueue::Calendar(q) => q.peek_time(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            AnyQueue::Heap(q) => q.len(),
+            AnyQueue::Calendar(q) => q.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<Q: EventQueue<u64>>(q: &mut Q) -> Vec<(f64, u64, u64)> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q = CalendarQueue::new();
+        q.push(5.0, 1, 1);
+        q.push(1.0, 2, 2);
+        q.push(5.0, 3, 3);
+        q.push(0.5, 4, 4);
+        assert_eq!(q.peek_time(), Some(0.5));
+        let order: Vec<u64> = drain(&mut q).into_iter().map(|(_, _, x)| x).collect();
+        assert_eq!(order, vec![4, 2, 1, 3], "time order, FIFO on the 5.0 tie");
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn matches_heap_through_grow_and_shrink() {
+        // Enough entries to force several doublings, then a full drain
+        // through the shrink path; clustered times force ties.
+        let mut cal = CalendarQueue::new();
+        let mut heap = HeapQueue::new();
+        let mut seq = 0u64;
+        let mut push = |cal: &mut CalendarQueue<u64>, heap: &mut HeapQueue<u64>, t: f64| {
+            seq += 1;
+            cal.push(t, seq, seq);
+            heap.push(t, seq, seq);
+        };
+        for i in 0..500u64 {
+            // Mixed density: ms-scale traffic plus far-future outliers.
+            let t = match i % 7 {
+                0 => (i / 7) as f64,
+                6 => 1e5 + i as f64,
+                _ => (i as f64 * 0.37) % 40.0,
+            };
+            push(&mut cal, &mut heap, t);
+        }
+        assert_eq!(cal.len(), heap.len());
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_consistent() {
+        // Engine-shaped schedule: pops are non-decreasing and pushes
+        // land at or after the last popped time.
+        let mut cal = CalendarQueue::new();
+        let mut heap = HeapQueue::new();
+        let mut seq = 0u64;
+        let mut clock = 0.0f64;
+        for round in 0..200u64 {
+            for k in 0..3 {
+                seq += 1;
+                let t = clock + (round * 3 + k) as f64 * 0.11;
+                cal.push(t, seq, seq);
+                heap.push(t, seq, seq);
+            }
+            let a = cal.pop();
+            let b = heap.pop();
+            assert_eq!(a, b);
+            clock = a.expect("just pushed").0;
+            assert_eq!(cal.peek_time(), heap.peek_time());
+        }
+        assert_eq!(drain(&mut cal), drain(&mut heap));
+    }
+
+    #[test]
+    fn sparse_far_future_events_pop_without_walking_days() {
+        // A handful of events separated by ~1e9x the bucket width: the
+        // lap-then-jump path must find them (and in order).
+        let mut q = CalendarQueue::new();
+        for (i, t) in [0.001, 1e6, 2e9, 3e12].iter().enumerate() {
+            q.push(*t, i as u64 + 1, i as u64);
+        }
+        let order: Vec<f64> = drain(&mut q).into_iter().map(|(t, _, _)| t).collect();
+        assert_eq!(order, vec![0.001, 1e6, 2e9, 3e12]);
+    }
+
+    #[test]
+    fn reanchors_after_draining_empty() {
+        let mut q = CalendarQueue::new();
+        q.push(1e12, 1, 1);
+        assert_eq!(q.pop().map(|e| e.2), Some(1));
+        // A fresh burst at tiny times after a far-future drain must not
+        // strand the cursor.
+        q.push(0.5, 2, 2);
+        q.push(0.25, 3, 3);
+        assert_eq!(q.pop().map(|e| e.2), Some(3));
+        assert_eq!(q.pop().map(|e| e.2), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_kind_parses_and_defaults() {
+        assert_eq!(QueueKind::parse("heap"), Some(QueueKind::Heap));
+        assert_eq!(QueueKind::parse("calendar"), Some(QueueKind::Calendar));
+        assert_eq!(QueueKind::parse("wheel"), None);
+        assert_eq!(QueueKind::default(), QueueKind::Calendar);
+        assert_eq!(QueueKind::Heap.label(), "heap");
+        assert_eq!(QueueKind::Calendar.label(), "calendar");
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod eventq;
 pub mod histogram;
 pub mod json;
 pub mod proptest;

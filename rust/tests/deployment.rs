@@ -48,6 +48,7 @@ fn cfg(mode: DeployMode, warmup_ms: f64, deadline_ms: Option<f64>) -> EngineConf
         record_completions: true,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: DeploymentConfig { mode, warmup_ms },
     }

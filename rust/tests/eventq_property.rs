@@ -1,0 +1,165 @@
+//! Property suite for the event-queue implementations: the adaptive
+//! calendar queue must pop in *exactly* the order the `BinaryHeap`
+//! reference does — same times, same seqs, same items — under arbitrary
+//! push/pop schedules. Every engine result rides on this equivalence
+//! (`EngineConfig::event_queue` defaults to `Calendar`), so the
+//! properties push hard on the calendar's edge cases: same-timestamp
+//! ties, grow/shrink rebuilds, sparse far-future schedules, and
+//! interleaved pops that rewind the bucket cursor.
+
+use continuer::util::eventq::{
+    AnyQueue, CalendarQueue, EventQueue, HeapQueue, QueueKind,
+};
+use continuer::util::proptest::{check, prop_assert, prop_assert_eq, PropResult};
+
+/// Drive both queues through the same schedule of pushes (with
+/// occasional interleaved pops) and assert every pop — and every
+/// `peek_time` — agrees. `ops` is a list of (time, item) pushes; a
+/// `None` slot pops from both instead.
+fn lockstep(ops: &[Option<(f64, u32)>]) -> PropResult {
+    let mut heap = HeapQueue::new();
+    let mut cal = CalendarQueue::new();
+    let mut seq = 0u64;
+    for op in ops {
+        match op {
+            Some((t, item)) => {
+                seq += 1;
+                heap.push(*t, seq, *item);
+                cal.push(*t, seq, *item);
+            }
+            None => {
+                prop_assert_eq(heap.pop(), cal.pop())?;
+            }
+        }
+        prop_assert_eq(heap.peek_time(), cal.peek_time())?;
+        prop_assert_eq(heap.len(), cal.len())?;
+    }
+    while !heap.is_empty() || !cal.is_empty() {
+        prop_assert_eq(heap.pop(), cal.pop())?;
+    }
+    Ok(())
+}
+
+#[test]
+fn calendar_matches_heap_on_arbitrary_schedules() {
+    check(200, 0xE7E, |g| {
+        let n = g.usize(1, 120);
+        let horizon = g.f64(1.0, 5_000.0);
+        let ops: Vec<Option<(f64, u32)>> = (0..n)
+            .map(|i| {
+                if g.bool() && i > 0 {
+                    None // interleaved pop
+                } else {
+                    Some((g.f64(0.0, horizon), i as u32))
+                }
+            })
+            .collect();
+        lockstep(&ops)
+    });
+}
+
+#[test]
+fn same_timestamp_ties_pop_in_seq_order() {
+    // Clusters of identical timestamps: the FIFO tie-break is the whole
+    // determinism contract, and in the calendar it exercises the
+    // intra-bucket (at_ms, seq) ordering rather than bucket selection.
+    check(200, 0x71E5, |g| {
+        let n_times = g.usize(1, 8);
+        let times: Vec<f64> = (0..n_times).map(|_| g.f64(0.0, 100.0)).collect();
+        let n = g.usize(1, 80);
+        let ops: Vec<Option<(f64, u32)>> = (0..n)
+            .map(|i| {
+                if g.bool() && i > 2 {
+                    None
+                } else {
+                    Some((*g.pick(&times), i as u32))
+                }
+            })
+            .collect();
+        lockstep(&ops)
+    });
+}
+
+#[test]
+fn resize_boundaries_preserve_order() {
+    // Push far past the grow threshold (len > 2 × buckets, starting at
+    // 8), drain below the shrink threshold, push again: every rebuild
+    // retunes the bucket width from observed gaps and must not disturb
+    // the pop order.
+    check(60, 0x9E51, |g| {
+        let mut ops: Vec<Option<(f64, u32)>> = Vec::new();
+        let mut item = 0u32;
+        for _wave in 0..g.usize(1, 4) {
+            let pushes = g.usize(20, 120); // well past 2×8
+            let scale = g.f64(0.01, 1_000.0); // retune target varies per wave
+            for _ in 0..pushes {
+                ops.push(Some((g.f64(0.0, scale), item)));
+                item += 1;
+            }
+            for _ in 0..g.usize(10, pushes) {
+                ops.push(None); // drain through the shrink threshold
+            }
+        }
+        lockstep(&ops)
+    });
+}
+
+#[test]
+fn monotone_engine_shaped_schedules_match() {
+    // The engine's real pattern: pops advance a virtual clock and every
+    // push lands at or after it (the watermark invariant), so the
+    // calendar's cursor only ever moves forward. Sparse heartbeat-like
+    // far-future events ride along.
+    check(100, 0xC10C, |g| {
+        let mut heap = HeapQueue::new();
+        let mut cal = CalendarQueue::new();
+        let mut seq = 0u64;
+        let mut clock = 0.0f64;
+        for i in 0..g.usize(10, 200) {
+            if g.bool() || heap.is_empty() {
+                seq += 1;
+                let far = if g.rng().bool(0.1) { 1_000.0 } else { 1.0 };
+                let t = clock + g.f64(0.0, 20.0) * far;
+                heap.push(t, seq, i as u32);
+                cal.push(t, seq, i as u32);
+            } else {
+                let a = heap.pop();
+                let b = cal.pop();
+                prop_assert_eq(a, b)?;
+                if let Some((t, _, _)) = a {
+                    prop_assert(t >= clock, "pops must be non-decreasing")?;
+                    clock = t;
+                }
+            }
+        }
+        while let Some(a) = heap.pop() {
+            prop_assert_eq(Some(a), cal.pop())?;
+        }
+        prop_assert(cal.pop().is_none(), "calendar must drain with the heap")
+    });
+}
+
+#[test]
+fn any_queue_dispatch_matches_direct_implementations() {
+    // AnyQueue is what the engine actually holds: both kinds must
+    // behave exactly like the queue they wrap.
+    check(60, 0xA17, |g| {
+        let mut any_heap = AnyQueue::new(QueueKind::Heap);
+        let mut any_cal = AnyQueue::new(QueueKind::Calendar);
+        let mut reference = HeapQueue::new();
+        for s in 0..g.usize(1, 100) as u64 {
+            let t = g.f64(0.0, 500.0);
+            any_heap.push(t, s, s);
+            any_cal.push(t, s, s);
+            reference.push(t, s, s);
+        }
+        while let Some(want) = reference.pop() {
+            prop_assert_eq(Some(want), any_heap.pop())?;
+            prop_assert_eq(Some(want), any_cal.pop())?;
+        }
+        prop_assert(
+            any_heap.pop().is_none() && any_cal.pop().is_none(),
+            "all queues drain together",
+        )
+    });
+}

@@ -106,6 +106,7 @@ fn engine_conserves_requests_under_arbitrary_health_schedules() {
             record_completions: true,
             speed_factors: Vec::new(),
             steal: false,
+            event_queue: Default::default(),
             execution: Execution::Sequential,
             deployment: Default::default(),
         };
@@ -180,6 +181,7 @@ fn oracle_mode_conserves_requests_too() {
             record_completions: true,
             speed_factors: Vec::new(),
             steal: false,
+            event_queue: Default::default(),
             execution: Execution::Sequential,
             deployment: Default::default(),
         };

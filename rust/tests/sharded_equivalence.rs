@@ -196,6 +196,7 @@ fn sharded_matches_sequential_on_any_routed_workload() {
             record_completions: false,
             speed_factors: Vec::new(),
             steal: false,
+            event_queue: Default::default(),
             execution: Execution::Sequential,
             deployment: Default::default(),
         };
@@ -245,6 +246,7 @@ fn jsq_sharded_conserves_requests_for_any_worker_count() {
             record_completions: true,
             speed_factors: Vec::new(),
             steal: false,
+            event_queue: Default::default(),
             execution: Execution::Sharded(g.usize(1, 4)),
             deployment: Default::default(),
         };
@@ -286,6 +288,158 @@ fn jsq_sharded_conserves_requests_for_any_worker_count() {
         )?;
         Ok(())
     });
+}
+
+/// Same-seed byte-identity across the event-queue implementations: the
+/// calendar queue must reproduce the heap's `ServiceReport` *exactly* —
+/// not statistically, not bucket-for-bucket, but byte-for-byte in the
+/// report's full `Debug` rendering — because the queues promise the
+/// same pop order, and pop order is the only thing the engine consumes.
+/// Covered modes: sequential, sharded (positional round-robin),
+/// monitored health over a lossy jittered channel, and a repartition
+/// deployment with cut-over events in flight.
+mod queue_byte_identity {
+    use continuer::baselines::AlwaysRepartition;
+    use continuer::cluster::failure::{Detector, FailurePlan};
+    use continuer::config::Objectives;
+    use continuer::coordinator::batcher::BatcherConfig;
+    use continuer::coordinator::engine::{
+        serve, DeploymentConfig, EngineConfig, Execution, HealthMode, SyntheticBackend,
+    };
+    use continuer::coordinator::estimator::StaticMetrics;
+    use continuer::coordinator::router::RoutePolicy;
+    use continuer::coordinator::service::DeployMode;
+    use continuer::coordinator::Failover;
+    use continuer::health::{DetectorKind, HealthConfig, HeartbeatConfig};
+    use continuer::runtime::HostTensor;
+    use continuer::util::eventq::QueueKind;
+    use continuer::workload::{generate, Arrival};
+
+    fn base_cfg() -> EngineConfig {
+        EngineConfig {
+            batcher: BatcherConfig::new(vec![1, 4], 2.0, 4),
+            health: HealthMode::Oracle(Detector::default()),
+            deadline_ms: Some(120.0),
+            pipeline_depth: 2,
+            route: RoutePolicy::RoundRobin,
+            decision_ms_override: Some(1.5),
+            record_completions: true,
+            speed_factors: Vec::new(),
+            steal: false,
+            event_queue: QueueKind::Heap,
+            execution: Execution::Sequential,
+            deployment: Default::default(),
+        }
+    }
+
+    /// Run the same seeded two-replica crash/recovery fixture under the
+    /// given config with each queue kind and return both reports'
+    /// `Debug` renderings.
+    fn both_queues(mut cfg: EngineConfig) -> (String, String) {
+        let mut run = |kind: QueueKind| {
+            cfg.event_queue = kind;
+            let replicas = 2;
+            let mut backends: Vec<SyntheticBackend> = (0..replicas)
+                .map(|_| SyntheticBackend::uniform(4, 5.0, 1.0))
+                .collect();
+            let mut failovers: Vec<Failover> = (0..replicas)
+                .map(|_| Failover::new(Objectives::default()))
+                .collect();
+            let reqs = generate(120, Arrival::Poisson { rate_rps: 500.0 }, 8, 23);
+            let plans = vec![
+                FailurePlan::crash_recover(2, 40.0, 120.0),
+                FailurePlan::crash_recover(3, 60.0, 140.0),
+            ];
+            let inputs = HostTensor::zeros(vec![8, 4]);
+            let report = serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &cfg,
+                &reqs,
+                &inputs,
+                &plans,
+            )
+            .unwrap();
+            format!("{report:?}")
+        };
+        (run(QueueKind::Heap), run(QueueKind::Calendar))
+    }
+
+    #[test]
+    fn sequential_report_is_byte_identical() {
+        let (heap, calendar) = both_queues(base_cfg());
+        assert_eq!(heap, calendar, "sequential: queue choice changed the report");
+    }
+
+    #[test]
+    fn sharded_report_is_byte_identical() {
+        // Positional round-robin: the sharded engine is deterministic,
+        // so each shard's calendar must match each shard's heap — and
+        // with them the merged report.
+        let mut cfg = base_cfg();
+        cfg.execution = Execution::Sharded(2);
+        let (heap, calendar) = both_queues(cfg);
+        assert_eq!(heap, calendar, "sharded: queue choice changed the report");
+    }
+
+    #[test]
+    fn monitored_report_is_byte_identical() {
+        // Monitored health floods the queue with heartbeat events on a
+        // fixed interval — the calendar's worst case for same-bucket
+        // collisions — and the channel's seeded jitter/loss draws must
+        // come out in the same order under both queues.
+        let mut cfg = base_cfg();
+        cfg.health = HealthMode::Monitored(HealthConfig {
+            heartbeat: HeartbeatConfig {
+                interval_ms: 10.0,
+                jitter_ms: 1.0,
+                loss_prob: 0.1,
+                blackout: None,
+            },
+            detector: DetectorKind::FixedTimeout { timeout_ms: 35.0 },
+            failover_slowdown: f64::INFINITY,
+            quarantine_ms: 20.0,
+            slowdown_window: 8,
+            seed: 7,
+        });
+        let (heap, calendar) = both_queues(cfg);
+        assert_eq!(heap, calendar, "monitored: queue choice changed the report");
+    }
+
+    #[test]
+    fn deploy_mode_report_is_byte_identical() {
+        // Repartition deployment: the boxed Deploy events (transfer
+        // done, warm-up done, cut-over) ride the queue alongside the
+        // serving traffic and must fire in the same order.
+        let mut cfg = base_cfg();
+        cfg.deployment = DeploymentConfig {
+            mode: DeployMode::MakeBeforeBreak,
+            warmup_ms: 10.0,
+        };
+        let mut run = |kind: QueueKind| {
+            cfg.event_queue = kind;
+            let mut backends = vec![SyntheticBackend::uniform(4, 5.0, 1.0)
+                .with_deployment(vec![1_000_000; 5], 25_000.0)];
+            let mut failovers = vec![Failover::with_policy(Box::new(AlwaysRepartition))];
+            let reqs = generate(300, Arrival::Poisson { rate_rps: 150.0 }, 8, 11);
+            let inputs = HostTensor::zeros(vec![8, 4]);
+            let report = serve(
+                &mut backends,
+                &StaticMetrics,
+                &mut failovers,
+                &cfg,
+                &reqs,
+                &inputs,
+                &[FailurePlan::crash(3, 200.0)],
+            )
+            .unwrap();
+            format!("{report:?}")
+        };
+        let heap = run(QueueKind::Heap);
+        let calendar = run(QueueKind::Calendar);
+        assert_eq!(heap, calendar, "deploy: queue choice changed the report");
+    }
 }
 
 /// Weighted round-robin is positional: the sharded engine pre-splits
@@ -330,6 +484,7 @@ fn weighted_rr_sharded_matches_sequential_on_skewed_fleets() {
             record_completions: false,
             speed_factors,
             steal: false,
+            event_queue: Default::default(),
             execution: Execution::Sequential,
             deployment: Default::default(),
         };
@@ -412,6 +567,7 @@ fn skewed_degraded_fleet_with_stealing_conserves_requests() {
             record_completions: true,
             speed_factors,
             steal,
+            event_queue: Default::default(),
             execution: Execution::Sharded(g.usize(1, 4)),
             deployment: Default::default(),
         };

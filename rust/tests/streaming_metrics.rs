@@ -80,6 +80,7 @@ fn engine_run(record_completions: bool, seed: u64) -> ServiceReport {
         record_completions,
         speed_factors: Vec::new(),
         steal: false,
+        event_queue: Default::default(),
         execution: Execution::Sequential,
         deployment: Default::default(),
     };
